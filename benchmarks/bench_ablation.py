@@ -1,0 +1,46 @@
+"""Fig 14: +disagg / +overlap / +loading / +kernel ablation (Mixtral,
+25 req/s, 256 adapters) vs the S-LoRA reference."""
+from benchmarks.common import emit, run_sim
+from repro.baselines import slora as presets
+from repro.configs import get_config
+from repro.serving.simulator import SimConfig
+
+
+def main():
+    cfg = get_config("mixtral-8x7b")
+    n_ad, dur, rate = 256, 90.0, 25
+
+    slora = presets.slora_config(cfg, 4, 8, n_ad, dur)
+    slora.instance_cache_slots = 25  # paper ablation: total ~100
+    s, _ = run_sim(cfg, slora, rate, n_ad, dur)
+    emit("fig14.slora.p95_ttft_s", round(s.p95_ttft, 3))
+    emit("fig14.slora.tpot_s", round(s.mean_tpot, 4))
+    emit("fig14.slora.attain", round(s.slo_attainment, 3))
+
+    stages = {
+        "+disagg": dict(overlap=False, layerwise_loading=False,
+                        fast_kernels=False),
+        "+overlap": dict(overlap=True, layerwise_loading=False,
+                         fast_kernels=False),
+        "+loading": dict(overlap=True, layerwise_loading=True,
+                         fast_kernels=False),
+        "+kernel": dict(overlap=True, layerwise_loading=True,
+                        fast_kernels=True),
+    }
+    base = None
+    for name, flags in stages.items():
+        sim = SimConfig(n_instances=3, gpus_per_instance=8,
+                        disaggregated=True, server_gpus=8, placement_x=4,
+                        server_cache_slots=104, n_adapters=n_ad,
+                        duration=dur, **flags)
+        s, _ = run_sim(cfg, sim, rate, n_ad, dur)
+        if base is None:
+            base = s
+        emit(f"fig14.{name}.p95_ttft_s", round(s.p95_ttft, 3),
+             f"vs_disagg={base.p95_ttft/max(s.p95_ttft,1e-9):.1f}x")
+        emit(f"fig14.{name}.tpot_s", round(s.mean_tpot, 4))
+        emit(f"fig14.{name}.attain", round(s.slo_attainment, 3))
+
+
+if __name__ == "__main__":
+    main()

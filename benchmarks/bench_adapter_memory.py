@@ -1,0 +1,25 @@
+"""Fig 1a: memory of model weights, KV cache (1024 tokens), and one LoRA
+adapter (rank 64) per model; adapters-per-100GB capacity."""
+from repro.configs import REGISTRY, get_config
+from benchmarks.common import emit
+
+MODELS = ["qwen2-1.5b", "qwen2-72b", "gpt-oss-20b", "mixtral-8x7b",
+          "qwen3-30b-a3b", "qwen3-moe-235b-a22b", "dbrx-132b"]
+
+
+def main():
+    for name in MODELS:
+        cfg = get_config(name)
+        w = 2 * cfg.param_count() / 1e9
+        kv = (2 * cfg.n_kv_heads * cfg.head_dim * 2 * cfg.n_layers * 1024
+              / 1e9 if not cfg.is_ssm else 0.0)
+        lora = cfg.lora_adapter_bytes(rank=64) / 1e9
+        per100 = int(100 / lora)
+        emit(f"fig1a.{name}.model_gb", round(w, 2))
+        emit(f"fig1a.{name}.kv1024_gb", round(kv, 3))
+        emit(f"fig1a.{name}.lora_gb", round(lora, 2),
+             f"adapters_per_100GB={per100}")
+
+
+if __name__ == "__main__":
+    main()

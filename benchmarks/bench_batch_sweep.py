@@ -1,0 +1,33 @@
+"""Fig 16 (A.1.2): per-iteration LoRA Server latency breakdown vs tokens per
+iteration — communication linear, compute sub-linear (distinct adapters
+saturate under Zipf)."""
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import cost_model as cm
+from repro.core.placement import Placement
+from repro.serving.workload import zipf_popularity
+
+
+def expected_distinct(n_adapters: int, batch: int, s: float = 1.2) -> float:
+    p = zipf_popularity(n_adapters, s)
+    return float(np.sum(1 - (1 - p) ** batch))
+
+
+def main():
+    cfg = get_config("mixtral-8x7b")
+    pl = Placement.make("hybrid", 4, 512, cfg.n_layers, cfg.n_experts, x=4)
+    for batch in (64, 128, 256, 512, 1024):
+        distinct = expected_distinct(512, batch)
+        lat = cm.latency_breakdown(cfg, pl, batch, p=2,
+                                   distinct_adapters=distinct)
+        tokens = batch * cfg.top_k
+        emit(f"fig16.tokens_{tokens}.recv_us", round(lat["recv"] * 1e6, 1))
+        emit(f"fig16.tokens_{tokens}.lora_us", round(lat["comp"] * 1e6, 1),
+             f"distinct={distinct:.0f}")
+        emit(f"fig16.tokens_{tokens}.send_us", round(lat["send"] * 1e6, 1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Fig 5 + Fig 6: impact of the LoRA cache ratio on P95 TTFT, SLO attainment
+thresholds, and the effective decode batch size (coupled architecture)."""
+import numpy as np
+
+from benchmarks.common import emit, run_sim
+from repro.baselines import slora as presets
+from repro.configs import get_config
+from repro.serving.metrics import TTFT_SLO
+
+
+def main():
+    cfg = get_config("mixtral-8x7b")
+    n_adapters = 256
+    total_slots = {0.1: 6, 0.2: 12, 0.3: 19, 0.4: 25, 0.5: 32}
+    for ratio, slots in total_slots.items():
+        sim = presets.slora_config(cfg, 4, 8, n_adapters, duration=90)
+        sim.instance_cache_slots = slots
+        s, out = run_sim(cfg, sim, rate=25, n_adapters=n_adapters,
+                         duration=90)
+        bl = [b for _, b in out["batch_log"]]
+        emit(f"fig5.cache_ratio_{ratio}.p95_ttft_s", round(s.p95_ttft, 3),
+             f"slo={'meets' if s.p95_ttft <= TTFT_SLO else 'violates'}")
+        ok = np.array(list(s.per_adapter_ok.values()))
+        for thr in (0.5, 0.8, 0.9):
+            emit(f"fig5.cache_ratio_{ratio}.adapters_over_{int(thr*100)}pct",
+                 round(float((ok > thr).mean()), 3))
+        emit(f"fig6.cache_ratio_{ratio}.mean_batch",
+             round(float(np.mean(bl)) if bl else 0.0, 1),
+             f"std={float(np.std(bl)) if bl else 0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Fig 11: P95 TTFT / SLO attainment / throughput / TPOT across loads for
+InfiniLoRA vs S-LoRA (+SJF, +Less-LoRA), and the headline serviceable-rate
+ratio."""
+from benchmarks.common import emit, run_sim, slora_setup, infini_setup
+from repro.serving import metrics
+
+MODELS = ["gpt-oss-20b", "qwen3-30b-a3b", "mixtral-8x7b", "dbrx-132b"]
+RATES = [10, 20, 30, 45, 60]
+DUR = 80.0
+
+
+def serviceable(cfg, mk_sim, n_adapters):
+    best = 0.0
+    for rate in RATES:
+        s, _ = run_sim(cfg, mk_sim(), rate, n_adapters, DUR)
+        if s.meets_slos():
+            best = rate
+        else:
+            break
+    return best
+
+
+def main():
+    ratios = []
+    for model in MODELS:
+        n_ad = 512
+        systems = {
+            "slora": lambda m=model: slora_setup(m, n_ad, DUR)[1],
+            "slora_sjf": lambda m=model: slora_setup(m, n_ad, DUR,
+                                                     sjf=True)[1],
+            "slora_less": lambda m=model: slora_setup(m, n_ad, DUR,
+                                                      lora_frac=0.4)[1],
+            "infinilora": lambda m=model: infini_setup(m, n_ad, DUR)[1],
+        }
+        cfg = slora_setup(model, n_ad, DUR)[0]
+        rates_at = {}
+        for sysname, mk in systems.items():
+            mid_rate = 30
+            s, _ = run_sim(cfg, mk(), mid_rate, n_ad, DUR)
+            emit(f"fig11.{model}.{sysname}.p95_ttft_s", round(s.p95_ttft, 3),
+                 f"rate={mid_rate}")
+            emit(f"fig11.{model}.{sysname}.tpot_s", round(s.mean_tpot, 4))
+            emit(f"fig11.{model}.{sysname}.attain",
+                 round(s.slo_attainment, 3))
+            emit(f"fig11.{model}.{sysname}.throughput_rps",
+                 round(s.throughput_rps, 2))
+            rates_at[sysname] = serviceable(cfg, mk, n_ad)
+            emit(f"fig11.{model}.{sysname}.serviceable_rate",
+                 rates_at[sysname])
+        if rates_at["slora"] > 0:
+            ratios.append(rates_at["infinilora"] / rates_at["slora"])
+            emit(f"fig11.{model}.rate_gain",
+                 round(ratios[-1], 2), "paper_avg=3.05x")
+    if ratios:
+        emit("fig11.avg_rate_gain", round(sum(ratios) / len(ratios), 2),
+             "paper=3.05x")
+
+
+if __name__ == "__main__":
+    main()

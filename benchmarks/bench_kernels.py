@@ -1,0 +1,75 @@
+"""Fig 19: LoRA kernel characterization across shrink (d->r) and expand
+(r->d) phases — BGMV vs SGMV.
+
+Two views:
+  (a) modeled v5e latency + HBM utilization from the kernels' exact byte/flop
+      traffic (the quantity Fig 19 plots; wall-clock needs a TPU)
+  (b) measured CPU wall time of the jitted ref path (relative ordering
+      sanity: SGMV's aggregation must beat BGMV's per-token gather when
+      tokens-per-adapter is high)
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
+from repro.kernels import ops, ref
+from repro.serving.workload import zipf_popularity
+
+
+def modeled_us(rows, distinct, d_in, d_out, r):
+    act = rows * (d_in + d_out) * 2
+    w_bgmv = rows * (d_in + d_out) * r * 2          # per-row gather
+    w_sgmv = distinct * (d_in + d_out) * r * 2      # per-segment reuse
+    flops = 2 * rows * r * (d_in + d_out)
+    t_flops = flops / (PEAK_FLOPS * 0.7)
+    out = {}
+    for name, w in (("bgmv", w_bgmv), ("sgmv", w_sgmv)):
+        t_mem = (act + w) / (HBM_BW * 0.7)
+        out[name] = (max(t_mem, t_flops) * 1e6,
+                     min((act + w) / max(t_mem, t_flops) / HBM_BW, 1.0))
+    return out
+
+
+def main():
+    N, T, r, d = 512, 1024, 64, 4096
+    rng = np.random.default_rng(0)
+    probs = zipf_popularity(N, 1.2)
+    ids = jnp.asarray(rng.choice(N, size=T, p=probs).astype(np.int32))
+    distinct = len(set(np.asarray(ids).tolist()))
+
+    for phase, d_in, d_out in (("shrink", d, r), ("expand", r, d)):
+        m = modeled_us(T, distinct, d_in, d_out, r)
+        for kern in ("bgmv", "sgmv"):
+            us, bw = m[kern]
+            emit(f"fig19.{phase}.{kern}.modeled_us", round(us, 1),
+                 f"hbm_util={bw:.2f},distinct={distinct}")
+
+        # measured (CPU, jitted ref path — relative ordering only)
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (T, d_in), jnp.float32)
+        A = jax.random.normal(jax.random.fold_in(key, 1), (N, d_in, r)) * .02
+        B = jax.random.normal(jax.random.fold_in(key, 2), (N, r, d_out)) * .02
+        bg = jax.jit(lambda x, A, B, i: ref.bgmv_ref(x, A, B, i))
+        bg(x, A, B, ids).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            bg(x, A, B, ids).block_until_ready()
+        t_bgmv = (time.perf_counter() - t0) / 3 * 1e6
+
+        segs, seg_ad, _ = ops.build_segments(x, ids, N, cap=64)
+        sg = jax.jit(lambda s, a, A, B: ref.sgmv_ref(s, a, A, B))
+        sg(segs, seg_ad, A, B).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            sg(segs, seg_ad, A, B).block_until_ready()
+        t_sgmv = (time.perf_counter() - t0) / 3 * 1e6
+        emit(f"fig19.{phase}.bgmv.cpu_us", round(t_bgmv, 0))
+        emit(f"fig19.{phase}.sgmv.cpu_us", round(t_sgmv, 0))
+
+
+if __name__ == "__main__":
+    main()

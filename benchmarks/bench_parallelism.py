@@ -1,0 +1,38 @@
+"""Table 1 metrics + Table 4 latency breakdown (recv/LoRA/send vs base MoE)
+for the four parallelization strategies on an 8-chip LoRA server."""
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import cost_model as cm
+from repro.core.placement import Placement
+
+
+def main():
+    cfg = get_config("mixtral-8x7b")
+    b, k, p, m = 128, cfg.top_k, 2, 8
+    for strat, x in (("dp", 1), ("pp", 1), ("ep", 1),
+                     ("hybrid", 2), ("hybrid", 4)):
+        met = cm.strategy_metrics(strat, b, k, p, m, x=x, y=m // x)
+        name = {"dp": "DP", "pp": "EP1-PP8", "ep": "EP8-PP1"}.get(
+            strat, f"EP{x}-PP{m//x}")
+        emit(f"table1.{name}.peer_volume", round(met["peer_volume"], 2))
+        emit(f"table1.{name}.peer_count", met["peer_count"])
+        emit(f"table1.{name}.compute_volume", round(met["compute_volume"], 1))
+        emit(f"table1.{name}.sync_scope", met["sync_scope"])
+
+    for bs in (128, 256):
+        moe_us = cm.base_moe_gemm_seconds(cfg, bs, p) * 1e6
+        for x, y in ((1, 8), (2, 4), (4, 2), (8, 1)):
+            pl = Placement.make("hybrid", m, 256, cfg.n_layers,
+                                cfg.n_experts, x=x)
+            lat = cm.latency_breakdown(cfg, pl, bs, p, distinct_adapters=40)
+            emit(f"table4.b{bs}.EP{x}-PP{y}.recv_us",
+                 round(lat["recv"] * 1e6, 1))
+            emit(f"table4.b{bs}.EP{x}-PP{y}.lora_us",
+                 round(lat["comp"] * 1e6, 1))
+            emit(f"table4.b{bs}.EP{x}-PP{y}.send_us",
+                 round(lat["send"] * 1e6, 1),
+                 f"moe_us={moe_us:.0f}")
+
+
+if __name__ == "__main__":
+    main()

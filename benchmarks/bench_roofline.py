@@ -1,0 +1,35 @@
+"""Roofline table: per (arch x shape x mesh) terms from the committed
+dry-run artifacts (harness §Roofline deliverable)."""
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def main():
+    if not OUT.exists():
+        emit("roofline.missing", 0, "run repro.launch.dryrun first")
+        return
+    for p in sorted(OUT.glob("*.json")):
+        rec = json.loads(p.read_text())
+        cell = p.stem
+        if rec["status"] == "SKIP":
+            emit(f"roofline.{cell}", "SKIP", rec["reason"][:60])
+            continue
+        if rec["status"] != "OK":
+            emit(f"roofline.{cell}", "FAIL", rec.get("error", "")[:60])
+            continue
+        if "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        emit(f"roofline.{cell}.t_compute_ms", round(r["t_compute"] * 1e3, 3))
+        emit(f"roofline.{cell}.t_memory_ms", round(r["t_memory"] * 1e3, 3))
+        emit(f"roofline.{cell}.t_collective_ms",
+             round(r["t_collective"] * 1e3, 3),
+             f"bottleneck={r['bottleneck']},frac={r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

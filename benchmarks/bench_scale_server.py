@@ -1,0 +1,27 @@
+"""Fig 13: scale the LoRA Server (4/6/8 chips) under five parallelism
+configurations; cache capacity drives TTFT/attainment, EP-heavy hybrids give
+the best TPOT at 8 chips (paper insight 2)."""
+from benchmarks.common import emit, run_sim
+from repro.configs import get_config
+from repro.serving.simulator import SimConfig
+
+
+def main():
+    cfg = get_config("qwen3-30b-a3b")
+    a_bytes = cfg.lora_adapter_bytes()
+    for m, x in ((4, 4), (6, 6), (8, 2), (8, 4), (8, 8)):
+        slots = int(m * 16 * 2**30 * 0.8 // a_bytes)
+        sim = SimConfig(n_instances=4, gpus_per_instance=8,
+                        disaggregated=True, server_gpus=m, placement_x=x,
+                        server_cache_slots=slots, n_adapters=512,
+                        duration=80)
+        s, out = run_sim(cfg, sim, rate=35, n_adapters=512, duration=80)
+        tag = f"m{m}.EP{x}-PP{m//x}"
+        emit(f"fig13.{tag}.p95_ttft_s", round(s.p95_ttft, 3),
+             f"cache={slots}")
+        emit(f"fig13.{tag}.tpot_s", round(s.mean_tpot, 4))
+        emit(f"fig13.{tag}.attain", round(s.slo_attainment, 3))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing: CSV emit + standard cluster setups."""
+from __future__ import annotations
+
+import copy
+import sys
+import time
+from typing import Iterable
+
+from repro.configs import get_config
+from repro.serving import metrics, simulator as S, workload
+
+
+def emit(name: str, value, derived: str = ""):
+    print(f"{name},{value},{derived}")
+
+
+def run_sim(cfg, sim_cfg, rate: float, n_adapters: int, duration: float,
+            seed: int = 0):
+    reqs = workload.generate(n_adapters, rate=rate, duration=duration,
+                             seed=seed)
+    out = S.simulate(cfg, [copy.copy(r) for r in reqs], sim_cfg)
+    return metrics.summarize(out["requests"], duration), out
+
+
+# Paper Table 3 analogue on v5e: chips per instance chosen for HBM-bandwidth
+# parity with the paper's Hopper instances (DESIGN.md §8).
+INSTANCE_CHIPS = {
+    "gpt-oss-20b": 4,
+    "qwen3-30b-a3b": 8,
+    "mixtral-8x7b": 8,
+    "scaled-moe": 12,
+    "dbrx-132b": 24,
+}
+
+
+def slora_setup(model: str, n_adapters: int = 512, duration: float = 90.0,
+                sjf: bool = False, lora_frac: float = 0.5):
+    from repro.baselines import slora as presets
+    cfg = get_config(model)
+    p = INSTANCE_CHIPS[model]
+    return cfg, presets.slora_config(cfg, 4, p, n_adapters, duration,
+                                     lora_frac=lora_frac, sjf=sjf)
+
+
+def infini_setup(model: str, n_adapters: int = 512, duration: float = 90.0,
+                 server_gpus: int = None, x: int = None):
+    from repro.baselines import slora as presets
+    cfg = get_config(model)
+    p = INSTANCE_CHIPS[model]
+    return cfg, presets.infinilora_config(
+        cfg, 3, p, server_gpus or p, n_adapters, duration, placement_x=x)

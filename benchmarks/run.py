@@ -1,0 +1,38 @@
+# One module per paper table/figure. Prints ``name,value,derived`` CSV.
+import sys
+import time
+
+from benchmarks import (bench_ablation, bench_adapter_memory,
+                        bench_batch_sweep, bench_cache_ratio,
+                        bench_e2e_serving, bench_kernels, bench_parallelism,
+                        bench_provisioning, bench_roofline,
+                        bench_scale_instances, bench_scale_server)
+
+ALL = [
+    ("fig1a_adapter_memory", bench_adapter_memory.main),
+    ("table1_table4_parallelism", bench_parallelism.main),
+    ("alg1_provisioning", bench_provisioning.main),
+    ("fig16_batch_sweep", bench_batch_sweep.main),
+    ("fig19_kernels", bench_kernels.main),
+    ("fig5_fig6_cache_ratio", bench_cache_ratio.main),
+    ("fig14_ablation", bench_ablation.main),
+    ("fig12_scale_instances", bench_scale_instances.main),
+    ("fig13_scale_server", bench_scale_server.main),
+    ("fig11_e2e_serving", bench_e2e_serving.main),
+    ("roofline_table", bench_roofline.main),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, fn in ALL:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        fn()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,50 @@
+"""Capacity planner: walk a workload through §4.2 — Zipf popularity in,
+minimum cache size + server chip count out; then watch the elastic
+re-provisioner react to a popularity shift (appendix A.1.1).
+
+    PYTHONPATH=src python examples/provision_capacity.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import provisioning as P
+from repro.training.fault_tolerance import reprovision_on_workload_shift
+
+
+def main():
+    cfg = get_config("qwen3-30b-a3b")
+    print(f"model: {cfg.name}; one adapter = "
+          f"{cfg.lora_adapter_bytes()/2**30:.2f} GiB")
+
+    print("\ncache size vs workload skew (512 adapters, LB=1024):")
+    for s in (0.8, 1.2, 1.5):
+        probs = P.zipf_probs(512, s)
+        m = P.min_cache_size(probs, 1024, alpha=0.95)
+        print(f"  zipf s={s}: M* = {m:4d} adapters "
+              f"(IAR={P.iar(probs, 1024, m):.3f})")
+
+    print("\nfull provisioning (paper §6 setup, v5e chips):")
+    for n_inst in (2, 4, 6):
+        rep = P.provision(cfg, 512, n_instances=n_inst, b=128, p=8)
+        print(f"  {n_inst} instances: M*={rep.M_star:4d} "
+              f"cache_gpus={rep.gpus_for_cache} tpot_gpus={rep.gpus_for_tpot}"
+              f" -> {rep.gpus} chips ({rep.placement.describe()})")
+
+    print("\nelastic re-provisioning on a workload shift (A.1.1):")
+    current = P.provision(cfg, 512, 4, 128, 8).gpus
+
+    def provision_fn(observed):
+        return P.provision(cfg, len(observed), 4, 128, 8, probs=observed)
+
+    flat = P.zipf_probs(1024, 1.2)  # pool doubles -> needs more cache
+    new, rep = reprovision_on_workload_shift(provision_fn, flat, current)
+    print(f"  pool 512->1024 adapters: {current} -> {new} chips "
+          f"(M*={rep.M_star})")
+    hot = P.zipf_probs(256, 1.5)    # high locality -> shrink
+    new2, rep2 = reprovision_on_workload_shift(provision_fn, hot, current)
+    print(f"  hot pool of 256:        {current} -> {new2} chips "
+          f"(M*={rep2.M_star})")
+
+
+if __name__ == "__main__":
+    main()

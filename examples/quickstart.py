@@ -1,0 +1,50 @@
+"""Quickstart: multi-LoRA serving of a tiny MoE model on CPU in ~a minute.
+
+Builds a reduced DBRX-family MoE, a pool of LoRA adapters, and decodes a
+batch where every request uses a different adapter — the coupled (S-LoRA
+style) path with the BGMV/SGMV kernel contracts underneath.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.adapter import init_adapter_pool
+from repro.models import model as model_mod
+from repro.serving.engine import Engine, EngineConfig
+
+
+def main():
+    cfg = dataclasses.replace(get_config("dbrx-132b").reduced(),
+                              lora_targets=("gate", "up", "down"),
+                              lora_rank=4)
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params, "
+          f"{cfg.n_experts} experts top-{cfg.top_k})")
+    key = jax.random.PRNGKey(0)
+    params = model_mod.init_params(cfg, key)
+    pool = init_adapter_pool(cfg, n_adapters=4, key=jax.random.fold_in(key, 1),
+                             rank=4)
+    print(f"adapter pool: 4 adapters x {pool.bytes_per_adapter()/1e6:.2f} MB")
+
+    engine = Engine(cfg, params, EngineConfig(max_len=48), pool=pool)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 8)))
+    adapter_ids = jnp.arange(4)
+
+    cache = engine.prefill(prompts)
+    base = engine.decode(cache, prompts[:, -1:], steps=8)
+    cache = engine.prefill(prompts)
+    tuned = engine.decode(cache, prompts[:, -1:], steps=8,
+                          adapter_ids=adapter_ids)
+    print("base   :", np.asarray(base).tolist())
+    print("adapted:", np.asarray(tuned).tolist())
+    diff = int((np.asarray(base) != np.asarray(tuned)).sum())
+    print(f"{diff} / {base.size} tokens differ under per-request adapters")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Analytic per-device memory accounting (TPU expectation).
+
+The dry-run's measured ``memory_analysis()`` comes from a host-CPU compile,
+which hoists bf16->f32 conversions of loop-invariant weights and loop-carried
+KV caches out of while loops (CPU has no native bf16 ALU) — inflating temp by
+roughly the bf16 state size. A TPU compile keeps those buffers bf16 in the
+MXU path. This module computes the exact at-rest bytes per device from the
+sharding specs (``NamedSharding.shard_shape``) plus a workspace estimate, and
+is reported alongside the measured number (EXPERIMENTS.md §Dry-run caveat).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import cache as cache_mod
+from repro.models import model as model_mod
+
+
+def _tree_device_bytes(abstract_tree, sharding_tree) -> int:
+    total = 0
+    leaves = zip(jax.tree_util.tree_leaves(abstract_tree),
+                 jax.tree_util.tree_leaves(
+                     sharding_tree, is_leaf=lambda x: hasattr(x, "shard_shape")))
+    for leaf, sh in leaves:
+        shp = sh.shard_shape(leaf.shape)
+        total += int(np.prod(shp)) * leaf.dtype.itemsize
+    return total
+
+
+def analytic_device_bytes(cfg: ModelConfig, shape: ShapeConfig, rules,
+                          kind: str, kv_quant: bool = False) -> Dict[str, int]:
+    params_abs = model_mod.abstract_params(cfg)
+    p_sh = model_mod.param_shardings(cfg, rules)
+    out = {"params": _tree_device_bytes(params_abs, p_sh)}
+
+    mesh_shape = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh_shape and shape.global_batch % (dp * mesh_shape[a]) == 0:
+            dp *= mesh_shape[a]
+    tp = mesh_shape.get("model", 1)
+    B_loc = max(shape.global_batch // dp, 1)
+    d = cfg.d_model
+
+    if kind == "decode":
+        cache_abs = jax.eval_shape(
+            lambda: cache_mod.init_cache(cfg, shape.global_batch,
+                                         shape.seq_len, kv_quant))
+        ax = cache_mod.cache_logical_axes(cfg)
+        c_sh = {k: rules.sharding(ax[k], v.shape)
+                for k, v in cache_abs.items()}
+        out["cache"] = _tree_device_bytes(cache_abs, c_sh)
+        out["workspace"] = int(B_loc * d * 4 * 8 +
+                               B_loc * cfg.vocab_size // max(tp, 1) * 4)
+        out["opt_state"] = 0
+    else:
+        S_loc = shape.seq_len
+        if not cfg.is_ssm and shape.seq_len % tp == 0:
+            S_loc = shape.seq_len // tp
+        elif cfg.is_ssm and shape.global_batch % (dp * tp) == 0:
+            B_loc = max(shape.global_batch // (dp * tp), 1)
+        act_carry = cfg.n_layers * B_loc * S_loc * d * 2  # bf16 saved inputs
+        # chunk workspace: f32 score tile (attention) or chunk tensors (ssm)
+        q_chunk = min(512, S_loc)
+        H_loc = cfg.n_heads if cfg.n_heads % tp else cfg.n_heads // tp
+        score_tile = 4 * B_loc * H_loc * q_chunk * shape.seq_len
+        logits = 8 * B_loc * S_loc * (cfg.vocab_size // max(tp, 1))
+        out["cache"] = 0
+        out["workspace"] = int(act_carry * (2 if kind == "train" else 1)
+                               + score_tile + logits)
+        out["opt_state"] = (2 * 4 * out["params"] // 2  # m+v f32 vs bf16 p
+                            if kind == "train" else 0)
+    out["total"] = sum(out.values())
+    out["fits_16g"] = bool(out["total"] < 16 * 2**30)
+    return out

@@ -1,0 +1,36 @@
+"""Re-run the roofline analysis over stored HLO artifacts (no recompile).
+
+  PYTHONPATH=src python -m repro.analysis.reanalyze
+"""
+import gzip
+import json
+import pathlib
+
+from repro.analysis import roofline as RL
+from repro.configs import get_config, get_shape
+
+OUT = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def main():
+    for p in sorted(OUT.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") != "OK" or "roofline" not in rec:
+            continue
+        hlo_path = OUT / "hlo" / (p.stem + ".hlo.gz")
+        if not hlo_path.exists():
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            hlo = f.read()
+        r = rec["roofline"]
+        cfg = get_config(r["arch"])
+        shape = get_shape(r["shape"])
+        rl = RL.analyze(r["arch"], r["shape"], r["mesh"], r["chips"], {},
+                        hlo, rec["memory"]["peak_per_device"], cfg, shape)
+        rec["roofline"] = rl.to_dict()
+        p.write_text(json.dumps(rec, indent=1))
+        print(p.stem, rl.bottleneck, f"frac={rl.roofline_fraction:.3f}")
+
+
+if __name__ == "__main__":
+    main()

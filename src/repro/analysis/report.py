@@ -1,0 +1,66 @@
+"""Assemble the EXPERIMENTS.md dry-run + roofline tables from
+experiments/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.analysis.report [--mesh single|multi]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.configs import ASSIGNED, SHAPES
+
+OUT = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def fmt_ms(s):
+    return f"{s*1e3:8.2f}"
+
+
+def table(mesh: str, variant: str = "base") -> str:
+    rows = []
+    hdr = ("| arch | shape | t_comp ms | t_mem ms | t_coll ms | bottleneck |"
+           " frac | peak GiB (host / analytic) | fits |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for arch in sorted(ASSIGNED):
+        for shape in SHAPES:
+            suffix = "" if variant == "base" else f"__{variant}"
+            p = OUT / f"{arch}__{shape}__{mesh}{suffix}.json"
+            if not p.exists():
+                rows.append(f"| {arch} | {shape} | - | - | - | MISSING | | | |")
+                continue
+            rec = json.loads(p.read_text())
+            if rec["status"] == "SKIP":
+                rows.append(f"| {arch} | {shape} | — | — | — | SKIP | — | — "
+                            f"| — |")
+                continue
+            if rec["status"] != "OK":
+                rows.append(f"| {arch} | {shape} | - | - | - | FAIL | | | |")
+                continue
+            r = rec["roofline"]
+            m = rec["memory"]
+            an = m.get("analytic", {})
+            peak = f"{m['peak_per_device']/2**30:.1f} / " + (
+                f"{an.get('total', 0)/2**30:.1f}" if an else "-")
+            fits = "Y" if an.get("fits_16g", m["fits_16g"]) else "N"
+            rows.append(
+                f"| {arch} | {shape} | {fmt_ms(r['t_compute'])} | "
+                f"{fmt_ms(r['t_memory'])} | {fmt_ms(r['t_collective'])} | "
+                f"{r['bottleneck']} | {r['roofline_fraction']:.3f} | "
+                f"{peak} | {fits} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", default="base")
+    args = ap.parse_args()
+    print(table(args.mesh, args.variant))
+
+
+if __name__ == "__main__":
+    main()

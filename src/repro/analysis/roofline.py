@@ -1,0 +1,167 @@
+"""Three-term roofline from compiled dry-run artifacts (TPU v5e targets).
+
+  compute    = HLO_FLOPs_per_device / peak_flops            [s]
+  memory     = HLO_bytes_per_device / hbm_bw                [s]
+  collective = collective_bytes_per_device / link_bw        [s]
+
+cost_analysis() on an SPMD-partitioned module reports per-partition (i.e.
+per-device) flops/bytes — verified in tests/test_roofline.py. Collective
+bytes are not in cost_analysis: we parse the partitioned HLO and sum operand
+bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (per device through its links; one-link bandwidth is
+the conservative denominator).
+
+MODEL_FLOPS (useful work): 6·N·D train, 2·N·D prefill, 2·N·B decode
+(N = active params for MoE); the ratio MODEL_FLOPS / (HLO_FLOPs × chips)
+surfaces remat/dispatch/padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of result-shape bytes per collective kind in a partitioned HLO."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "name = TYPE[dims] all-gather(...)" — result shape precedes op name
+        m = re.match(r"^[%\w.\-]+\s*=\s*(\([^)]*\)|[^=]*?)\s*([a-z\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.rstrip("-start") in _COLLECTIVES or op in [
+                c + "-start" for c in _COLLECTIVES]:
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                out[base] += _shape_bytes(m.group(1))
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    peak_mem_per_device: float
+    model_flops: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Lower-bound step time: overlapped terms -> max()."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs utilization if the step ran at its roofline bound
+        (MFU-at-bound): model_flops / (chips * peak * step_time)."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+            "peak_mem_per_device": self.peak_mem_per_device,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time": self.step_time,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(arch: str, shape_name: str, mesh_name: str, chips: int,
+            cost: Dict, hlo_text: str, peak_mem: float,
+            cfg: ModelConfig, shape: ShapeConfig) -> Roofline:
+    """Terms come from the loop-aware HLO parser (analysis.hlo_parse) —
+    cost_analysis() counts while bodies once and badly under-reports for
+    scan-over-layers models (verified in tests)."""
+    from repro.analysis.hlo_parse import analyze_hlo
+    parsed = analyze_hlo(hlo_text)
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=float(parsed["flops"]),
+        bytes_per_device=float(parsed["hbm_bytes"]),
+        coll_bytes_per_device=float(parsed["coll_total"]),
+        coll_breakdown={k: int(v) for k, v in parsed["coll_bytes"].items()},
+        peak_mem_per_device=peak_mem,
+        model_flops=model_flops(cfg, shape),
+    )

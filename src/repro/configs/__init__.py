@@ -1,0 +1,54 @@
+"""Config registry: ``get_config(arch_id)`` / ``list_archs()``.
+
+The 10 assigned architectures are selectable via ``--arch <id>`` in the
+launchers; the paper's own models are additionally available for the serving
+benchmarks.
+"""
+from repro.configs.base import ModelConfig, ShapeConfig, applicable
+from repro.configs.shapes import SHAPES, get_shape
+
+from repro.configs.qwen2_1_5b import CONFIG as _qwen2_1_5b
+from repro.configs.starcoder2_15b import CONFIG as _starcoder2_15b
+from repro.configs.qwen2_72b import CONFIG as _qwen2_72b
+from repro.configs.smollm_360m import CONFIG as _smollm_360m
+from repro.configs.zamba2_2_7b import CONFIG as _zamba2_2_7b
+from repro.configs.internvl2_1b import CONFIG as _internvl2_1b
+from repro.configs.rwkv6_3b import CONFIG as _rwkv6_3b
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as _qwen3_moe
+from repro.configs.dbrx_132b import CONFIG as _dbrx
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs import paper_models
+
+# The assigned pool (dry-run + roofline table iterate over these).
+ASSIGNED = {
+    c.name: c
+    for c in (
+        _qwen2_1_5b, _starcoder2_15b, _qwen2_72b, _smollm_360m, _zamba2_2_7b,
+        _internvl2_1b, _rwkv6_3b, _qwen3_moe, _dbrx, _seamless,
+    )
+}
+
+# Paper's own eval models (serving benchmarks).
+PAPER = {
+    c.name: c
+    for c in (paper_models.MIXTRAL_8X7B, paper_models.GPT_OSS_20B,
+              paper_models.QWEN3_30B_A3B, paper_models.SCALED_MOE)
+}
+
+REGISTRY = {**ASSIGNED, **PAPER}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def list_archs(assigned_only: bool = True):
+    return sorted(ASSIGNED if assigned_only else REGISTRY)
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "applicable", "SHAPES", "get_shape",
+    "get_config", "list_archs", "ASSIGNED", "PAPER", "REGISTRY",
+]

@@ -1,0 +1,233 @@
+"""Model/shape configuration dataclasses.
+
+Every assigned architecture (plus the paper's own models) is expressed as a
+``ModelConfig``. Configs are pure data: the model builder in
+``repro.models.model`` interprets them. ``reduced()`` derives a tiny
+same-family config for CPU smoke tests; the full config is only ever
+lowered/compiled in the dry-run (ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+BYTES = {"bfloat16": 2, "float32": 4, "int8": 1, "float16": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    gated_mlp: bool = True  # SwiGLU (3 mats) vs classic 2-mat GELU MLP
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (mamba2 / rwkv6) ---
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    rwkv: bool = False  # RWKV-6 token/channel mix instead of mamba2
+    # --- hybrid (zamba2): shared attention block applied every k ssm layers
+    shared_attn_every: int = 0
+    # --- encoder-decoder (seamless) ---
+    n_enc_layers: int = 0
+    cross_kv_len: int = 4096
+    # --- modality frontend stub ---
+    frontend: str = ""  # "vit" | "audio" | ""
+    frontend_tokens: int = 0  # frontend positions occupying the head of the sequence
+    # --- attention variants ---
+    sliding_window: int = 0  # 0 = full attention; >0 = window (used for long ctx)
+    # --- LoRA defaults (paper: rank 64; rank 32 for fine-grained-expert MoE) ---
+    lora_rank: int = 64
+    lora_targets: Tuple[str, ...] = ("q", "k", "v", "o", "gate", "up", "down")
+    # --- numerics ---
+    dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------ #
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        assert self.n_heads % max(self.n_kv_heads, 1) == 0 or self.rwkv, self.name
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to 256 so the vocab dim always shards on the
+        model axis (odd vocabs otherwise replicate (B,S,V) logits)."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        """True when no layer does full softmax attention over the context."""
+        return self.family == "ssm" and self.rwkv or (
+            self.family == "ssm" and self.shared_attn_every == 0
+        )
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: SSM/hybrid/linear-attention families."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    # ---------------------------- accounting --------------------------- #
+    def param_count(self) -> int:
+        """Total parameter count (matches the model builder's tree)."""
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        hd, H, KV = self.head_dim, self.n_heads, self.n_kv_heads
+        attn = d * H * hd + 2 * d * KV * hd + H * hd * d
+        if self.qkv_bias:
+            attn += (H + 2 * KV) * hd
+        mlp_dense = (3 if self.gated_mlp else 2) * d * ff  # SwiGLU vs GELU MLP
+        emb = V * d
+        head = 0 if self.tie_embeddings else V * d
+        norms = 2 * d
+
+        def dense_layer():
+            return attn + mlp_dense + norms
+
+        def moe_layer():
+            router = d * self.n_experts
+            experts = self.n_experts * 3 * d * ff
+            return attn + router + experts + norms
+
+        def mamba_layer():
+            di, N = self.d_inner, self.ssm_state
+            nh = di // self.ssm_head_dim
+            in_proj = d * (2 * di + 2 * N + nh)  # x, z, B, C, dt
+            conv = self.ssm_conv * (di + 2 * N)
+            out_proj = di * d
+            return in_proj + conv + out_proj + nh * 2 + d  # A,D per head + norm
+
+        def rwkv_layer():
+            # time-mix: r,k,v,g,o projections + data-dependent decay lora (w1/w2)
+            tm = 5 * d * d + 2 * d * 64 + 64 * d
+            cm = 2 * d * ff + d * d  # channel mix: k, v, r
+            return tm + cm + norms
+
+        total = emb + head + d  # final norm
+        if self.family in ("dense", "vlm"):
+            total += self.n_layers * dense_layer()
+        elif self.family == "moe":
+            total += self.n_layers * moe_layer()
+        elif self.family == "ssm" and self.rwkv:
+            total += self.n_layers * rwkv_layer()
+        elif self.family == "hybrid":
+            total += self.n_layers * mamba_layer()
+            n_shared = self.n_layers // max(self.shared_attn_every, 1)
+            total += dense_layer()  # one shared block's weights
+            del n_shared
+        elif self.family == "audio":
+            total += (self.n_layers + self.n_enc_layers) * dense_layer()
+            total += self.n_layers * (attn + norms)  # cross-attention per dec layer
+        else:
+            raise ValueError(self.family)
+        return total
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k of n_experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        dense_experts = self.n_experts * 3 * d * ff
+        active_experts = self.top_k * 3 * d * ff
+        return self.param_count() - self.n_layers * (dense_experts - active_experts)
+
+    def lora_adapter_bytes(self, rank: Optional[int] = None,
+                           dtype: str = "bfloat16") -> int:
+        """GPU/TPU memory of ONE adapter (paper Fig 1a). Expert-specific
+        adapters on MoE FFNs dominate for MoE models."""
+        r = rank or self.lora_rank
+        d, ff = self.d_model, self.d_ff
+        hd, H, KV = self.head_dim, self.n_heads, self.n_kv_heads
+        per_layer = 0
+        tgt = self.lora_targets
+        if "q" in tgt:
+            per_layer += d * r + r * H * hd
+        if "k" in tgt:
+            per_layer += d * r + r * KV * hd
+        if "v" in tgt:
+            per_layer += d * r + r * KV * hd
+        if "o" in tgt:
+            per_layer += H * hd * r + r * d
+        e = max(self.n_experts, 1)
+        if "gate" in tgt:
+            per_layer += e * (d * r + r * ff)
+        if "up" in tgt:
+            per_layer += e * (d * r + r * ff)
+        if "down" in tgt:
+            per_layer += e * (ff * r + r * d)
+        n_layers = self.n_layers + self.n_enc_layers
+        return per_layer * n_layers * BYTES[dtype]
+
+    # ---------------------------- reduction ---------------------------- #
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        changes = dict(
+            name=self.name + "-reduced",
+            n_layers=min(self.n_layers, 2),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+        )
+        if self.is_moe:
+            changes.update(n_experts=4, top_k=2)
+        if self.is_ssm:
+            changes.update(ssm_state=16, ssm_head_dim=32)
+        if self.shared_attn_every:
+            changes.update(shared_attn_every=1, n_layers=2)
+        if self.is_encdec:
+            changes.update(n_enc_layers=2, cross_kv_len=32)
+        if self.frontend:
+            changes.update(frontend_tokens=8)
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+def applicable(arch: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether (arch, shape) is a runnable dry-run cell; else reason to SKIP."""
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, ("full-attention arch: 500k dense-KV decode is the "
+                       "quadratic case long_500k excludes (DESIGN.md §5)")
+    return True, ""

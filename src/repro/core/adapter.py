@@ -1,0 +1,124 @@
+"""LoRA adapter pools.
+
+The paper abstracts the adapter space as an (n_adapters x layers x experts)
+tensor (Fig. 8); here each *target* (q/k/v/o and the expert FFN's
+gate/up/down) has a pool of stacked A/B factors:
+
+  attention target t : A (L, N, d_in, r)   B (L, N, r, d_out)
+  expert FFN target  : A (L, N, E, d, r)   B (L, N, E, r, ff)
+
+Pools feed (a) the coupled in-model path (transformer.forward lora_ctx),
+(b) the disaggregated LoRA Server (core.lora_server), and (c) memory
+accounting for provisioning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+ATTN_TARGETS = ("q", "k", "v", "o")
+FFN_TARGETS = ("gate", "up", "down")
+
+
+def target_dims(cfg: ModelConfig, target: str) -> Tuple[int, int, bool]:
+    """(d_in, d_out, expert_specific) for one LoRA target."""
+    d, ff = cfg.d_model, cfg.d_ff
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    moe = cfg.is_moe
+    table = {
+        "q": (d, H * hd, False),
+        "k": (d, KV * hd, False),
+        "v": (d, KV * hd, False),
+        "o": (H * hd, d, False),
+        "gate": (d, ff, moe),
+        "up": (d, ff, moe),
+        "down": (ff, d, moe),
+        # ssm / rwkv projection targets (disagg server treats them like any
+        # (d_in, d_out) pair; coupled in-model application is attention-only)
+        "ssm_in": (d, 2 * cfg.d_inner + 2 * cfg.ssm_state +
+                   (cfg.d_inner // max(cfg.ssm_head_dim, 1) or 1), False),
+        "ssm_out": (cfg.d_inner, d, False),
+        "r": (d, d, False),
+        "ck": (d, ff, False),
+        "cv": (ff, d, False),
+    }
+    return table[target]
+
+
+def active_targets(cfg: ModelConfig) -> Tuple[str, ...]:
+    out = []
+    for t in cfg.lora_targets:
+        try:
+            target_dims(cfg, t)
+        except KeyError:
+            continue
+        out.append(t)
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class AdapterPool:
+    """Stacked LoRA factors for ``n`` adapters of one model config."""
+    cfg: ModelConfig
+    n: int
+    rank: int
+    scale: float
+    tensors: Dict[str, Dict[str, jax.Array]]  # target -> {"A","B"}
+
+    def lora_ctx(self, ids: jax.Array) -> Dict:
+        """Build the transformer's coupled-path lora_ctx for request ids."""
+        return {"adapters": self.tensors, "ids": ids, "scale": self.scale}
+
+    def bytes_per_adapter(self) -> int:
+        total = 0
+        for t in self.tensors.values():
+            for a in t.values():
+                total += a.size * a.dtype.itemsize
+        return total // self.n
+
+
+def init_adapter_pool(cfg: ModelConfig, n_adapters: int, key,
+                      rank: Optional[int] = None, dtype=jnp.bfloat16,
+                      alpha: float = 16.0) -> AdapterPool:
+    r = rank or cfg.lora_rank
+    L, E = cfg.n_layers, max(cfg.n_experts, 1)
+    tensors = {}
+    for i, tgt in enumerate(active_targets(cfg)):
+        d_in, d_out, per_expert = target_dims(cfg, tgt)
+        ka, kb = jax.random.split(jax.random.fold_in(key, i))
+        if per_expert:
+            a_shape = (L, n_adapters, E, d_in, r)
+            b_shape = (L, n_adapters, E, r, d_out)
+        else:
+            a_shape = (L, n_adapters, d_in, r)
+            b_shape = (L, n_adapters, r, d_out)
+        # A ~ N(0, 1/r), B = 0 is the training init; for serving tests we
+        # give B a small value so deltas are visible.
+        A = (jax.random.normal(ka, a_shape, jnp.float32) / r).astype(dtype)
+        B = (jax.random.normal(kb, b_shape, jnp.float32) * 0.01).astype(dtype)
+        tensors[tgt] = {"A": A, "B": B}
+    return AdapterPool(cfg, n_adapters, r, alpha / r, tensors)
+
+
+def abstract_adapter_pool(cfg: ModelConfig, n_adapters: int,
+                          rank: Optional[int] = None, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pool for dry-run lowering."""
+    r = rank or cfg.lora_rank
+    L, E = cfg.n_layers, max(cfg.n_experts, 1)
+    tensors = {}
+    for tgt in active_targets(cfg):
+        d_in, d_out, per_expert = target_dims(cfg, tgt)
+        if per_expert:
+            a_shape = (L, n_adapters, E, d_in, r)
+            b_shape = (L, n_adapters, E, r, d_out)
+        else:
+            a_shape = (L, n_adapters, d_in, r)
+            b_shape = (L, n_adapters, r, d_out)
+        tensors[tgt] = {"A": jax.ShapeDtypeStruct(a_shape, dtype),
+                        "B": jax.ShapeDtypeStruct(b_shape, dtype)}
+    return AdapterPool(cfg, n_adapters, r, 16.0 / r, tensors)

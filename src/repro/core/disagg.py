@@ -1,0 +1,119 @@
+"""Client-side disaggregated LoRA execution (paper §3 / Fig. 7).
+
+The LLM instance stays LoRA-free; at each MoE layer's two hook points the
+activated (token, expert) rows are shipped to the LoRA Server and the deltas
+are added to the locally computed base GEMM outputs:
+
+    g, u  = x W_g, x W_u                       (client, overlapped with ...)
+    dg,du = server.compute("up",   l, x-rows)  (... this transfer+compute)
+    h     = silu(g + dg) * (u + du)
+    y     = h W_d + server.compute("down", l, h-rows)
+
+This module is the *functional* data path (used by the CPU demo and the
+equivalence tests: disaggregated == coupled bit-for-bit). Wall-clock behavior
+under load (overlap, queueing, SLOs) is the simulator's job — the paper's own
+evaluation quantity. The per-layer Python loop here is the honest structure
+of the per-layer round trip; on real hardware each call is an async DMA +
+remote dispatch that overlaps the client's next GEMM.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import cache as cache_mod
+from repro.models import layers as ll
+from repro.models import moe as moe_mod
+from repro.core.lora_server import LoRAServer
+
+F32 = jnp.float32
+
+
+def _layer_params(params, l):
+    return jax.tree_util.tree_map(lambda a: a[l], params["layers"])
+
+
+def _client_attn(x, lp, cfg, pos, k_c, v_c, positions):
+    B = x.shape[0]
+    h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = ll.qkv_project(h, lp["attn"], cfg)
+    q = ll.apply_rope(q, positions, cfg.rope_theta)
+    k = ll.apply_rope(k, positions, cfg.rope_theta)
+    att, k_c, v_c, _, _, _ = ll.decode_attention_update(
+        q[:, 0], k[:, 0], v[:, 0], k_c, v_c, pos, window=cfg.sliding_window)
+    x = x + ll.out_project(att[:, None], lp["attn"])
+    return x, k_c, v_c
+
+
+def disagg_decode_step(params, cfg: ModelConfig, cache: Dict, tokens,
+                       server: LoRAServer, adapter_ids, lora_scale: float):
+    """One decode step of a MoE model with disaggregated LoRA.
+
+    tokens: (B, 1); adapter_ids: (B,) GLOBAL adapter ids (server resolves
+    slots; non-resident ids must have been inserted by the cache manager).
+    Returns (logits (B, V), new cache).
+    """
+    assert cfg.is_moe, "disaggregated hooks target MoE FFNs (paper Fig. 3b)"
+    pos = cache["pos"]
+    B = tokens.shape[0]
+    x = ll.embed(tokens, params["embed"])
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    new_k, new_v = cache["k"], cache["v"]
+    E, K = cfg.n_experts, cfg.top_k
+
+    for l in range(cfg.n_layers):
+        lp = _layer_params(params, l)
+        x, k_l, v_l = _client_attn(x, lp, cfg, pos, new_k[l], new_v[l],
+                                   positions)
+        new_k = new_k.at[l].set(k_l)
+        new_v = new_v.at[l].set(v_l)
+
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        xf = h.reshape(-1, cfg.d_model)
+        T = xf.shape[0]
+        ids, wts = moe_mod.route(xf, lp["moe"]["router"], E, K)
+        C = moe_mod.capacity(T, K, E, cfg.capacity_factor, dropless=True)
+        xe, slot_tok = moe_mod.local_dispatch(xf, ids, C, E)  # (E, C, d)
+        rows = xe.reshape(E * C, cfg.d_model)
+        row_expert = (jnp.arange(E * C, dtype=jnp.int32) // C)
+        tok_safe = jnp.minimum(slot_tok, T - 1)
+        row_adapter = jnp.where(slot_tok < T,
+                                jnp.asarray(adapter_ids)[tok_safe], -1)
+
+        # hook 1: up/gate — client GEMM + server delta (overlapped on HW)
+        mp = lp["moe"]
+        g = jnp.einsum("ecd,edf->ecf", xe, mp["gate"],
+                       preferred_element_type=F32)
+        u = jnp.einsum("ecd,edf->ecf", xe, mp["up"],
+                       preferred_element_type=F32)
+        d_up = server.compute("up", l, rows, row_adapter, row_expert)
+        d_up = d_up.reshape(E, C, -1) * lora_scale
+        dg, du = jnp.split(d_up, 2, axis=-1)
+        act = (jax.nn.silu(g + dg) * (u + du)).astype(x.dtype)
+
+        # hook 2: down
+        y = jnp.einsum("ecf,efd->ecd", act, mp["down"],
+                       preferred_element_type=F32)
+        d_dn = server.compute("down", l, act.reshape(E * C, -1),
+                              row_adapter, row_expert)
+        y = y + d_dn.reshape(E, C, -1) * lora_scale
+
+        # combine with router weights (same bookkeeping as the coupled path)
+        slot_expert = jnp.arange(E * C, dtype=jnp.int32) // C
+        match = ids[tok_safe] == slot_expert[:, None]
+        w_slot = jnp.where(slot_tok < T,
+                           jnp.sum(jnp.where(match, wts[tok_safe], 0.0), -1),
+                           0.0)
+        out = jnp.zeros((T + 1, cfg.d_model), F32)
+        out = out.at[slot_tok].add(y.reshape(E * C, -1) * w_slot[:, None])
+        x = x + out[:T].reshape(B, 1, cfg.d_model).astype(x.dtype)
+
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = new_k, new_v
+    new_cache["pos"] = pos + 1
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params.get("lm_head", params["embed"]))
+    return logits[:, 0], new_cache

@@ -1,0 +1,48 @@
+"""Reference LoRA math (pure jnp). The Pallas kernels in repro.kernels
+implement the same contracts for TPU; repro.kernels.ops dispatches.
+
+Contracts:
+  bgmv(x, A, B, ids)            per-row adapter gather matvec
+      x: (T, d_in); A: (N, d_in, r); B: (N, r, d_out); ids: (T,) int32
+      -> (T, d_out) f32;  ids < 0 rows produce 0.
+  bgmv_expert(x, A, B, ids, eids)   expert-specific adapters (MoE)
+      A: (N, E, d_in, r); B: (N, E, r, d_out); eids: (T,) expert per row.
+  sgmv(x, A, B, seg_starts, seg_adapter)  segmented (sorted-by-adapter) GEMM
+      rows grouped so segment s = rows[seg_starts[s]:seg_starts[s+1]] share
+      seg_adapter[s]; implemented here by expansion to bgmv (oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def bgmv(x, A, B, ids):
+    ids_safe = jnp.maximum(ids, 0)
+    a = A[ids_safe]  # (T, d_in, r)
+    b = B[ids_safe]  # (T, r, d_out)
+    h = jnp.einsum("td,tdr->tr", x.astype(F32), a.astype(F32))
+    y = jnp.einsum("tr,tro->to", h, b.astype(F32))
+    return jnp.where((ids >= 0)[:, None], y, 0.0)
+
+
+def bgmv_expert(x, A, B, ids, eids):
+    ids_safe = jnp.maximum(ids, 0)
+    a = A[ids_safe, eids]  # (T, d_in, r)
+    b = B[ids_safe, eids]  # (T, r, d_out)
+    h = jnp.einsum("td,tdr->tr", x.astype(F32), a.astype(F32))
+    y = jnp.einsum("tr,tro->to", h, b.astype(F32))
+    return jnp.where((ids >= 0)[:, None], y, 0.0)
+
+
+def sgmv(x, A, B, row_adapter):
+    """Oracle for the segmented kernel: same math as bgmv given per-row ids
+    (segments are a layout optimization, not a semantic change)."""
+    return bgmv(x, A, B, row_adapter)
+
+
+def matvec_rows(rows, w):
+    """rows: (T, f) @ w: (f, d) -> (T, d) f32."""
+    return jnp.einsum("tf,fd->td", rows.astype(F32), w.astype(F32))

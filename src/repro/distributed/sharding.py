@@ -1,0 +1,133 @@
+"""Logical-axis sharding (MaxText-style).
+
+Model code annotates activations/params with *logical* axis names via
+``constrain`` / ``logical_spec``. A ``ShardingRules`` context maps logical
+names to physical mesh axes. With no active context (CPU smoke tests), the
+annotations are no-ops, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Default rules for the production mesh ("data", "model") [+ "pod"].
+# Values may be None (replicated), a mesh axis, or a tuple of mesh axes.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),      # global batch
+    "seq": "model",                # sequence parallelism for the residual stream
+    "kv_seq": "model",             # decode KV cache sequence dim (flash-decode)
+    "embed": None,                 # d_model on activations
+    "heads": "model",              # attention heads (train/prefill TP)
+    "kv_heads": None,              # kv heads (GQA: usually too few to shard)
+    "qkv_out": "model",            # fused qkv output dim of weights
+    "kv_out": "model",             # fused kv output dim of weights
+    "mlp": "model",                # d_ff
+    "experts": "model",            # MoE expert dim of weights (train: EP=seq axis)
+    "moe_ff": "data",              # MoE expert hidden dim at rest (train: FSDP)
+    "vocab": "model",              # embedding/lm-head vocab dim
+    "fsdp": "data",                # weight dim-0 sharding (ZeRO-3 / FSDP)
+    "layers": None,                # stacked-layer leading dim: never sharded
+    "lora_adapters": None,         # adapter pool dim (LoRA server shards it)
+    "lora_rank": None,
+    "conv": None,
+    "ssm_state": None,
+    "ssm_inner": "model",
+    "frontend_seq": None,
+}
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, MeshAxes]] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        self._axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def _resolve(self, name: Optional[str], dim_size: Optional[int]) -> MeshAxes:
+        if name is None:
+            return None
+        axes = self.rules.get(name, None)
+        if axes is None:
+            return None
+        if isinstance(axes, str):
+            axes = (axes,)
+        # Keep only axes present in the mesh (e.g. "pod" on single-pod) and
+        # drop axes that do not divide the dimension.
+        out = []
+        prod = 1
+        for a in axes:
+            if a not in self._axis_sizes:
+                continue
+            sz = self._axis_sizes[a]
+            if dim_size is not None and dim_size % (prod * sz) != 0:
+                continue
+            out.append(a)
+            prod *= sz
+        if not out:
+            return None
+        return tuple(out) if len(out) > 1 else out[0]
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        dims = list(shape) if shape is not None else [None] * len(logical_axes)
+        # Never map the same mesh axis to two dims: first dim wins.
+        used = set()
+        parts = []
+        for name, d in zip(logical_axes, dims):
+            resolved = self._resolve(name, d)
+            if resolved is None:
+                parts.append(None)
+                continue
+            axes = (resolved,) if isinstance(resolved, str) else resolved
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                parts.append(None)
+                continue
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+        return P(*parts)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+_tls = threading.local()
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return getattr(_tls, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_tls, "rules", None)
+    _tls.rules = rules
+    try:
+        yield
+    finally:
+        _tls.rules = prev
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    """Apply a logical sharding constraint to an activation (no-op w/o rules)."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = rules.spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def mesh_axis_size(name: str) -> int:
+    rules = active_rules()
+    if rules is None or name not in rules._axis_sizes:
+        return 1
+    return rules._axis_sizes[name]

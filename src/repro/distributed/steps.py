@@ -1,0 +1,222 @@
+"""Sharded step builders: train_step / prefill_step / serve_step per
+(arch, shape, mesh), with per-kind sharding rule-sets.
+
+Rule-sets (see DESIGN.md §7):
+  train/prefill, attention families:
+      batch->(pod,data)  seq->model (sequence parallelism)
+      weights: dim0 fsdp->data (ZeRO-3 gather per layer), dim1 tp->model
+      MoE: experts->model (a2a along the seq axis), moe_ff at rest ->data
+  train/prefill, ssm/hybrid families (recurrence forbids seq sharding):
+      batch->(pod,data,model); weights as above
+  decode (all families):
+      batch->(pod,data)  kv_seq->model (flash-decode shard_map)
+      weights resident (no fsdp): tp->model
+      MoE: experts->data (a2a along batch), moe_ff->model (psum)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingRules, use_rules, constrain
+from repro.models import cache as cache_mod
+from repro.models import model as model_mod
+from repro.models import transformer
+from repro.training import optimizer as opt_mod
+
+F32 = jnp.float32
+
+
+def rules_for(mesh: Mesh, kind: str, cfg: ModelConfig,
+              overrides: Optional[Dict] = None) -> ShardingRules:
+    r: Dict = {}
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if kind in ("train", "prefill"):
+        # SSM recurrence forbids seq sharding; attention archs whose head
+        # count does not divide the model axis would replicate the whole
+        # attention computation under sequence parallelism (§Perf opt-A:
+        # 12/15/14-head archs) — both get batch-over-model instead.
+        heads_shardable = cfg.n_heads % model_size == 0
+        if cfg.is_ssm or not heads_shardable:
+            r["batch"] = ("pod", "data", "model")
+            r["seq"] = None
+        else:
+            r["batch"] = ("pod", "data")
+            r["seq"] = "model"
+        r["experts"] = "model"
+        r["moe_ff"] = "data"
+        r["fsdp"] = "data"
+        r["kv_seq"] = None
+    elif kind == "decode":
+        r["batch"] = ("pod", "data")
+        r["seq"] = None
+        r["kv_seq"] = "model"
+        r["experts"] = "data"
+        r["moe_ff"] = "model"
+        r["fsdp"] = None
+    else:
+        raise ValueError(kind)
+    if overrides:
+        r.update(overrides)
+    return ShardingRules(mesh, r)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules,
+                kv_quant: bool = False):
+    """ShapeDtypeStruct + sharding for every step input (the dry-run's
+    ``input_specs`` backbone)."""
+    B = shape.global_batch
+    S = shape.seq_len
+    d = cfg.d_model
+    specs = {}
+
+    def add(name, shp, dtype, axes):
+        specs[name] = (jax.ShapeDtypeStruct(shp, dtype),
+                       rules.sharding(axes, shp))
+
+    if shape.kind in ("train", "prefill"):
+        S_text = S
+        if cfg.frontend:
+            S_front = min(cfg.frontend_tokens, S // 2)
+            S_text = S - S_front
+            add("frontend_emb", (B, S_front, d), jnp.bfloat16,
+                ("batch", "seq", None))
+        if cfg.is_encdec:
+            # encoder consumes the frontend frames; decoder gets text tokens
+            add("tokens", (B, S_text, ), jnp.int32, ("batch", "seq"))
+        else:
+            add("tokens", (B, S_text), jnp.int32, ("batch", "seq"))
+        if shape.kind == "train":
+            add("labels", (B, S_text), jnp.int32, ("batch", "seq"))
+    else:  # decode
+        add("tokens", (B, 1), jnp.int32, ("batch", None))
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules,
+                kv_quant: bool = False):
+    """Abstract cache + shardings for decode steps."""
+    ax = cache_mod.cache_logical_axes(cfg)
+    cache = jax.eval_shape(
+        lambda: cache_mod.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                     kv_quant))
+    shardings = {k: rules.sharding(ax[k], v.shape) for k, v in cache.items()}
+    return cache, shardings
+
+
+# ----------------------------- losses ----------------------------------- #
+def lm_loss(logits, labels):
+    """Cross-entropy; labels < 0 are masked. Handles vocab-sharded logits."""
+    logits = logits.astype(F32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    mask = labels >= 0
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+# --------------------------- step builders ------------------------------- #
+def make_train_step(cfg: ModelConfig, rules: ShardingRules,
+                    opt_cfg: opt_mod.AdamWConfig = opt_mod.AdamWConfig()):
+    def step(params, opt_state, batch):
+        with use_rules(rules):
+            def loss_fn(p):
+                logits, _ = transformer.forward(
+                    p, cfg, batch["tokens"],
+                    frontend_emb=batch.get("frontend_emb"), kind="train")
+                if cfg.frontend and not cfg.is_encdec:
+                    logits = logits[:, -batch["labels"].shape[1]:]
+                return lm_loss(logits, batch["labels"])
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state = opt_mod.update(params, grads, opt_state,
+                                               opt_cfg)
+        return loss, params, opt_state
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: ShardingRules):
+    def step(params, batch):
+        with use_rules(rules):
+            logits, _ = transformer.forward(
+                params, cfg, batch["tokens"],
+                frontend_emb=batch.get("frontend_emb"), kind="prefill")
+        return logits
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, rules: ShardingRules,
+                    with_lora: bool = False):
+    """Decode step: (params, cache, tokens[, lora]) -> (logits, cache)."""
+    def step(params, cache, batch, lora_ctx=None):
+        with use_rules(rules):
+            logits, cache = transformer.decode_step(
+                params, cfg, cache, batch["tokens"], lora_ctx=lora_ctx)
+        return logits, cache
+
+    return step
+
+
+# ------------------------- jit orchestration ----------------------------- #
+def jit_train_step(cfg, shape, mesh, opt_cfg=opt_mod.AdamWConfig(),
+                   overrides=None):
+    rules = rules_for(mesh, "train", cfg, overrides)
+    p_sh = model_mod.param_shardings(cfg, rules)
+    o_sh = {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, P())}
+    in_specs = batch_specs(cfg, shape, rules)
+    b_sh = {k: v[1] for k, v in in_specs.items()}
+    b_abs = {k: v[0] for k, v in in_specs.items()}
+    step = make_train_step(cfg, rules, opt_cfg)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(NamedSharding(mesh, P()), p_sh, o_sh),
+        donate_argnums=(0, 1),
+    )
+    abstract = (model_mod.abstract_params(cfg),
+                jax.eval_shape(lambda p: opt_mod.init(p),
+                               model_mod.abstract_params(cfg)),
+                b_abs)
+    return jitted, abstract, rules
+
+
+def jit_prefill_step(cfg, shape, mesh, overrides=None):
+    rules = rules_for(mesh, "prefill", cfg, overrides)
+    p_sh = model_mod.param_shardings(cfg, rules)
+    in_specs = batch_specs(cfg, shape, rules)
+    b_sh = {k: v[1] for k, v in in_specs.items()}
+    b_abs = {k: v[0] for k, v in in_specs.items()}
+    step = make_prefill_step(cfg, rules)
+    B, S, V = shape.global_batch, shape.seq_len, cfg.padded_vocab
+    if cfg.is_encdec:
+        S = b_abs["tokens"].shape[1]
+    logits_sh = rules.sharding(("batch", "seq", "vocab"), (B, S, V))
+    jitted = jax.jit(step, in_shardings=(p_sh, b_sh), out_shardings=logits_sh)
+    return jitted, (model_mod.abstract_params(cfg), b_abs), rules
+
+
+def jit_serve_step(cfg, shape, mesh, kv_quant=False, overrides=None):
+    rules = rules_for(mesh, "decode", cfg, overrides)
+    p_sh = model_mod.param_shardings(cfg, rules)
+    in_specs = batch_specs(cfg, shape, rules)
+    b_sh = {k: v[1] for k, v in in_specs.items()}
+    b_abs = {k: v[0] for k, v in in_specs.items()}
+    cache_abs, cache_sh = cache_specs(cfg, shape, rules, kv_quant)
+    step = make_serve_step(cfg, rules)
+    logits_sh = rules.sharding(("batch", "vocab"),
+                               (shape.global_batch, cfg.padded_vocab))
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, cache_sh, b_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,),
+    )
+    return jitted, (model_mod.abstract_params(cfg), cache_abs, b_abs), rules

@@ -1,0 +1,71 @@
+"""Grouped-GEMM Pallas TPU kernel for MoE expert FFNs (megablox-style).
+
+Computes y[e] = x[e] @ w[e] for E expert groups with ragged occupancy:
+``group_sizes`` is scalar-prefetched and empty (or tail-empty) expert tiles
+are skipped entirely — the TPU analogue of the paper's "hardware-specialized
+grouped GEMM on the instance side" that InfiniLoRA's LoRA deltas are
+overlapped against.
+
+  xe: (E, C, d) ; w: (E, d, f) ; group_sizes: (E,) -> (E, C, f) f32
+
+Grid (E, f_blocks, d_blocks) with accumulation over d_blocks; all tiles
+VMEM-resident: Cb x db + db x fb + Cb x fb.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(gs_ref, x_ref, w_ref, o_ref):
+    e = pl.program_id(0)
+    kd = pl.program_id(2)
+
+    @pl.when(kd == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(gs_ref[e] > 0)
+    def _():
+        o_ref[...] += jnp.dot(
+            x_ref[0].astype(F32), w_ref[0].astype(F32),
+            preferred_element_type=F32)[None]
+
+
+def gmm(xe, w, group_sizes=None, *, block_f: int = 512, block_d: int = 512,
+        interpret: bool = True):
+    E, C, d = xe.shape
+    f = w.shape[-1]
+    block_f = min(block_f, f)
+    block_d = min(block_d, d)
+    while f % block_f:
+        block_f //= 2
+    while d % block_d:
+        block_d //= 2
+    if group_sizes is None:
+        group_sizes = jnp.full((E,), C, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(E, f // block_f, d // block_d),
+        in_specs=[
+            pl.BlockSpec((1, C, block_d), lambda e, kf, kd, gs: (e, 0, kd)),
+            pl.BlockSpec((1, block_d, block_f),
+                         lambda e, kf, kd, gs: (e, kd, kf)),
+        ],
+        out_specs=pl.BlockSpec((1, C, block_f),
+                               lambda e, kf, kd, gs: (e, 0, kf)),
+    )
+    out = pl.pallas_call(
+        _kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, C, f), F32),
+        interpret=interpret,
+    )(group_sizes.astype(jnp.int32), xe, w)
+    mask = jnp.arange(C)[None, :] < group_sizes[:, None]
+    return jnp.where(mask[..., None], out, 0.0)

@@ -1,0 +1,119 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; elsewhere (this CPU container, and any
+test run) they execute in interpret mode, which runs the kernel body in
+Python per grid step — same math, same blocking. ``use_ref()`` can force the
+pure-jnp oracle (used by the model code on non-TPU backends where interpret
+mode would be needlessly slow inside big jits).
+
+Padding: TPU lanes want the last dim % 128 == 0 and sublanes % 8 == 0; the
+wrappers zero-pad r / d_out / cap as needed and slice back.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bgmv as _bgmv
+from repro.kernels import gmm as _gmm
+from repro.kernels import ref as _ref
+from repro.kernels import sgmv as _sgmv
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def kernels_enabled() -> bool:
+    env = os.environ.get("REPRO_USE_PALLAS", "auto")
+    if env == "1":
+        return True
+    if env == "0":
+        return False
+    return on_tpu()
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _bgmv_call(x, A, B, ids, interpret=True):
+    d_out = B.shape[-1]
+    x = _pad_to(x, 128, 1)
+    A = _pad_to(_pad_to(A, 128, 1), 128, 2)
+    B = _pad_to(_pad_to(B, 128, 1), 128, 2)
+    out = _bgmv.bgmv(x, A, B, ids, interpret=interpret)
+    return out[:, :d_out]
+
+
+def bgmv(x, A, B, ids):
+    if not kernels_enabled():
+        return _ref.bgmv_ref(x, A, B, ids)
+    return _bgmv_call(x, A, B, ids, interpret=not on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _bgmv_expert_call(x, A, B, ids, eids, interpret=True):
+    d_out = B.shape[-1]
+    x = _pad_to(x, 128, 1)
+    A = _pad_to(_pad_to(A, 128, 2), 128, 3)
+    B = _pad_to(_pad_to(B, 128, 2), 128, 3)
+    out = _bgmv.bgmv_expert(x, A, B, ids, eids, interpret=interpret)
+    return out[:, :d_out]
+
+
+def bgmv_expert(x, A, B, ids, eids):
+    if not kernels_enabled():
+        return _ref.bgmv_expert_ref(x, A, B, ids, eids)
+    return _bgmv_expert_call(x, A, B, ids, eids, interpret=not on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _sgmv_call(seg_rows, seg_adapter, A, B, interpret=True):
+    d_out = B.shape[-1]
+    seg_rows = _pad_to(_pad_to(seg_rows, 8, 1), 128, 2)
+    A = _pad_to(_pad_to(A, 128, 1), 128, 2)
+    B = _pad_to(_pad_to(B, 128, 1), 128, 2)
+    out = _sgmv.sgmv(seg_rows, seg_adapter, A, B, interpret=interpret)
+    return out[:, : seg_rows.shape[1], :d_out]
+
+
+def sgmv(seg_rows, seg_adapter, A, B):
+    if not kernels_enabled():
+        return _ref.sgmv_ref(seg_rows, seg_adapter, A, B)
+    cap = seg_rows.shape[1]
+    out = _sgmv_call(seg_rows, seg_adapter, A, B, interpret=not on_tpu())
+    return out[:, :cap]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gmm_call(xe, w, group_sizes, interpret=True):
+    f = w.shape[-1]
+    xe = _pad_to(_pad_to(xe, 8, 1), 128, 2)
+    w = _pad_to(_pad_to(w, 128, 1), 128, 2)
+    out = _gmm.gmm(xe, w, group_sizes, interpret=interpret)
+    return out[:, :, :f]
+
+
+def gmm(xe, w, group_sizes=None):
+    if not kernels_enabled():
+        return _ref.gmm_ref(xe, w, group_sizes)
+    C = xe.shape[1]
+    if group_sizes is None:
+        group_sizes = jnp.full((xe.shape[0],), C, jnp.int32)
+    out = _gmm_call(xe, w, group_sizes, interpret=not on_tpu())
+    return out[:, :C]
+
+
+build_segments = _sgmv.build_segments

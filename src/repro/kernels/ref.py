@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference).
+
+bgmv / bgmv_expert / sgmv re-export the contracts from repro.core.lora_math;
+gmm_ref is the grouped-GEMM oracle for the MoE expert kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.lora_math import bgmv as bgmv_ref            # noqa: F401
+from repro.core.lora_math import bgmv_expert as bgmv_expert_ref  # noqa: F401
+from repro.core.lora_math import sgmv as sgmv_rowwise_ref    # noqa: F401
+
+F32 = jnp.float32
+
+
+def sgmv_ref(seg_rows, seg_adapter, A, B):
+    """seg_rows: (S, cap, d_in); seg_adapter: (S,) (-1 = padding segment);
+    A: (N, d_in, r); B: (N, r, d_out) -> (S, cap, d_out) f32."""
+    ids = jnp.maximum(seg_adapter, 0)
+    a = A[ids]                       # (S, d_in, r)
+    b = B[ids]                       # (S, r, d_out)
+    h = jnp.einsum("scd,sdr->scr", seg_rows.astype(F32), a.astype(F32))
+    y = jnp.einsum("scr,sro->sco", h, b.astype(F32))
+    return jnp.where((seg_adapter >= 0)[:, None, None], y, 0.0)
+
+
+def gmm_ref(xe, w, group_sizes=None):
+    """xe: (E, C, d); w: (E, d, f) -> (E, C, f) f32; rows past
+    group_sizes[e] are zeroed (ragged groups)."""
+    y = jnp.einsum("ecd,edf->ecf", xe.astype(F32), w.astype(F32))
+    if group_sizes is not None:
+        C = xe.shape[1]
+        mask = jnp.arange(C)[None, :] < group_sizes[:, None]
+        y = jnp.where(mask[..., None], y, 0.0)
+    return y

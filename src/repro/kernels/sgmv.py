@@ -1,0 +1,91 @@
+"""SGMV Pallas TPU kernel — segmented gather GEMM for LoRA.
+
+Tokens sharing an adapter are grouped into capacity-padded segments so each
+grid step runs a dense (cap, d_in) x (d_in, r) x (r, d_out) chain on the MXU
+— the paper's SGMV insight (aggregate same-adapter tokens into one GEMM to
+stop re-reading adapter weights per token). The paper's swapped-AB
+``wgmma.m64n8k16`` trick maps on TPU to making ``cap`` a multiple of the
+8-sublane tile and keeping r/d lane-aligned (128) so the MXU runs dense.
+
+  seg_rows: (S, cap, d_in)  seg_adapter: (S,) int32 (-1 = padding segment)
+  A: (N, d_in, r)  B: (N, r, d_out)  ->  (S, cap, d_out) f32
+
+``build_segments`` converts a flat (rows, per-row adapter) batch into this
+layout (sort by adapter, pad each run to ``cap``); rows beyond a segment's
+true length are zero and thus harmless.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(ids_ref, x_ref, a_ref, b_ref, o_ref):
+    s = pl.program_id(0)
+
+    @pl.when(ids_ref[s] >= 0)
+    def _():
+        h = jnp.dot(x_ref[0].astype(F32), a_ref[0].astype(F32),
+                    preferred_element_type=F32)           # (cap, r)
+        o_ref[...] = jnp.dot(h, b_ref[0].astype(F32),
+                             preferred_element_type=F32)[None]  # (1,cap,d_out)
+
+    @pl.when(ids_ref[s] < 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def sgmv(seg_rows, seg_adapter, A, B, *, interpret: bool = True):
+    S, cap, d_in = seg_rows.shape
+    N, _, r = A.shape
+    d_out = B.shape[-1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, cap, d_in), lambda s, ids: (s, 0, 0)),
+            pl.BlockSpec((1, d_in, r),
+                         lambda s, ids: (jnp.maximum(ids[s], 0), 0, 0)),
+            pl.BlockSpec((1, r, d_out),
+                         lambda s, ids: (jnp.maximum(ids[s], 0), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cap, d_out), lambda s, ids: (s, 0, 0)),
+    )
+    return pl.pallas_call(
+        _kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, cap, d_out), F32),
+        interpret=interpret,
+    )(seg_adapter.astype(jnp.int32), seg_rows, A, B)
+
+
+def build_segments(rows: jax.Array, row_adapter: jax.Array, n_adapters: int,
+                   cap: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Group rows by adapter into capacity-padded segments (host-free).
+
+    Returns (seg_rows (S, cap, d), seg_adapter (S,), scatter (T,) slot per
+    input row; S = n_adapters * ceil-per-adapter runs collapsed to one
+    segment per adapter — rows beyond cap are dropped, mirroring the MoE
+    capacity discipline).
+    """
+    T, d = rows.shape
+    order = jnp.argsort(row_adapter, stable=True)
+    sorted_ad = row_adapter[order]
+    counts = jnp.bincount(jnp.maximum(row_adapter, 0), length=n_adapters)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T) - starts[jnp.maximum(sorted_ad, 0)]
+    keep = (pos < cap) & (sorted_ad >= 0)
+    slot = jnp.where(keep, jnp.maximum(sorted_ad, 0) * cap + pos, n_adapters * cap)
+    seg_rows = jnp.zeros((n_adapters * cap + 1, d), rows.dtype)
+    seg_rows = seg_rows.at[slot].set(rows[order], mode="drop")
+    seg_rows = seg_rows[:-1].reshape(n_adapters, cap, d)
+    seg_adapter = jnp.where(counts > 0, jnp.arange(n_adapters), -1)
+    scatter = jnp.zeros((T,), jnp.int32).at[order].set(slot.astype(jnp.int32))
+    return seg_rows, seg_adapter.astype(jnp.int32), scatter

@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (test hook — still before any jax import/initialization)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell on
+the production meshes and record memory/cost/collective analyses.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi]
+  PYTHONPATH=src python -m repro.launch.dryrun --disagg   # LoRA server split
+
+Results cache to experiments/dryrun/<cell>.json; reruns skip completed cells
+unless --force. This is the proof that the distribution config is coherent:
+sharding mismatches, compile-time OOM, and unsupported collectives all fail
+here.
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import roofline as RL
+from repro.configs import ASSIGNED, SHAPES, applicable, get_config, get_shape
+from repro.distributed import steps as steps_mod
+from repro.launch.mesh import (carve_server_submesh, instance_submesh,
+                               make_production_mesh)
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def cell_id(arch: str, shape: str, mesh: str, variant: str = "base") -> str:
+    return f"{arch}__{shape}__{mesh}" + ("" if variant == "base" else f"__{variant}")
+
+
+def compile_cell(arch: str, shape_name: str, mesh_name: str,
+                 kv_quant: bool = False, overrides=None, variant="base"):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {"status": "SKIP", "reason": reason}
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    if shape.kind == "train":
+        jitted, abstract, rules = steps_mod.jit_train_step(
+            cfg, shape, mesh, overrides=overrides)
+    elif shape.kind == "prefill":
+        jitted, abstract, rules = steps_mod.jit_prefill_step(
+            cfg, shape, mesh, overrides=overrides)
+    else:
+        jitted, abstract, rules = steps_mod.jit_serve_step(
+            cfg, shape, mesh, kv_quant=kv_quant, overrides=overrides)
+    lowered = jitted.lower(*abstract)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # persist the partitioned HLO so analyses can be re-run without
+    # recompiling (and the perf loop can diff collective schedules)
+    import gzip
+    hlo_dir = OUT_DIR / "hlo"
+    hlo_dir.mkdir(parents=True, exist_ok=True)
+    cid = cell_id(arch, shape_name, mesh_name, variant)
+    with gzip.open(hlo_dir / f"{cid}.hlo.gz", "wt") as f:
+        f.write(hlo)
+    peak = (getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            - getattr(mem, "alias_size_in_bytes", 0))
+    rl = RL.analyze(arch, shape_name, mesh_name, chips, cost, hlo, peak,
+                    cfg, shape)
+    from repro.analysis.memory_est import analytic_device_bytes
+    analytic = analytic_device_bytes(cfg, shape, rules, shape.kind,
+                                     kv_quant=kv_quant)
+    rec = {
+        "status": "OK",
+        "variant": variant,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "peak_per_device": peak,
+            "fits_16g": bool(peak < 16 * 2**30),
+            # host-CPU compile hoists bf16->f32 of weights/KV (no bf16 ALU);
+            # 'analytic' is the TPU-expected at-rest + workspace account
+            "analytic": analytic,
+        },
+        "roofline": rl.to_dict(),
+    }
+    return rec
+
+
+def compile_disagg(arch: str, mesh_name: str = "single", x: int = 4,
+                   y: int = 2, n_slots: int = 64, batch_rows: int = 1024):
+    """Disaggregated split: base serve_step on the instance submesh + LoRA
+    server hook steps on the carved (ep, pp) submesh."""
+    from repro.core.lora_server import LoRAServer, ServerConfig
+
+    cfg = get_config(arch)
+    shape = get_shape("decode_32k")
+    full = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    m = x * y
+    # instance mesh: biggest (data, model) grid fitting the remaining chips
+    model = 16
+    data = (full.devices.size - m) // model
+    inst = instance_submesh(full, m, data, model)
+    server_mesh = carve_server_submesh(full, x, y)
+
+    rec = {"instance_mesh": f"{data}x{model}", "server_mesh": f"{x}x{y}"}
+    # 1) base (LoRA-free) decode step on the instance submesh
+    import dataclasses as dc
+    bshape = dc.replace(shape, global_batch=max(data * 4, 32))
+    jitted, abstract, _ = steps_mod.jit_serve_step(cfg, bshape, inst)
+    compiled = jitted.lower(*abstract).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    rec["instance"] = {
+        "flops_per_device": float(cost.get("flops", 0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0)),
+        "coll_bytes": RL.collective_bytes(compiled.as_text()),
+    }
+    # 2) server hook steps on the (ep, pp) submesh
+    server = LoRAServer(cfg, ServerConfig(m=m, x=x, y=y, cache_slots=n_slots,
+                                          rank=cfg.lora_rank),
+                        mesh=server_mesh, abstract=True)
+    E = max(cfg.n_experts, 1)
+    R = batch_rows
+    rows = jax.ShapeDtypeStruct((R, cfg.d_model), jnp.bfloat16)
+    slots = jax.ShapeDtypeStruct((R,), jnp.int32)
+    eids = jax.ShapeDtypeStruct((R,), jnp.int32)
+    for hook, din in (("up", cfg.d_model), ("down", cfg.d_ff)):
+        fn = server._step(hook)
+        A, B = ((server.pool["up_A"], server.pool["up_B"]) if hook == "up"
+                else (server.pool["down_A"], server.pool["down_B"]))
+        rows_h = jax.ShapeDtypeStruct((R, din), jnp.bfloat16)
+        lowered = fn.lower(0, jnp.int32(0), rows_h, slots, eids,
+                           jax.ShapeDtypeStruct(A.shape, A.dtype),
+                           jax.ShapeDtypeStruct(B.shape, B.dtype))
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        mem = compiled.memory_analysis()
+        rec[f"server_{hook}"] = {
+            "flops_per_device": float(cost.get("flops", 0)),
+            "bytes_per_device": float(cost.get("bytes accessed", 0)),
+            "coll_bytes": RL.collective_bytes(compiled.as_text()),
+            "arg_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        }
+    # transfer volume (the resharding DMA), per §4.1: b*k rows per layer
+    k = max(cfg.top_k, 1)
+    rec["transfer_bytes_per_layer"] = int(
+        R * (cfg.d_model + cfg.d_ff) * 2)
+    rec["status"] = "OK"
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--disagg", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.disagg:
+        arch = args.arch or "qwen3-moe-235b-a22b"
+        cid = cell_id(arch, "decode_32k", args.mesh, "disagg")
+        path = OUT_DIR / f"{cid}.json"
+        rec = compile_disagg(arch, args.mesh)
+        path.write_text(json.dumps(rec, indent=1))
+        print(cid, rec["status"])
+        return 0
+
+    archs = [args.arch] if args.arch else sorted(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.both_meshes else [args.mesh]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                cid = cell_id(arch, shape, mesh_name, args.variant)
+                path = OUT_DIR / f"{cid}.json"
+                if path.exists() and not args.force:
+                    rec = json.loads(path.read_text())
+                    print(f"{cid}: cached {rec['status']}")
+                    continue
+                try:
+                    rec = compile_cell(arch, shape, mesh_name,
+                                       kv_quant=args.kv_quant,
+                                       variant=args.variant)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures.append(cid)
+                path.write_text(json.dumps(rec, indent=1))
+                extra = ""
+                if rec["status"] == "OK":
+                    r = rec["roofline"]
+                    extra = (f" peak={rec['memory']['peak_per_device']/2**30:.2f}GiB"
+                             f" bottleneck={r['bottleneck']}"
+                             f" frac={r['roofline_fraction']:.3f}")
+                print(f"{cid}: {rec['status']}{extra}", flush=True)
+    if failures:
+        print("FAILURES:", failures, file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""Production mesh builders. Functions, not module-level constants, so that
+importing this module never touches jax device state (the dry-run sets
+XLA_FLAGS before any jax initialization)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 4, pod: int = 0):
+    """Small host-device mesh for tests (requires enough host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def carve_server_submesh(mesh: Mesh, x: int, y: int) -> Mesh:
+    """Take the trailing x*y devices of a pod mesh as the LoRA Server mesh
+    (axes ("ep","pp")) — disaggregation = disjoint submeshes (DESIGN.md §4).
+    """
+    flat = mesh.devices.reshape(-1)
+    assert x * y <= flat.size
+    return Mesh(np.asarray(flat[-x * y:]).reshape(x, y), ("ep", "pp"))
+
+
+def instance_submesh(mesh: Mesh, n_server: int, data: int, model: int) -> Mesh:
+    """The LoRA-free LLM-instance portion of the pod (leading devices)."""
+    flat = mesh.devices.reshape(-1)
+    n = data * model
+    assert n + n_server <= flat.size
+    return Mesh(np.asarray(flat[:n]).reshape(data, model), ("data", "model"))

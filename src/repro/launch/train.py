@@ -1,0 +1,118 @@
+"""Training driver: base-model pretraining or per-tenant LoRA fine-tuning.
+
+CPU-scale (reduced configs) runs execute for real; full configs are for the
+production mesh (dry-run validates them). Supports checkpoint/restart with
+exact resume (deterministic data) — kill it mid-run and relaunch to test.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --steps 50 --batch 8 --seq 64 --ckpt /tmp/ck
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --lora --tenant 3 --steps 30
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as model_mod
+from repro.training import checkpoint as ckpt_mod
+from repro.training import data as data_mod
+from repro.training import optimizer as opt_mod
+from repro.training.train_step import make_lora_train_step
+from repro.core.adapter import init_adapter_pool
+from repro.distributed.steps import lm_loss
+from repro.models import transformer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--lora", action="store_true")
+    ap.add_argument("--tenant", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+    params = model_mod.init_params(cfg, key, dtype="float32")
+    opt_cfg = opt_mod.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                  total_steps=args.steps)
+    dcfg = data_mod.DataConfig(cfg.vocab_size, args.seq, args.batch,
+                               tenant_id=args.tenant)
+
+    if args.lora:
+        pool = init_adapter_pool(cfg, 1, jax.random.fold_in(key, 1), rank=8,
+                                 dtype=jnp.float32)
+        adapter = pool.tensors
+        opt_state = opt_mod.init(adapter)
+        step_fn = jax.jit(make_lora_train_step(cfg, params, pool.scale,
+                                               opt_cfg))
+        err = None
+        start = 0
+        for s in range(start, args.steps):
+            toks, labels = data_mod.batch_at(dcfg, s)
+            loss, adapter, opt_state, err = step_fn(
+                adapter, opt_state, err,
+                {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)})
+            if s % args.log_every == 0 or s == args.steps - 1:
+                print(f"lora step {s:5d} loss {float(loss):.4f}", flush=True)
+        return 0
+
+    opt_state = opt_mod.init(params)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        def loss_fn(p):
+            logits, _ = transformer.forward(p, cfg, batch["tokens"],
+                                            kind="train")
+            return lm_loss(logits, batch["labels"])
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state = opt_mod.update(params, grads, opt_state, opt_cfg)
+        return loss, params, opt_state
+
+    start = 0
+    mgr = None
+    if args.ckpt:
+        mgr = ckpt_mod.CheckpointManager(args.ckpt, every=args.ckpt_every)
+        last = ckpt_mod.latest_step(args.ckpt)
+        if last is not None:
+            state = ckpt_mod.restore(args.ckpt, last,
+                                     {"p": params, "o": opt_state})
+            params, opt_state = state["p"], state["o"]
+            start = last
+            print(f"resumed from step {start}", flush=True)
+
+    t0 = time.time()
+    for s in range(start, args.steps):
+        toks, labels = data_mod.batch_at(dcfg, s)
+        loss, params, opt_state = step_fn(
+            params, opt_state,
+            {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)})
+        if mgr:
+            mgr.maybe_save(s + 1, {"p": params, "o": opt_state})
+        if s % args.log_every == 0 or s == args.steps - 1:
+            dt = (time.time() - t0) / max(s - start + 1, 1)
+            print(f"step {s:5d} loss {float(loss):.4f} ({dt*1e3:.0f} ms/step)",
+                  flush=True)
+    if mgr:
+        mgr.maybe_save(args.steps, {"p": params, "o": opt_state}, force=True)
+        mgr.finalize()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

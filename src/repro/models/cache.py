@@ -1,0 +1,128 @@
+"""Decode-time caches (KV, SSM state, sliding-window ring buffers).
+
+Caches are plain dicts of arrays so they thread through jit/scan and can be
+donated. Layout:
+
+  dense/moe/vlm : k/v           (L, B, S, KV, hd) [+ k_scale/v_scale for int8]
+  ssm (rwkv6)   : tm/cm         (L, B, d)          wkv (L, B, H, hd, hd) f32
+  hybrid        : h             (G, every, B, nh, hd, N) f32
+                  conv          (G, every, B, cw-1, ch)
+                  ak/av         (G, B, W, KV, hd)   ring-buffer window KV
+                  apos          (W,) absolute position per ring slot
+  audio         : k/v (self) + ck/cv (cross, filled at prefill)
+  all           : "pos"         () int32 — tokens already in cache
+
+int8 KV quantization: per (layer, batch, position, kv-head) max-abs scale;
+halves decode HBM traffic and cache footprint (beyond-paper optimization).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+F32 = jnp.float32
+
+
+def kv_dtype(quant: bool):
+    return jnp.int8 if quant else jnp.bfloat16
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_quant: bool = False, dtype=None) -> Dict[str, jax.Array]:
+    L, KV, hd, d = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    dt = dtype or kv_dtype(kv_quant)
+    c: Dict[str, jax.Array] = {"pos": jnp.zeros((), jnp.int32)}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        shp = (L, batch, max_len, KV, hd)
+        c["k"] = jnp.zeros(shp, dt)
+        c["v"] = jnp.zeros(shp, dt)
+        if kv_quant:
+            c["k_scale"] = jnp.zeros((L, batch, max_len, KV, 1), F32)
+            c["v_scale"] = jnp.zeros((L, batch, max_len, KV, 1), F32)
+    elif fam == "ssm" and cfg.rwkv:
+        H = cfg.n_heads
+        sdt = dtype or jnp.bfloat16
+        c["tm"] = jnp.zeros((L, batch, d), sdt)
+        c["cm"] = jnp.zeros((L, batch, d), sdt)
+        c["wkv"] = jnp.zeros((L, batch, H, hd, hd), F32)
+    elif fam == "hybrid":
+        every = cfg.shared_attn_every
+        G = cfg.n_layers // every
+        di, N = cfg.d_inner, cfg.ssm_state
+        nh = di // cfg.ssm_head_dim
+        W = min(cfg.sliding_window or max_len, max_len)
+        sdt = dtype or jnp.bfloat16
+        c["h"] = jnp.zeros((G, every, batch, nh, cfg.ssm_head_dim, N), F32)
+        c["conv"] = jnp.zeros((G, every, batch, cfg.ssm_conv - 1, di + 2 * N),
+                              sdt)
+        c["ak"] = jnp.zeros((G, batch, W, KV, hd), sdt)
+        c["av"] = jnp.zeros((G, batch, W, KV, hd), sdt)
+        c["apos"] = jnp.full((W,), -1, jnp.int32)
+    elif fam == "audio":
+        shp = (L, batch, max_len, KV, hd)
+        c["k"] = jnp.zeros(shp, dt)
+        c["v"] = jnp.zeros(shp, dt)
+        if kv_quant:
+            c["k_scale"] = jnp.zeros((L, batch, max_len, KV, 1), F32)
+            c["v_scale"] = jnp.zeros((L, batch, max_len, KV, 1), F32)
+        sdt = dtype or jnp.bfloat16
+        c["ck"] = jnp.zeros((L, batch, cfg.cross_kv_len, KV, hd), sdt)
+        c["cv"] = jnp.zeros((L, batch, cfg.cross_kv_len, KV, hd), sdt)
+        c["cross_len"] = jnp.zeros((), jnp.int32)
+    else:
+        raise ValueError(fam)
+    return c
+
+
+def cache_logical_axes(cfg: ModelConfig) -> Dict[str, tuple]:
+    fam = cfg.family
+    ax: Dict[str, tuple] = {"pos": ()}
+    if fam in ("dense", "moe", "vlm", "audio"):
+        kv = ("layers", "batch", "kv_seq", "kv_heads", None)
+        ax["k"] = ax["v"] = kv
+        ax["k_scale"] = ax["v_scale"] = kv
+        if fam == "audio":
+            ax["ck"] = ax["cv"] = ("layers", "batch", None, "kv_heads", None)
+            ax["cross_len"] = ()
+    elif fam == "ssm":
+        ax["tm"] = ax["cm"] = ("layers", "batch", None)
+        ax["wkv"] = ("layers", "batch", "heads", None, None)
+    elif fam == "hybrid":
+        ax["h"] = ("layers", None, "batch", "heads", None, None)
+        ax["conv"] = ("layers", None, "batch", None, "ssm_inner")
+        ax["ak"] = ax["av"] = ("layers", "batch", "kv_seq", "kv_heads", None)
+        ax["apos"] = ("kv_seq",)
+    return ax
+
+
+def quantize_kv(x):
+    """x: (..., hd) bf16 -> (int8 values, f32 scale (..., 1))."""
+    amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(F32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def write_kv(cache_k, cache_v, k_new, v_new, pos, k_scale=None, v_scale=None):
+    """Write one token's k/v (B, 1, KV, hd) at ``pos`` into (B, S, KV, hd).
+
+    Returns updated (k, v[, k_scale, v_scale]) — quantizes if scales given.
+    """
+    if k_scale is not None:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, kq, pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, vq, pos, axis=1)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, pos, axis=1)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, pos, axis=1)
+        return cache_k, cache_v, k_scale, v_scale
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+    return cache_k, cache_v, None, None

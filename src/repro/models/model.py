@@ -1,0 +1,211 @@
+"""Model parameter templates, init, and abstract (dry-run) instantiation.
+
+``param_specs(cfg)`` builds a pytree of ``PSpec(shape, axes, init)`` covering
+the whole model; from it we derive
+  - ``init_params(cfg, key)``     real arrays (CPU smoke tests / examples)
+  - ``abstract_params(cfg)``      ShapeDtypeStructs (dry-run lowering)
+  - ``logical_axes(cfg)``         logical-axis tuples for sharding rules
+
+Stacked per-layer params carry a leading "layers" dim and are consumed with
+lax.scan.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+class PSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Any, ...]  # logical axis names (None = replicated dim)
+    init: str = "normal"   # normal | zeros | ones | small
+
+
+def _attn_specs(cfg: ModelConfig, L: int, prefix_axes=("layers",)):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pa = prefix_axes
+    Ls = (L,) if L else ()
+    sp = {
+        "wq": PSpec(Ls + (d, H * hd), pa + ("fsdp", "qkv_out")),
+        "wk": PSpec(Ls + (d, KV * hd), pa + ("fsdp", "kv_out")),
+        "wv": PSpec(Ls + (d, KV * hd), pa + ("fsdp", "kv_out")),
+        "wo": PSpec(Ls + (H * hd, d), pa + ("qkv_out", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = PSpec(Ls + (H * hd,), pa + ("qkv_out",), "zeros")
+        sp["bk"] = PSpec(Ls + (KV * hd,), pa + ("kv_out",), "zeros")
+        sp["bv"] = PSpec(Ls + (KV * hd,), pa + ("kv_out",), "zeros")
+    return sp
+
+
+def _mlp_specs(cfg: ModelConfig, L: int, prefix_axes=("layers",)):
+    d, ff = cfg.d_model, cfg.d_ff
+    pa = prefix_axes
+    Ls = (L,) if L else ()
+    sp = {
+        "up": PSpec(Ls + (d, ff), pa + ("fsdp", "mlp")),
+        "down": PSpec(Ls + (ff, d), pa + ("mlp", "fsdp")),
+    }
+    if cfg.gated_mlp:
+        sp["gate"] = PSpec(Ls + (d, ff), pa + ("fsdp", "mlp"))
+    return sp
+
+
+def _moe_specs(cfg: ModelConfig, L: int):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    sp = {
+        "router": PSpec((L, d, E), ("layers", None, None), "small"),
+        "up": PSpec((L, E, d, ff), ("layers", "experts", None, "moe_ff")),
+        "down": PSpec((L, E, ff, d), ("layers", "experts", "moe_ff", None)),
+    }
+    if cfg.gated_mlp:
+        sp["gate"] = PSpec((L, E, d, ff), ("layers", "experts", None, "moe_ff"))
+    return sp
+
+
+def _mamba_specs(cfg: ModelConfig, L: int, extra=()):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    k_in = 2 * di + 2 * N + nh
+    pa = ("layers",) + tuple(None for _ in extra)
+    Ls = (L,) + tuple(extra)
+    return {
+        "in_proj": PSpec(Ls + (d, k_in), pa + ("fsdp", "ssm_inner")),
+        "conv_w": PSpec(Ls + (cfg.ssm_conv, di + 2 * N), pa + ("conv", "ssm_inner")),
+        "A_log": PSpec(Ls + (nh,), pa + (None,), "ones"),
+        "dt_bias": PSpec(Ls + (nh,), pa + (None,), "zeros"),
+        "D": PSpec(Ls + (nh,), pa + (None,), "ones"),
+        "norm": PSpec(Ls + (di,), pa + ("ssm_inner",), "zeros"),
+        "out_proj": PSpec(Ls + (di, d), pa + ("ssm_inner", "fsdp")),
+    }
+
+
+def _rwkv_specs(cfg: ModelConfig, L: int):
+    d, ff, H, hd = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.head_dim
+    pa = ("layers",)
+    Ls = (L,)
+    sp = {}
+    for mu in ("mu_r", "mu_k", "mu_v", "mu_g", "mu_w", "cmu_k", "cmu_r"):
+        sp[mu] = PSpec(Ls + (d,), pa + (None,), "zeros")
+    for w in ("wr", "wk", "wv", "wg", "wo"):
+        sp[w] = PSpec(Ls + (d, d), pa + ("fsdp", "ssm_inner"))
+    sp["w0"] = PSpec(Ls + (d,), pa + (None,), "zeros")
+    sp["w1"] = PSpec(Ls + (d, 64), pa + ("fsdp", None), "small")
+    sp["w2"] = PSpec(Ls + (64, d), pa + (None, None), "small")
+    sp["u"] = PSpec(Ls + (d,), pa + (None,), "zeros")
+    sp["ln_w"] = PSpec(Ls + (d,), pa + (None,), "ones")
+    sp["ln_b"] = PSpec(Ls + (d,), pa + (None,), "zeros")
+    sp["ck"] = PSpec(Ls + (d, ff), pa + ("fsdp", "mlp"))
+    sp["cv"] = PSpec(Ls + (ff, d), pa + ("mlp", "fsdp"))
+    sp["cr"] = PSpec(Ls + (d, d), pa + ("fsdp", None))
+    sp["ln1"] = PSpec(Ls + (d,), pa + ("embed",), "zeros")
+    sp["ln2"] = PSpec(Ls + (d,), pa + ("embed",), "zeros")
+    return sp
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, V, L = cfg.d_model, cfg.padded_vocab, cfg.n_layers
+    specs: Dict[str, Any] = {
+        "embed": PSpec((V, d), ("vocab", None)),
+        "final_norm": PSpec((d,), ("embed",), "zeros"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = PSpec((V, d), ("vocab", None))
+
+    def decoder_layer_stack(L):
+        sp = {
+            "ln1": PSpec((L, d), ("layers", "embed"), "zeros"),
+            "ln2": PSpec((L, d), ("layers", "embed"), "zeros"),
+            "attn": _attn_specs(cfg, L),
+        }
+        if cfg.is_moe:
+            sp["moe"] = _moe_specs(cfg, L)
+        else:
+            sp["mlp"] = _mlp_specs(cfg, L)
+        return sp
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        specs["layers"] = decoder_layer_stack(L)
+    elif fam == "ssm" and cfg.rwkv:
+        specs["layers"] = _rwkv_specs(cfg, L)
+    elif fam == "hybrid":
+        every = cfg.shared_attn_every
+        G = L // every
+        specs["layers"] = _mamba_specs(cfg, G, extra=(every,))
+        specs["shared_attn"] = {
+            "ln1": PSpec((d,), ("embed",), "zeros"),
+            "ln2": PSpec((d,), ("embed",), "zeros"),
+            "attn": _attn_specs(cfg, 0, prefix_axes=()),
+            "mlp": _mlp_specs(cfg, 0, prefix_axes=()),
+        }
+    elif fam == "audio":
+        specs["enc_layers"] = {
+            "ln1": PSpec((cfg.n_enc_layers, d), ("layers", "embed"), "zeros"),
+            "ln2": PSpec((cfg.n_enc_layers, d), ("layers", "embed"), "zeros"),
+            "attn": _attn_specs(cfg, cfg.n_enc_layers),
+            "mlp": _mlp_specs(cfg, cfg.n_enc_layers),
+        }
+        specs["enc_norm"] = PSpec((d,), ("embed",), "zeros")
+        specs["layers"] = {
+            "ln1": PSpec((L, d), ("layers", "embed"), "zeros"),
+            "ln2": PSpec((L, d), ("layers", "embed"), "zeros"),
+            "ln3": PSpec((L, d), ("layers", "embed"), "zeros"),
+            "attn": _attn_specs(cfg, L),
+            "cross": _attn_specs(cfg, L),
+            "mlp": _mlp_specs(cfg, L),
+        }
+    else:
+        raise ValueError(fam)
+    return specs
+
+
+# --------------------------------------------------------------------- #
+def _leaf_key(key, path):
+    h = int(hashlib.md5(path.encode()).hexdigest()[:8], 16)
+    return jax.random.fold_in(key, h)
+
+
+def init_params(cfg: ModelConfig, key, dtype=None):
+    dtype = dtype or cfg.dtype
+    specs = param_specs(cfg)
+
+    def make(path, spec: PSpec):
+        k = _leaf_key(key, jax.tree_util.keystr(path))
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        scale = 0.02 if spec.init == "normal" else 0.006
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        scale = min(scale, 1.0 / np.sqrt(max(fan_in, 1)))
+        return (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree_util.tree_map_with_path(make, specs,
+                                            is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    dtype = dtype or cfg.dtype
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), param_specs(cfg),
+        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def logical_axes(cfg: ModelConfig):
+    return jax.tree_util.tree_map(lambda s: s.axes, param_specs(cfg),
+                                  is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def param_shardings(cfg: ModelConfig, rules):
+    """NamedSharding tree from the active rules."""
+    specs = param_specs(cfg)
+    return jax.tree_util.tree_map(
+        lambda s: rules.sharding(s.axes, s.shape), specs,
+        is_leaf=lambda x: isinstance(x, PSpec))

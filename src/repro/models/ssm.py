@@ -1,0 +1,242 @@
+"""SSM blocks: Mamba2 (SSD, chunked) and RWKV-6 (Finch, chunked linear
+attention with data-dependent per-channel decay).
+
+Both provide a parallel chunked form for train/prefill (lax.scan over chunks,
+O(S/Q * Q^2) work, TPU-friendly dense tiles) and an O(1)-state recurrent step
+for decode. All recurrent state is float32.
+
+Stability note: every exponential is an exponential of a *difference* of
+cumulative log-decays within one chunk, so arguments are <= 0 and the math is
+overflow-free by construction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _chunk(x, q):
+    """(B, S, ...) -> (nc, B, q, ...) for lax.scan over chunks."""
+    B, S = x.shape[:2]
+    nc = S // q
+    return jnp.moveaxis(x.reshape(B, nc, q, *x.shape[2:]), 1, 0)
+
+
+def _unchunk(x):
+    """(nc, B, q, ...) -> (B, nc*q, ...)."""
+    nc, B, q = x.shape[:3]
+    return jnp.moveaxis(x, 0, 1).reshape(B, nc * q, *x.shape[3:])
+
+
+# ======================================================================== #
+# Mamba2 (SSD)                                                             #
+# ======================================================================== #
+class Mamba2State(NamedTuple):
+    h: jax.Array      # (B, nh, hd, N) f32 SSM state
+    conv: jax.Array   # (B, conv_w-1, di+2N) conv tail
+
+
+def _mamba2_split(zxbcdt, cfg):
+    di, N = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    return z, xBC, dt, nh
+
+
+def _causal_conv(xBC, w, prev_tail=None):
+    """Depthwise causal conv over seq. xBC: (B, S, ch); w: (cw, ch).
+
+    prev_tail: (B, cw-1, ch) decode/chunk continuation state or None (zeros).
+    Returns conv output (B, S, ch) and the new tail.
+    """
+    B, S, ch = xBC.shape
+    cw = w.shape[0]
+    if prev_tail is None:
+        prev_tail = jnp.zeros((B, cw - 1, ch), xBC.dtype)
+    xp = jnp.concatenate([prev_tail, xBC], axis=1)
+    out = sum(xp[:, i:i + S, :] * w[i] for i in range(cw))
+    return jax.nn.silu(out.astype(F32)).astype(xBC.dtype), xp[:, -(cw - 1):, :]
+
+
+def mamba2_forward(x, p, cfg, state: Mamba2State = None, chunk: int = 128):
+    """Parallel chunked SSD. x: (B, S, d) -> (y (B,S,d), final state)."""
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"],
+                        preferred_element_type=F32).astype(x.dtype)
+    z, xBC, dt, nh = _mamba2_split(zxbcdt, cfg)
+    conv_tail = state.conv if state is not None else None
+    xBC, new_tail = _causal_conv(xBC, p["conv_w"], conv_tail)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)  # (B,S,di) (B,S,N) (B,S,N)
+    xs = xs.reshape(B, S, nh, hd)
+    A = -jnp.exp(p["A_log"].astype(F32))  # (nh,)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))  # (B,S,nh)
+    la = dt * A  # log decay per step (B, S, nh), <= 0
+    xbar = xs.astype(F32) * dt[..., None]  # (B,S,nh,hd)
+
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    h0 = (state.h if state is not None
+          else jnp.zeros((B, nh, hd, N), F32))
+
+    xbar_c, la_c = _chunk(xbar, chunk), _chunk(la, chunk)
+    B_c, C_c = _chunk(Bm.astype(F32), chunk), _chunk(Cm.astype(F32), chunk)
+
+    def step(h, inp):
+        xb, lac, Bc, Cc = inp  # (B,q,nh,hd) (B,q,nh) (B,q,N) (B,q,N)
+        q = lac.shape[1]
+        cum = jnp.cumsum(lac, axis=1)  # inclusive (B,q,nh)
+        # intra-chunk: y_i += sum_{j<=i} exp(cum_i - cum_j) (C_i.B_j) xbar_j
+        gates = cum[:, :, None, :] - cum[:, None, :, :]  # (B,q_i,q_j,nh)
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        gates = jnp.where(mask[None, :, :, None], gates, -jnp.inf)
+        cb = jnp.einsum("bin,bjn->bij", Cc, Bc)  # (B,q_i,q_j)
+        w = jnp.exp(gates) * cb[..., None]  # (B,qi,qj,nh)
+        y_intra = jnp.einsum("bijh,bjhe->bihe", w, xb)
+        # inter-chunk: y_i += exp(cum_i) * C_i . h
+        dec_i = jnp.exp(cum)  # (B,q,nh)
+        y_inter = jnp.einsum("bqn,bhen,bqh->bqhe", Cc, h, dec_i)
+        # state update: h' = exp(cum_Q) h + sum_j exp(cum_Q - cum_j) xbar_j B_j
+        dec_q = jnp.exp(cum[:, -1:, :] - cum)  # (B,q,nh)
+        h_new = (jnp.exp(cum[:, -1, :])[:, :, None, None] * h +
+                 jnp.einsum("bqh,bqhe,bqn->bhen", dec_q, xb, Bc))
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(jax.checkpoint(step), h0,
+                               (xbar_c, la_c, B_c, C_c))
+    y = _unchunk(ys)  # (B, S, nh, hd) f32
+    y = y + p["D"].astype(F32)[None, None, :, None] * xs.astype(F32)
+    y = y.reshape(B, S, di)
+    # gated RMSNorm (mamba2 style): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * (1.0 + p["norm"].astype(F32))
+    out = jnp.einsum("bsk,kd->bsd", y.astype(x.dtype), p["out_proj"],
+                     preferred_element_type=F32)
+    return out.astype(x.dtype), Mamba2State(h_final, new_tail)
+
+
+def mamba2_decode_step(x_t, p, cfg, state: Mamba2State):
+    """x_t: (B, 1, d) single-token recurrent step."""
+    y, new_state = mamba2_forward(x_t, p, cfg, state, chunk=1)
+    return y, new_state
+
+
+def mamba2_init_state(cfg, batch: int) -> Mamba2State:
+    di, N = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    return Mamba2State(
+        h=jnp.zeros((batch, nh, cfg.ssm_head_dim, N), F32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), jnp.bfloat16),
+    )
+
+
+# ======================================================================== #
+# RWKV-6 (Finch)                                                           #
+# ======================================================================== #
+class RWKV6State(NamedTuple):
+    shift_tm: jax.Array  # (B, d) previous token (time mix)
+    shift_cm: jax.Array  # (B, d) previous token (channel mix)
+    wkv: jax.Array       # (B, H, dk, dv) f32
+
+
+def _token_shift(x, prev):
+    """x: (B,S,d); prev: (B,d) -> shifted (B,S,d), new prev (B,d)."""
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted, x[:, -1, :]
+
+
+def rwkv6_time_mix(x, p, cfg, state: RWKV6State, chunk: int = 64):
+    """RWKV-6 time mixing with data-dependent decay. x: (B,S,d)."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    xx, new_shift = _token_shift(x, state.shift_tm)
+
+    def mix(mu):
+        return x + (xx - x) * mu
+
+    r = jnp.einsum("bsd,de->bse", mix(p["mu_r"]), p["wr"],
+                   preferred_element_type=F32).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", mix(p["mu_k"]), p["wk"],
+                   preferred_element_type=F32).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", mix(p["mu_v"]), p["wv"],
+                   preferred_element_type=F32).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mix(p["mu_g"]), p["wg"],
+                               preferred_element_type=F32))
+    # data-dependent decay (the Finch contribution):
+    wx = mix(p["mu_w"])
+    dd = jnp.einsum("bsd,dk->bsk", wx, p["w1"], preferred_element_type=F32)
+    dd = jnp.einsum("bsk,kd->bsd", jnp.tanh(dd), p["w2"],
+                    preferred_element_type=F32)
+    lw = -jnp.exp(p["w0"].astype(F32) + dd)  # (B,S,d) log-decay, < 0
+    lw = lw.reshape(B, S, H, hd)
+    u = p["u"].astype(F32).reshape(H, hd)  # per-channel bonus
+
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+
+    r_c, k_c, v_c, lw_c = (_chunk(a, chunk) for a in (r, k, v, lw))
+
+    def step(Sst, inp):
+        rc, kc, vc, lwc = inp  # (B,q,H,hd)
+        q = rc.shape[1]
+        cum = jnp.cumsum(lwc, axis=1)  # (B,q,H,hd) inclusive
+        pw = cum - lwc  # exclusive cumsum
+        # intra: strictly-lower pairs + diag bonus u
+        gates = pw[:, :, None] - cum[:, None, :]  # (B,qi,qj,H,hd)
+        mask = jnp.tril(jnp.ones((q, q), bool), k=-1)
+        gates = jnp.where(mask[None, :, :, None, None], gates, -jnp.inf)
+        A = jnp.einsum("bihc,bijhc,bjhc->bijh", rc, jnp.exp(gates), kc)
+        A += jnp.einsum("bihc,hc,bihc->bih", rc, u, kc)[:, :, None, :] * \
+            jnp.eye(q)[None, :, :, None]
+        y = jnp.einsum("bijh,bjhv->bihv", A, vc)
+        # inter: r_i decayed-from-chunk-start against carried state
+        y += jnp.einsum("bihc,bhcv->bihv", rc * jnp.exp(pw), Sst)
+        # state update
+        decay_rest = jnp.exp(cum[:, -1:, :] - cum)  # (B,q,H,hd)
+        S_new = (jnp.exp(cum[:, -1])[..., None] * Sst +
+                 jnp.einsum("bqhc,bqhv->bhcv", kc * decay_rest, vc))
+        return S_new, y
+
+    wkv0 = state.wkv
+    S_final, ys = jax.lax.scan(jax.checkpoint(step), wkv0,
+                               (r_c, k_c, v_c, lw_c))
+    y = _unchunk(ys)  # (B,S,H,hd) f32
+    # per-head groupnorm, then gate and output-project
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = (y * p["ln_w"].astype(F32).reshape(H, hd) +
+         p["ln_b"].astype(F32).reshape(H, hd))
+    y = (y.reshape(B, S, H * hd) * g).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"], preferred_element_type=F32)
+    return out.astype(x.dtype), RWKV6State(new_shift, state.shift_cm, S_final)
+
+
+def rwkv6_channel_mix(x, p, cfg, state: RWKV6State):
+    xx, new_shift = _token_shift(x, state.shift_cm)
+    xk = x + (xx - x) * p["cmu_k"]
+    xr = x + (xx - x) * p["cmu_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["ck"], preferred_element_type=F32)
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("bsf,fd->bsd", k.astype(x.dtype), p["cv"],
+                   preferred_element_type=F32)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cr"],
+                                  preferred_element_type=F32))
+    out = (r * v).astype(x.dtype)
+    return out, RWKV6State(state.shift_tm, new_shift, state.wkv)
+
+
+def rwkv6_init_state(cfg, batch: int) -> RWKV6State:
+    return RWKV6State(
+        shift_tm=jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+        shift_cm=jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+        wkv=jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim), F32),
+    )

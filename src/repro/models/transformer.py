@@ -1,0 +1,483 @@
+"""Model forward passes: train/prefill (parallel) and decode (incremental).
+
+One ``forward`` covers dense / moe / vlm decoder LMs, rwkv6, zamba2 hybrid,
+and the audio encoder-decoder; ``decode_step`` is the serving-side single
+token step. Layers run under lax.scan over stacked params (compile-time O(1)
+in depth); train wraps the layer body in jax.checkpoint.
+
+Coupled multi-LoRA (S-LoRA-style batched adapters) threads through
+``lora_ctx``; the disaggregated client path instead passes ``lora_ctx=None``
+and exports hook activations (see repro.core.disagg).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import cache as cache_mod
+from repro.models import layers as ll
+from repro.models import moe as moe_mod
+from repro.models import ssm
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------- #
+# LoRA helpers (coupled path)                                             #
+# --------------------------------------------------------------------- #
+def _lora_slice(lora_ctx, names):
+    """Pull per-layer adapter stacks for scan xs; None if absent."""
+    if lora_ctx is None:
+        return None
+    out = {}
+    for n in names:
+        if n in lora_ctx["adapters"]:
+            out[n] = lora_ctx["adapters"][n]
+    return out or None
+
+
+def _delta(xf, lora_layer, name, ids_tok, scale):
+    if lora_layer is None or name not in lora_layer:
+        return None
+    from repro.kernels import ops
+    ab = lora_layer[name]
+    return ops.bgmv(xf, ab["A"], ab["B"], ids_tok) * scale
+
+
+# --------------------------------------------------------------------- #
+# Attention block (shared by all attention-bearing families)             #
+# --------------------------------------------------------------------- #
+def attn_block(x, ap, cfg, positions, *, causal=True, window=0,
+               kv_override=None, rope=True, lora_layer=None, ids_tok=None,
+               lora_scale=1.0):
+    """x: (B, S, d). Returns (y, (k, v)) — k/v post-RoPE for caching.
+
+    kv_override: (k, v) tensors to attend over instead of self-derived
+    (cross-attention); then only q is computed from x.
+    """
+    B, S, d = x.shape
+    if S > 1:
+        # single sequence-parallel gather point: gather the residual ONCE
+        # here instead of per projection (§Perf opt-B: per-projection
+        # gathers tripled the all-gather volume on 72B train)
+        x = constrain(x, "batch", None, "embed")
+    q, k, v = ll.qkv_project(x, ap, cfg)
+    if lora_layer is not None:
+        xf = x.reshape(-1, d)
+        for name, tgt, shape in (("q", q, (B, S, cfg.n_heads, cfg.head_dim)),
+                                 ("k", k, (B, S, cfg.n_kv_heads, cfg.head_dim)),
+                                 ("v", v, (B, S, cfg.n_kv_heads, cfg.head_dim))):
+            dlt = _delta(xf, lora_layer, name, ids_tok, lora_scale)
+            if dlt is not None:
+                if name == "q":
+                    q = q + dlt.reshape(shape).astype(q.dtype)
+                elif name == "k":
+                    k = k + dlt.reshape(shape).astype(k.dtype)
+                else:
+                    v = v + dlt.reshape(shape).astype(v.dtype)
+    if rope:
+        q = ll.apply_rope(q, positions, cfg.rope_theta)
+        k = ll.apply_rope(k, positions, cfg.rope_theta)
+    if kv_override is not None:
+        k, v = kv_override
+        attn = ll.causal_attention(q, k, v, causal=False, window=0)
+    else:
+        attn = ll.causal_attention(q, k, v, causal=causal, window=window)
+    y = ll.out_project(attn, ap)
+    if lora_layer is not None:
+        dlt = _delta(attn.reshape(B * S, -1), lora_layer, "o", ids_tok,
+                     lora_scale)
+        if dlt is not None:
+            y = y + dlt.reshape(B, S, d).astype(y.dtype)
+    return y, (k, v)
+
+
+def _mlp_with_lora(h, mp, cfg, lora_layer, ids_tok, lora_scale):
+    """Exact multi-LoRA MLP: adapters perturb gate/up/down weights."""
+    has = lora_layer is not None and any(n in lora_layer
+                                         for n in ("gate", "up", "down"))
+    if not has:
+        return ll.mlp(h, mp, cfg)
+    B, S, d = h.shape
+    xf = h.reshape(-1, d)
+
+    def with_delta(base, name):
+        dlt = _delta(xf, lora_layer, name, ids_tok, lora_scale)
+        return base if dlt is None else base + dlt.reshape(base.shape)
+
+    if cfg.gated_mlp:
+        g = with_delta(jnp.einsum("bsd,df->bsf", h, mp["gate"],
+                                  preferred_element_type=F32), "gate")
+        u = with_delta(jnp.einsum("bsd,df->bsf", h, mp["up"],
+                                  preferred_element_type=F32), "up")
+        act = (jax.nn.silu(g) * u).astype(h.dtype)
+    else:
+        u = with_delta(jnp.einsum("bsd,df->bsf", h, mp["up"],
+                                  preferred_element_type=F32), "up")
+        act = jax.nn.gelu(u).astype(h.dtype)
+    y = jnp.einsum("bsf,fd->bsd", act, mp["down"], preferred_element_type=F32)
+    dlt = _delta(act.reshape(B * S, -1), lora_layer, "down", ids_tok,
+                 lora_scale)
+    if dlt is not None:
+        y = y + dlt.reshape(y.shape)
+    return y.astype(h.dtype)
+
+
+# --------------------------------------------------------------------- #
+# Decoder-only LM (dense / moe / vlm)                                    #
+# --------------------------------------------------------------------- #
+def _decoder_layer(x, lp, lora_layer, cfg, positions, kind, ids_tok,
+                   lora_scale, collect_kv):
+    h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    att, kv = attn_block(h, lp["attn"], cfg, positions,
+                         window=cfg.sliding_window,
+                         lora_layer=lora_layer, ids_tok=ids_tok,
+                         lora_scale=lora_scale)
+    x = constrain(x + att, "batch", "seq", "embed")
+    h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        y = moe_mod.moe_block(h, lp["moe"], cfg, kind=kind,
+                              lora=lora_layer, ids_tok=ids_tok,
+                              lora_scale=lora_scale)
+    else:
+        y = _mlp_with_lora(h, lp["mlp"], cfg, lora_layer, ids_tok, lora_scale)
+    x = constrain(x + y, "batch", "seq", "embed")
+    return x, (kv if collect_kv else None)
+
+
+def _embed_inputs(params, cfg, tokens, frontend_emb):
+    x = ll.embed(tokens, params["embed"])
+    if cfg.frontend and frontend_emb is not None:
+        x = jnp.concatenate([frontend_emb.astype(x.dtype), x], axis=1)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def forward(params, cfg, tokens, frontend_emb=None, kind="train",
+            lora_ctx=None, collect_kv=False):
+    """Parallel forward. tokens: (B, S_text); frontend_emb: (B, S_front, d).
+
+    Returns (logits (B, S, V), aux) where aux holds per-layer K/V stacks when
+    collect_kv (prefill) or SSM final states for recurrent families.
+    """
+    fam = cfg.family
+    if fam == "audio":
+        return _forward_encdec(params, cfg, tokens, frontend_emb, kind,
+                               collect_kv)
+    if fam == "ssm" and cfg.rwkv:
+        return _forward_rwkv(params, cfg, tokens, kind)
+    if fam == "hybrid":
+        return _forward_hybrid(params, cfg, tokens, kind, collect_kv)
+
+    x = _embed_inputs(params, cfg, tokens, frontend_emb)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    ids_tok = None
+    lora_scale = 1.0
+    if lora_ctx is not None:
+        ids_tok = jnp.repeat(lora_ctx["ids"], S)
+        lora_scale = lora_ctx["scale"]
+    lora_stack = _lora_slice(lora_ctx, ("q", "k", "v", "o", "gate", "up",
+                                        "down"))
+
+    def body(x, xs):
+        lp, lora_layer = xs
+        return _decoder_layer(x, lp, lora_layer, cfg, positions, kind,
+                              ids_tok, lora_scale, collect_kv)
+
+    if kind == "train":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, kvs = jax.lax.scan(body, x, (params["layers"], lora_stack))
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params.get("lm_head", params["embed"]))
+    return logits, kvs
+
+
+# --------------------------------------------------------------------- #
+# RWKV-6                                                                  #
+# --------------------------------------------------------------------- #
+def _forward_rwkv(params, cfg, tokens, kind):
+    x = ll.embed(tokens, params["embed"])
+    x = constrain(x, "batch", None, "embed")
+    B, S, d = x.shape
+    state0 = ssm.rwkv6_init_state(cfg, B)
+
+    def body(x, lp):
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, st = ssm.rwkv6_time_mix(h, lp, cfg, state0)
+        x = x + y
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, st2 = ssm.rwkv6_channel_mix(h, lp, cfg, st)
+        x = x + y
+        return constrain(x, "batch", None, "embed"), \
+            (st2.shift_tm, st2.shift_cm, st2.wkv)
+
+    if kind == "train":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, states = jax.lax.scan(body, x, params["layers"])
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params.get("lm_head", params["embed"]))
+    return logits, states
+
+
+# --------------------------------------------------------------------- #
+# Zamba2 hybrid (mamba2 backbone + weight-shared attention blocks)        #
+# --------------------------------------------------------------------- #
+def _shared_block(x, sp, cfg, positions, window):
+    h = ll.rms_norm(x, sp["ln1"], cfg.norm_eps)
+    att, kv = attn_block(h, sp["attn"], cfg, positions, window=window)
+    x = x + att
+    h = ll.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    x = x + ll.mlp(h, sp["mlp"], cfg)
+    return x, kv
+
+
+def _forward_hybrid(params, cfg, tokens, kind, collect_kv):
+    x = ll.embed(tokens, params["embed"])
+    x = constrain(x, "batch", None, "embed")
+    B, S, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    window = cfg.sliding_window
+    sp = params["shared_attn"]
+
+    def mamba_body(x, lp):
+        y, st = ssm.mamba2_forward(x, lp, cfg, None)
+        return x + y, (st.h, st.conv)
+
+    if kind == "train":
+        mamba_body = jax.checkpoint(
+            mamba_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def group(x, glp):
+        x, kv = _shared_block(x, sp, cfg, positions, window)
+        x, states = jax.lax.scan(mamba_body, x, glp)
+        return x, (kv if collect_kv else None, states if collect_kv else None)
+
+    x, aux = jax.lax.scan(group, x, params["layers"])
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params.get("lm_head", params["embed"]))
+    return logits, aux
+
+
+# --------------------------------------------------------------------- #
+# Audio encoder-decoder (frontend embeddings -> encoder -> decoder)      #
+# --------------------------------------------------------------------- #
+def _forward_encdec(params, cfg, tokens, frontend_emb, kind, collect_kv):
+    # encoder: bidirectional over frontend frames
+    enc = constrain(frontend_emb.astype(jnp.bfloat16), "batch", "seq", "embed")
+    B, Se, d = enc.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+    def enc_body(x, lp):
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        att, _ = attn_block(h, lp["attn"], cfg, enc_pos, causal=False)
+        x = x + att
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = constrain(x + ll.mlp(h, lp["mlp"], cfg), "batch", "seq", "embed")
+        return x, None
+
+    if kind == "train":
+        enc_body = jax.checkpoint(
+            enc_body, policy=jax.checkpoint_policies.nothing_saveable)
+    enc, _ = jax.lax.scan(enc_body, enc, params["enc_layers"])
+    enc = ll.rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+
+    # decoder
+    x = ll.embed(tokens, params["embed"])
+    x = constrain(x, "batch", "seq", "embed")
+    B, Sd, _ = x.shape
+    dec_pos = jnp.broadcast_to(jnp.arange(Sd, dtype=jnp.int32), (B, Sd))
+
+    def dec_body(x, lp):
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        att, kv = attn_block(h, lp["attn"], cfg, dec_pos)
+        x = x + att
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        # cross-attention: k/v from encoder output via this layer's weights
+        _, ck, cv = ll.qkv_project(enc, lp["cross"], cfg)
+        catt, _ = attn_block(h, lp["cross"], cfg, dec_pos, rope=False,
+                             kv_override=(ck, cv))
+        x = x + catt
+        h = ll.rms_norm(x, lp["ln3"], cfg.norm_eps)
+        x = constrain(x + ll.mlp(h, lp["mlp"], cfg), "batch", "seq", "embed")
+        return x, ((kv, (ck, cv)) if collect_kv else None)
+
+    if kind == "train":
+        dec_body = jax.checkpoint(
+            dec_body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, kvs = jax.lax.scan(dec_body, x, params["layers"])
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params.get("lm_head", params["embed"]))
+    return logits, kvs
+
+
+# --------------------------------------------------------------------- #
+# Decode step (one token, all families)                                  #
+# --------------------------------------------------------------------- #
+def decode_step(params, cfg, cache, tokens, lora_ctx=None):
+    """tokens: (B, 1). Returns (logits (B, V), new cache)."""
+    fam = cfg.family
+    pos = cache["pos"]
+    B = tokens.shape[0]
+    x = ll.embed(tokens, params["embed"])
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+    ids_tok = lora_ctx["ids"] if lora_ctx is not None else None
+    lora_scale = lora_ctx["scale"] if lora_ctx is not None else 1.0
+    lora_stack = _lora_slice(lora_ctx, ("q", "k", "v", "o", "gate", "up",
+                                        "down"))
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        new_cache = dict(cache)
+        kv_quant = "k_scale" in cache
+
+        def body(carry, xs):
+            x, k_all, v_all, ks_all, vs_all, l = carry
+            if fam == "audio":
+                lp, ck, cv = xs
+                lora_layer = None
+            else:
+                lp, lora_layer = xs
+            h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = ll.qkv_project(h, lp["attn"], cfg)
+            if fam != "audio" and lora_layer is not None:
+                xf = h.reshape(B, -1)
+                for name in ("q", "k", "v"):
+                    dlt = _delta(xf, lora_layer, name, ids_tok, lora_scale)
+                    if dlt is not None:
+                        if name == "q":
+                            q = q + dlt.reshape(q.shape).astype(q.dtype)
+                        elif name == "k":
+                            k = k + dlt.reshape(k.shape).astype(k.dtype)
+                        else:
+                            v = v + dlt.reshape(v.shape).astype(v.dtype)
+            q = ll.apply_rope(q, positions, cfg.rope_theta)
+            k = ll.apply_rope(k, positions, cfg.rope_theta)
+
+            def layer_slice(buf):
+                return (None if buf is None else
+                        jax.lax.dynamic_index_in_dim(buf, l, 0, keepdims=False))
+
+            def layer_write(buf, new):
+                return (buf if new is None else
+                        jax.lax.dynamic_update_index_in_dim(buf, new, l, 0))
+
+            att, k_c, v_c, ks_c, vs_c, _ = ll.decode_attention_update(
+                q[:, 0], k[:, 0], v[:, 0], layer_slice(k_all),
+                layer_slice(v_all), pos, window=cfg.sliding_window,
+                k_scale=layer_slice(ks_all), v_scale=layer_slice(vs_all))
+            k_all = layer_write(k_all, k_c)
+            v_all = layer_write(v_all, v_c)
+            ks_all = layer_write(ks_all, ks_c)
+            vs_all = layer_write(vs_all, vs_c)
+            att = att[:, None]  # (B, 1, H, hd)
+            y = ll.out_project(att, lp["attn"])
+            if fam != "audio" and lora_layer is not None:
+                dlt = _delta(att.reshape(B, -1), lora_layer, "o", ids_tok,
+                             lora_scale)
+                if dlt is not None:
+                    y = y + dlt.reshape(y.shape).astype(y.dtype)
+            x = x + y
+            if fam == "audio":
+                h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+                cq, _, _ = ll.qkv_project(h, lp["cross"], cfg)
+                catt = ll.decode_attention(cq[:, 0], ck, cv,
+                                           cache["cross_len"])
+                x = x + ll.out_project(catt[:, None], lp["cross"])
+                h = ll.rms_norm(x, lp["ln3"], cfg.norm_eps)
+                y = ll.mlp(h, lp["mlp"], cfg)
+            else:
+                h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+                if cfg.is_moe:
+                    y = moe_mod.moe_block(h, lp["moe"], cfg, kind="decode",
+                                          lora=lora_layer, ids_tok=ids_tok,
+                                          lora_scale=lora_scale)
+                else:
+                    y = _mlp_with_lora(h, lp["mlp"], cfg, lora_layer,
+                                       ids_tok, lora_scale)
+            x = x + y
+            return (x, k_all, v_all, ks_all, vs_all, l + 1), None
+
+        if fam == "audio":
+            xs = (params["layers"], cache["ck"], cache["cv"])
+        else:
+            xs = (params["layers"], lora_stack)
+        carry0 = (x, cache["k"], cache["v"], cache.get("k_scale"),
+                  cache.get("v_scale"), jnp.int32(0))
+        carry, _ = jax.lax.scan(body, carry0, xs)
+        x = carry[0]
+        new_cache["k"], new_cache["v"] = carry[1], carry[2]
+        if kv_quant:
+            new_cache["k_scale"], new_cache["v_scale"] = carry[3], carry[4]
+        new_cache["pos"] = pos + 1
+
+    elif fam == "ssm" and cfg.rwkv:
+        new_cache = dict(cache)
+
+        def body(x, xs):
+            lp, tm, cm, wkv = xs
+            st = ssm.RWKV6State(tm, cm, wkv)
+            h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, st = ssm.rwkv6_time_mix(h, lp, cfg, st, chunk=1)
+            x = x + y
+            h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            y, st = ssm.rwkv6_channel_mix(h, lp, cfg, st)
+            x = x + y
+            return x, (st.shift_tm, st.shift_cm, st.wkv)
+
+        x, states = jax.lax.scan(
+            body, x, (params["layers"], cache["tm"], cache["cm"],
+                      cache["wkv"]))
+        new_cache["tm"], new_cache["cm"], new_cache["wkv"] = states
+        new_cache["pos"] = pos + 1
+
+    elif fam == "hybrid":
+        new_cache = dict(cache)
+        sp = params["shared_attn"]
+        W = cache["ak"].shape[2]
+        slot = pos % W
+
+        def group(carry, xs):
+            x, apos, g = carry
+            glp, h_st, conv_st, ak, av = xs
+            # shared attention block against the ring-buffer window KV
+            h = ll.rms_norm(x, sp["ln1"], cfg.norm_eps)
+            q, k, v = ll.qkv_project(h, sp["attn"], cfg)
+            q = ll.apply_rope(q, positions, cfg.rope_theta)
+            k = ll.apply_rope(k, positions, cfg.rope_theta)
+            att, ak, av, _, _, apos = ll.decode_attention_update(
+                q[:, 0], k[:, 0], v[:, 0], ak, av, pos,
+                window=cfg.sliding_window, key_positions=apos,
+                write_slot=slot)
+            x = x + ll.out_project(att[:, None], sp["attn"])
+            h = ll.rms_norm(x, sp["ln2"], cfg.norm_eps)
+            x = x + ll.mlp(h, sp["mlp"], cfg)
+
+            def mstep(x, ms):
+                lp, hh, cc = ms
+                y, st = ssm.mamba2_decode_step(
+                    x, lp, cfg, ssm.Mamba2State(hh, cc))
+                return x + y, (st.h, st.conv)
+
+            x, states = jax.lax.scan(mstep, x, (glp, h_st, conv_st))
+            return (x, apos, g + 1), (states[0], states[1], ak, av)
+
+        (x, apos, _), aux = jax.lax.scan(
+            group, (x, cache["apos"], jnp.int32(0)),
+            (params["layers"], cache["h"], cache["conv"], cache["ak"],
+             cache["av"]))
+        new_cache["h"], new_cache["conv"] = aux[0], aux[1]
+        new_cache["ak"], new_cache["av"] = aux[2], aux[3]
+        new_cache["apos"] = apos
+        new_cache["pos"] = pos + 1
+    else:
+        raise ValueError(fam)
+
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params.get("lm_head", params["embed"]))
+    return logits[:, 0], new_cache

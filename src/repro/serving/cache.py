@@ -1,0 +1,106 @@
+"""LoRA cache management (paper §5.3 + Fig. 4 LoRA table).
+
+Tracks adapter residency for a cache of M slots (on the LoRA Server in
+disaggregated mode; per-instance in the coupled baseline), with:
+
+  - pin/unpin by active request count (an adapter serving in-flight requests
+    is not evictable — matches the coupled baseline's behavior of waiting
+    for in-flight executions before reclaiming memory)
+  - LRU eviction among unpinned residents
+  - loading timeline: host->HBM staging at ``host_bw``; *layer-wise
+    pipelined* loading makes the adapter usable after its FIRST layer-group
+    arrives (the rest streams behind execution, §5.3); scheduler-driven
+    prefetch starts the clock at request arrival rather than admission.
+
+All times are simulation timestamps (seconds); the simulator advances them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Set
+
+
+@dataclasses.dataclass
+class ResidentAdapter:
+    adapter_id: int
+    load_start: float
+    first_ready: float     # first layer-group resident (usable, pipelined)
+    full_ready: float      # entire adapter resident
+    last_used: float
+    pins: int = 0
+
+
+class LoRACache:
+    def __init__(self, capacity: int, adapter_bytes: int, n_layers: int,
+                 host_bw: float = 50e9, layerwise: bool = True,
+                 prefetch: bool = True):
+        self.capacity = capacity
+        self.adapter_bytes = adapter_bytes
+        self.n_layers = max(n_layers, 1)
+        self.host_bw = host_bw
+        self.layerwise = layerwise
+        self.prefetch = prefetch
+        self.resident: Dict[int, ResidentAdapter] = {}
+        self.loads_in_flight = 0
+        # stats
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------------ #
+    def is_ready(self, adapter_id: int, now: float) -> bool:
+        r = self.resident.get(adapter_id)
+        if r is None:
+            return False
+        ready = r.first_ready if self.layerwise else r.full_ready
+        return now >= ready
+
+    def is_resident(self, adapter_id: int) -> bool:
+        return adapter_id in self.resident
+
+    def has_free_slot(self) -> bool:
+        return len(self.resident) < self.capacity or self._evictable() is not None
+
+    def _evictable(self) -> Optional[int]:
+        cand = [(r.last_used, a) for a, r in self.resident.items()
+                if r.pins == 0]
+        return min(cand)[1] if cand else None
+
+    # ------------------------------------------------------------------ #
+    def admit(self, adapter_id: int, now: float) -> Optional[float]:
+        """Ensure residency; returns the time the adapter becomes usable, or
+        None if no slot can be freed (caller queues the request)."""
+        r = self.resident.get(adapter_id)
+        if r is not None:
+            self.hits += 1
+            r.last_used = now
+            return r.first_ready if self.layerwise else r.full_ready
+        self.misses += 1
+        if len(self.resident) >= self.capacity:
+            victim = self._evictable()
+            if victim is None:
+                return None
+            del self.resident[victim]
+            self.evictions += 1
+        t_full = self.adapter_bytes / self.host_bw
+        t_first = t_full / self.n_layers if self.layerwise else t_full
+        r = ResidentAdapter(adapter_id, now, now + t_first, now + t_full, now)
+        self.resident[adapter_id] = r
+        return r.first_ready if self.layerwise else r.full_ready
+
+    def prefetch_hint(self, adapter_id: int, now: float) -> None:
+        """Scheduler-driven prefetch (§5.3): start loading at arrival."""
+        if self.prefetch and adapter_id not in self.resident:
+            if len(self.resident) < self.capacity or self._evictable() is not None:
+                self.admit(adapter_id, now)
+
+    def pin(self, adapter_id: int) -> None:
+        self.resident[adapter_id].pins += 1
+
+    def unpin(self, adapter_id: int, now: float) -> None:
+        r = self.resident[adapter_id]
+        r.pins -= 1
+        r.last_used = now
+
+    def active_count(self) -> int:
+        return sum(1 for r in self.resident.values() if r.pins > 0)

@@ -1,0 +1,87 @@
+"""Serving metrics (paper §6.1): P95 TTFT, mean TPOT, throughput, and the
+adapter-level SLO Attainment Rate (fraction of adapters whose requests meet
+both SLOs in >90% of cases)."""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.serving.workload import Request
+
+TTFT_SLO = 0.25   # s, P95 (paper)
+TPOT_SLO = 0.10   # s, average (paper)
+ATTAIN_THRESHOLD = 0.90
+
+
+@dataclasses.dataclass
+class Summary:
+    n_requests: int
+    n_finished: int
+    p95_ttft: float
+    mean_ttft: float
+    mean_tpot: float
+    throughput_rps: float
+    slo_attainment: float       # fraction of adapters >90% compliant
+    goodput_rps: float          # finished requests meeting both SLOs / s
+    per_adapter_ok: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def meets_slos(self, ttft_slo=TTFT_SLO, tpot_slo=TPOT_SLO) -> bool:
+        return self.p95_ttft <= ttft_slo and self.mean_tpot <= tpot_slo
+
+
+def summarize(requests: Sequence[Request], duration: float,
+              ttft_slo: float = TTFT_SLO, tpot_slo: float = TPOT_SLO,
+              warmup: float = 0.1) -> Summary:
+    """Steady-state stats (drop the first ``warmup`` fraction, paper Fig. 6
+    measures 30-270 s of a 300 s run)."""
+    t0 = duration * warmup
+    window = [r for r in requests if t0 <= r.arrival <= duration * 0.9]
+    done = [r for r in window if r.finish >= 0]
+    # censoring: requests that never finished are SLO violations with
+    # unbounded TTFT (counting only survivors would hide queue collapse)
+    censored = [r for r in window if r.finish < 0]
+    if not done:
+        return Summary(len(requests), 0, float("inf"), float("inf"),
+                       float("inf"), 0.0, 0.0, 0.0)
+    ttfts = np.array([r.ttft for r in done] +
+                     [np.inf] * len(censored))
+    tpots = np.array([r.tpot for r in done])
+    span = duration - t0
+    per_adapter = defaultdict(list)
+    for r in done:
+        ok = (r.ttft <= ttft_slo) and (r.tpot <= tpot_slo)
+        per_adapter[r.adapter_id].append(ok)
+    for r in censored:
+        per_adapter[r.adapter_id].append(False)
+    attain = {a: float(np.mean(v)) for a, v in per_adapter.items()}
+    n_good = sum(1 for a, v in attain.items() if v > ATTAIN_THRESHOLD)
+    good_reqs = sum(1 for r in done
+                    if r.ttft <= ttft_slo and r.tpot <= tpot_slo)
+    return Summary(
+        n_requests=len(requests), n_finished=len(done),
+        p95_ttft=float(np.percentile(ttfts, 95)),
+        mean_ttft=float(np.mean([r.ttft for r in done])),
+        mean_tpot=float(tpots.mean()),
+        throughput_rps=len(done) / span,
+        slo_attainment=n_good / max(len(attain), 1),
+        goodput_rps=good_reqs / span,
+        per_adapter_ok=attain,
+    )
+
+
+def max_serviceable_rate(run_fn, rates: Sequence[float],
+                         ttft_slo: float = TTFT_SLO,
+                         tpot_slo: float = TPOT_SLO) -> float:
+    """Largest rate whose Summary meets both SLOs (paper's 'serviceable
+    request rate'). run_fn(rate) -> Summary."""
+    best = 0.0
+    for rate in rates:
+        s = run_fn(rate)
+        if s.meets_slos(ttft_slo, tpot_slo):
+            best = rate
+        else:
+            break
+    return best

@@ -1,0 +1,145 @@
+"""Token-level scheduler with a LoRA table (paper Fig. 4).
+
+Used by the simulator for both systems:
+  - coupled (S-LoRA): one scheduler per LLM instance, cache on the instance;
+    a request can only run on the instance that owns (or can load) its
+    adapter — instances are pre-assigned disjoint adapter subsets by a
+    greedy load-balancer (paper §6.1).
+  - disaggregated (InfiniLoRA): one global scheduler; adapters live in the
+    shared LoRA Server cache; any instance can run any request, so admission
+    checks the shared cache and picks the least-loaded instance.
+
+Admission (per decode-step boundary, i.e. token level): a request is admitted
+iff (a) the target engine batch has a free slot (KV-capacity bound) and
+(b) its adapter is resident or a slot can be freed; otherwise it queues
+(FCFS, or SJF with oracle output lengths for the S-LoRA w/ SJF baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.cache import LoRACache
+from repro.serving.workload import Request
+
+
+@dataclasses.dataclass
+class InstanceState:
+    iid: int
+    max_batch: int
+    running: List[Request] = dataclasses.field(default_factory=list)
+    next_free: float = 0.0          # time the current step ends
+    slowdown: float = 1.0           # straggler factor (fault-tolerance tests)
+    alive: bool = True
+
+    @property
+    def batch(self) -> int:
+        return len(self.running)
+
+
+def assign_adapters_greedy(n_adapters: int, popularity: np.ndarray,
+                           n_instances: int) -> np.ndarray:
+    """Paper §6.1: pre-assign disjoint adapter subsets balancing expected
+    load (greedy largest-first)."""
+    order = np.argsort(-popularity)
+    load = np.zeros(n_instances)
+    owner = np.zeros(n_adapters, dtype=int)
+    for a in order:
+        i = int(np.argmin(load))
+        owner[a] = i
+        load[i] += popularity[a]
+    return owner
+
+
+class Scheduler:
+    def __init__(self, instances: Sequence[InstanceState],
+                 caches: Dict[int, LoRACache], owner: Optional[np.ndarray],
+                 policy: str = "fcfs", shared_cache: bool = False):
+        self.instances = {i.iid: i for i in instances}
+        self.caches = caches          # iid -> cache (or {-1: shared})
+        self.owner = owner            # adapter -> instance (coupled only)
+        self.policy = policy
+        self.shared_cache = shared_cache
+        self.queues: Dict[int, List[Request]] = {i.iid: [] for i in instances}
+        if shared_cache:
+            self.queues[-1] = []
+
+    # ------------------------------------------------------------------ #
+    def cache_for(self, iid: int) -> LoRACache:
+        return self.caches[-1] if self.shared_cache else self.caches[iid]
+
+    def enqueue(self, req: Request, now: float):
+        if self.shared_cache:
+            self.queues[-1].append(req)
+            self.cache_for(-1).prefetch_hint(req.adapter_id, now)
+        else:
+            iid = int(self.owner[req.adapter_id])
+            self.queues[iid].append(req)
+            self.caches[iid].prefetch_hint(req.adapter_id, now)
+
+    def requeue_instance(self, iid: int, now: float):
+        """Fault handling: move a dead instance's work back to the queues."""
+        inst = self.instances[iid]
+        inst.alive = False
+        cache = self.cache_for(iid)
+        for r in inst.running:
+            r.decode_start = -1.0
+            r.first_token = -1.0
+            r.tokens_done = 0
+            if r.reserved:
+                cache.unpin(r.adapter_id, now)
+                r.reserved = False
+            self.enqueue(r, now)
+        inst.running.clear()
+
+    def _sorted_queue(self, q: List[Request]) -> List[Request]:
+        if self.policy == "sjf":  # oracle output lengths (paper baseline)
+            return sorted(q, key=lambda r: r.output_len)
+        return q
+
+    # ------------------------------------------------------------------ #
+    def admit(self, iid: int, now: float) -> List[Request]:
+        """Admit queued requests into instance ``iid`` at a step boundary."""
+        inst = self.instances[iid]
+        if not inst.alive:
+            return []
+        cache = self.cache_for(iid)
+        q_key = -1 if self.shared_cache else iid
+        queue = self._sorted_queue(self.queues[q_key])
+        admitted = []
+        rest = []
+        for req in queue:
+            if req.arrival > now or inst.batch + len(admitted) >= inst.max_batch:
+                rest.append(req)
+                continue
+            ready = cache.admit(req.adapter_id, now)
+            if ready is None:
+                rest.append(req)  # no evictable slot: stay queued
+                continue
+            if not req.reserved:
+                # reserve the (possibly still-loading) slot so later queue
+                # entries cannot evict it — prevents load thrashing
+                cache.pin(req.adapter_id)
+                req.reserved = True
+            if ready > now:
+                rest.append(req)  # layer-wise load in flight (§5.3)
+                continue
+            req.instance = iid
+            req.decode_start = now
+            admitted.append(req)
+        self.queues[q_key] = [r for r in rest]
+        inst.running.extend(admitted)
+        return admitted
+
+    def retire(self, iid: int, finished: List[Request], now: float):
+        inst = self.instances[iid]
+        cache = self.cache_for(iid)
+        for r in finished:
+            inst.running.remove(r)
+            cache.unpin(r.adapter_id, now)
+            r.reserved = False
+
+    def queue_len(self) -> int:
+        return sum(len(q) for q in self.queues.values())

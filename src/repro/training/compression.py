@@ -1,0 +1,52 @@
+"""int8 gradient compression with error feedback (distributed-optimization
+trick for DCN-bound multi-pod training).
+
+Cross-pod gradient all-reduce over DCN (~6.25 GB/s/host) dominates multi-pod
+step time for large models; per-tensor-scaled int8 quantization cuts it 2x
+vs bf16 (4x vs f32) and error feedback keeps convergence (residuals are
+re-added before the next quantization). Used by train_step when
+``compress_grads`` is on; the numeric contract is tested in
+tests/test_training.py (bounded bias, exact with feedback over repeats)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def quantize(g, err):
+    """g + err -> (int8 q, scale); err' = residual."""
+    g = g.astype(F32) + err
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    err_new = g - q.astype(F32) * scale
+    return q, scale, err_new
+
+
+def dequantize(q, scale):
+    return q.astype(F32) * scale
+
+
+def init_error(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, F32), params)
+
+
+def compress_tree(grads, errors):
+    """Returns (quantized tree of (q, scale), new error tree)."""
+    qs = jax.tree_util.tree_map(quantize, grads, errors)
+    q_tree = jax.tree_util.tree_map(
+        lambda t: (t[0], t[1]), qs, is_leaf=lambda t: isinstance(t, tuple))
+    e_tree = jax.tree_util.tree_map(
+        lambda t: t[2], qs, is_leaf=lambda t: isinstance(t, tuple))
+    return q_tree, e_tree
+
+
+def decompress_tree(q_tree):
+    return jax.tree_util.tree_map(
+        lambda t: dequantize(*t), q_tree,
+        is_leaf=lambda t: isinstance(t, tuple))

@@ -1,0 +1,77 @@
+"""AdamW with cosine schedule; optimizer state shards like the params (the
+param specs already put dim-0 on the fsdp axis under train rules, giving
+ZeRO-style state sharding for free). Supports a trainable-mask for LoRA-only
+fine-tuning (base weights frozen)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos)
+
+
+def init(params, mask=None):
+    def zeros(p, m=True):
+        return jnp.zeros(p.shape, F32) if m else jnp.zeros((), F32)
+    if mask is None:
+        m = jax.tree_util.tree_map(zeros, params)
+        v = jax.tree_util.tree_map(zeros, params)
+    else:
+        m = jax.tree_util.tree_map(zeros, params, mask)
+        v = jax.tree_util.tree_map(zeros, params, mask)
+    return {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
+
+
+def update(params, grads, state, cfg: AdamWConfig, mask=None):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(F32)
+    bc2 = 1 - b2 ** step.astype(F32)
+
+    def upd(p, g, m, v, trainable=True):
+        if not trainable:
+            return p, m, v
+        g = g.astype(F32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype), m, v
+
+    if mask is None:
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    else:
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"],
+                                     state["v"], mask)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,63 @@
+"""LoRA fine-tuning: train per-tenant adapters against a frozen base model.
+
+This is the substrate that PRODUCES the adapters the serving system hosts.
+``make_lora_train_step`` differentiates only the adapter tensors (base params
+are closed over / frozen), with optional int8 gradient compression + error
+feedback for the cross-pod all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.steps import lm_loss
+from repro.models import transformer
+from repro.training import compression
+from repro.training import optimizer as opt_mod
+
+F32 = jnp.float32
+
+
+def single_adapter_ctx(adapter_tensors: Dict, batch_size: int, scale: float):
+    """lora_ctx selecting adapter 0 for every sequence (fine-tune view).
+
+    adapter_tensors: {target: {"A": (L, 1, ...), "B": (L, 1, ...)}}.
+    """
+    return {"adapters": adapter_tensors,
+            "ids": jnp.zeros((batch_size,), jnp.int32),
+            "scale": scale}
+
+
+def make_lora_train_step(cfg: ModelConfig, base_params, scale: float,
+                         opt_cfg: opt_mod.AdamWConfig,
+                         compress: bool = False, axis_name: str = None):
+    """Returns step(adapter, opt_state, err, batch) -> (loss, ...)."""
+
+    def loss_fn(adapter, batch):
+        B = batch["tokens"].shape[0]
+        ctx = single_adapter_ctx(adapter, B, scale)
+        logits, _ = transformer.forward(base_params, cfg, batch["tokens"],
+                                        kind="train", lora_ctx=ctx)
+        return lm_loss(logits, batch["labels"])
+
+    def step(adapter, opt_state, err, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(adapter, batch)
+        if axis_name is not None:
+            if compress:
+                q, err = compression.compress_tree(grads, err)
+                q = jax.tree_util.tree_map(
+                    lambda t: (jax.lax.psum(t[0].astype(jnp.int32), axis_name),
+                               jax.lax.pmax(t[1], axis_name)),
+                    q, is_leaf=lambda t: isinstance(t, tuple))
+                grads = jax.tree_util.tree_map(
+                    lambda t: t[0].astype(F32) * t[1], q,
+                    is_leaf=lambda t: isinstance(t, tuple))
+            else:
+                grads = jax.lax.pmean(grads, axis_name)
+        adapter, opt_state = opt_mod.update(adapter, grads, opt_state, opt_cfg)
+        return loss, adapter, opt_state, err
+
+    return step

@@ -1,0 +1,30 @@
+import os
+
+# Keep kernels on the interpret/ref path and JAX on the single host device
+# (the dry-run is the ONLY place that forces 512 devices).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_forward_inputs(cfg, batch=2, seq=16, key=None):
+    """(tokens, frontend_emb) for any family's reduced config."""
+    import jax.random as jr
+    key = key or jax.random.PRNGKey(1)
+    fe = None
+    s_text = seq
+    if cfg.frontend:
+        fe = jnp.full((batch, cfg.frontend_tokens, cfg.d_model), 0.01,
+                      jnp.float32)
+        s_text = max(seq - cfg.frontend_tokens, 4)
+    toks = jr.randint(key, (batch, s_text), 0, cfg.vocab_size)
+    return toks, fe

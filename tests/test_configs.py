@@ -1,0 +1,87 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch's
+REDUCED config runs one forward and one train step on CPU with correct
+shapes and no NaNs. Full configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import tiny_forward_inputs
+from repro.configs import ASSIGNED, PAPER, get_config, get_shape, applicable
+from repro.distributed.steps import lm_loss
+from repro.models import model as model_mod
+from repro.models import transformer
+
+ARCHS = sorted(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward(arch):
+    cfg = get_config(arch).reduced()
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0))
+    toks, fe = tiny_forward_inputs(cfg)
+    logits, _ = transformer.forward(params, cfg, toks, frontend_emb=fe,
+                                    kind="prefill")
+    B = toks.shape[0]
+    S = toks.shape[1] + (fe.shape[1] if fe is not None and not cfg.is_encdec
+                         else 0)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0),
+                                   dtype="float32")
+    toks, fe = tiny_forward_inputs(cfg)
+
+    def loss_fn(p):
+        logits, _ = transformer.forward(p, cfg, toks, frontend_emb=fe,
+                                        kind="train")
+        labels = jnp.pad(toks[:, 1:], ((0, 0), (0, 1)), constant_values=-1)
+        if cfg.frontend and not cfg.is_encdec:
+            logits = logits[:, -toks.shape[1]:]
+        return lm_loss(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in
+                jax.tree_util.tree_leaves(grads))
+    assert gnorm > 0 and not jnp.isnan(gnorm)
+
+
+def test_registry_complete():
+    assert len(ASSIGNED) == 10
+    # paper's own models present for the serving benchmarks
+    assert "mixtral-8x7b" in PAPER and "qwen3-30b-a3b" in PAPER
+
+
+def test_param_counts_match_public_numbers():
+    expect = {  # billions, published totals
+        "qwen2-1.5b": 1.54, "qwen2-72b": 72.7, "dbrx-132b": 132,
+        "qwen3-moe-235b-a22b": 235, "rwkv6-3b": 3.1, "smollm-360m": 0.36,
+    }
+    for name, b in expect.items():
+        got = get_config(name).param_count() / 1e9
+        assert abs(got - b) / b < 0.1, (name, got, b)
+    active = get_config("qwen3-moe-235b-a22b").active_param_count() / 1e9
+    assert abs(active - 22) / 22 < 0.1
+
+
+def test_adapter_sizes_track_fig1a():
+    """Fig 1a: Qwen3-30B-A3B one adapter ~6.18 GB at rank 64; Mixtral ~1.69
+    GB — ours within 25% (accounting differences documented)."""
+    q = get_config("qwen3-30b-a3b").lora_adapter_bytes(rank=64) / 1e9
+    m = get_config("mixtral-8x7b").lora_adapter_bytes(rank=64) / 1e9
+    assert abs(q - 6.18) / 6.18 < 0.25, q
+    assert abs(m - 1.69) / 1.69 < 0.25, m
+
+
+def test_long_500k_applicability():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        ok, reason = applicable(cfg, get_shape("long_500k"))
+        if arch in ("rwkv6-3b", "zamba2-2.7b"):
+            assert ok
+        else:
+            assert not ok and "quadratic" in reason

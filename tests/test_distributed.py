@@ -1,0 +1,150 @@
+"""Distribution layer: rule resolution, MoE-plan invariants (hypothesis),
+and numeric equivalence of the sharded paths on a real 8-device host mesh
+(subprocess so the device-count override never leaks into other tests)."""
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.distributed.sharding import ShardingRules, use_rules
+from repro.models import moe as moe_mod
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+
+
+def _rules(data=4, model=4, overrides=None):
+    return ShardingRules(FakeMesh((data, model), ("data", "model")),
+                         overrides)
+
+
+def test_rules_divisibility_dropping():
+    r = _rules()
+    # 15 heads cannot shard 4 ways -> replicated
+    assert r.spec(("batch", None, "heads", None), (8, 16, 15, 64))[2] is None
+    assert r.spec(("batch", None, "heads", None), (8, 16, 16, 64))[2] == \
+        "model"
+    # one mesh axis never covers two dims
+    spec = r.spec(("batch", "seq", "embed"), (8, 64, 128))
+    used = [s for s in spec if s is not None]
+    flat = [a for s in used for a in ((s,) if isinstance(s, str) else s)]
+    assert len(flat) == len(set(flat))
+
+
+@settings(max_examples=40, deadline=None)
+@given(E=st.sampled_from([4, 8, 16, 64]), kind=st.sampled_from(
+    ["train", "decode"]), model=st.sampled_from([2, 4, 8]),
+    data=st.sampled_from([2, 4]))
+def test_moe_plan_invariants(E, kind, model, data):
+    import dataclasses
+    cfg = dataclasses.replace(get_config("dbrx-132b").reduced(), n_experts=E)
+    from repro.distributed.steps import rules_for
+    rules = rules_for(FakeMesh((data, model), ("data", "model")),
+                      "train" if kind == "train" else "decode", cfg)
+    with use_rules(rules):
+        plan = moe_mod.resolve_moe_plan(cfg, batch=data * 8,
+                                        n_tokens_seq=model * 4, kind=kind)
+    token_axes = set(plan.token_batch_axes)
+    if plan.token_seq_axis:
+        token_axes.add(plan.token_seq_axis)
+    if plan.ep_axis is not None:
+        assert plan.ep_axis in token_axes          # a2a must move tokens
+        assert E % (model if plan.ep_axis == "model" else data) == 0
+    if plan.ff_axis is not None:
+        assert plan.ff_axis not in token_axes      # psum must not mix tokens
+    if plan.fsdp_axis is not None:
+        assert plan.ff_axis is None                # gather and psum exclusive
+
+
+SUBPROCESS_NUMERIC = textwrap.dedent("""
+    import os
+    os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh
+    from repro.configs import get_config
+    from repro.models import moe as moe_mod, layers as ll
+    from repro.distributed.sharding import use_rules
+    from repro.distributed.steps import rules_for
+
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ('data', 'model'))
+    cfg = dataclasses.replace(get_config('dbrx-132b').reduced(),
+                              n_experts=8, top_k=2)
+    key = jax.random.PRNGKey(0)
+    d, E, ff = cfg.d_model, cfg.n_experts, cfg.d_ff
+    params = {
+      'router': jax.random.normal(key, (d, E)) * 0.5,
+      'gate': jax.random.normal(jax.random.fold_in(key, 1), (E, d, ff)) * .02,
+      'up': jax.random.normal(jax.random.fold_in(key, 2), (E, d, ff)) * .02,
+      'down': jax.random.normal(jax.random.fold_in(key, 3), (E, ff, d)) * .02,
+    }
+    x = jax.random.normal(jax.random.fold_in(key, 4), (4, 8, d))
+    y_ref = moe_mod.moe_block(x, params, cfg, kind='train')
+    for kind in ('train', 'decode'):
+        xk = x if kind == 'train' else x[:, :1]
+        y_ref_k = moe_mod.moe_block(xk, params, cfg, kind=kind)
+        rules = rules_for(mesh, kind if kind != 'train' else 'train', cfg)
+        with use_rules(rules):
+            y = jax.jit(lambda x, p: moe_mod.moe_block(x, p, cfg, kind=kind)
+                        )(xk, params)
+        err = float(jnp.max(jnp.abs(y - y_ref_k)))
+        assert err < 1e-5, (kind, err)
+
+    # flash-decode shard_map == local attention
+    B, S, KV, hd = 4, 32, 2, 16
+    H = 4
+    q = jax.random.normal(key, (B, H, hd))
+    kc = jax.random.normal(jax.random.fold_in(key, 5), (B, S, KV, hd))
+    vc = jax.random.normal(jax.random.fold_in(key, 6), (B, S, KV, hd))
+    ref = ll.decode_attention(q, kc, vc, jnp.int32(17))
+    rules = rules_for(mesh, 'decode', get_config('smollm-360m').reduced())
+    with use_rules(rules):
+        sharded = jax.jit(lambda q, k, v: ll.decode_attention(
+            q, k, v, jnp.int32(17)))(q, kc, vc)
+    err = float(jnp.max(jnp.abs(ref - sharded)))
+    assert err < 1e-5, err
+
+    # fused write+attend sharded == unsharded
+    kn = jax.random.normal(jax.random.fold_in(key, 7), (B, KV, hd))
+    vn = jax.random.normal(jax.random.fold_in(key, 8), (B, KV, hd))
+    o1, k1, v1, _, _, _ = ll.decode_attention_update(
+        q, kn, vn, kc, vc, jnp.int32(17))
+    with use_rules(rules):
+        o2, k2, v2, _, _, _ = jax.jit(
+            lambda *a: ll.decode_attention_update(*a, jnp.int32(17))
+        )(q, kn, vn, kc, vc)
+    assert float(jnp.max(jnp.abs(o1 - o2))) < 1e-5
+    assert float(jnp.max(jnp.abs(k1 - k2))) < 1e-6
+    print('SUBPROCESS_OK')
+""")
+
+
+@pytest.mark.slow
+def test_sharded_numeric_equivalence_8dev():
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SUBPROCESS_NUMERIC],
+                         capture_output=True, text=True, timeout=900,
+                         cwd=str(pathlib.Path(__file__).resolve().parents[1]),
+                         env=env)
+    assert "SUBPROCESS_OK" in res.stdout, res.stderr[-3000:]
+
+
+def test_lm_loss_masking():
+    from repro.distributed.steps import lm_loss
+    logits = jnp.zeros((1, 4, 8))
+    labels = jnp.array([[1, 2, -1, -1]])
+    loss = lm_loss(logits, labels)
+    assert float(loss) == pytest.approx(np.log(8), rel=1e-5)

@@ -1,0 +1,115 @@
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes and dtypes
+(Pallas interpret mode executes the kernel body on CPU)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.fixture(autouse=True)
+def _force_pallas(monkeypatch):
+    """Force the kernel path in this module only (no env leak)."""
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+
+SHAPES = [  # (T, d_in, r, d_out, N)
+    (4, 64, 16, 64, 3),
+    (16, 128, 64, 256, 5),
+    (33, 384, 32, 128, 9),   # non-aligned T and padded dims
+    (8, 896, 64, 1536, 2),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_bgmv(shape, dtype):
+    T, d_in, r, d_out, N = shape
+    key = jax.random.PRNGKey(hash(shape) % 2**31)
+    x = jax.random.normal(key, (T, d_in), dtype)
+    A = (jax.random.normal(jax.random.fold_in(key, 1), (N, d_in, r)) *
+         0.05).astype(dtype)
+    B = (jax.random.normal(jax.random.fold_in(key, 2), (N, r, d_out)) *
+         0.05).astype(dtype)
+    ids = jax.random.randint(jax.random.fold_in(key, 3), (T,), -1, N)
+    got = ops.bgmv(x, A, B, ids)
+    want = ref.bgmv_ref(x, A, B, ids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dtype))
+    # masked rows are exactly zero
+    assert np.all(np.asarray(got)[np.asarray(ids) < 0] == 0)
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+@pytest.mark.parametrize("E", [2, 5])
+def test_bgmv_expert(shape, E):
+    T, d_in, r, d_out, N = shape
+    key = jax.random.PRNGKey(E)
+    x = jax.random.normal(key, (T, d_in))
+    A = jax.random.normal(jax.random.fold_in(key, 1), (N, E, d_in, r)) * 0.05
+    B = jax.random.normal(jax.random.fold_in(key, 2), (N, E, r, d_out)) * 0.05
+    ids = jax.random.randint(jax.random.fold_in(key, 3), (T,), -1, N)
+    eids = jax.random.randint(jax.random.fold_in(key, 4), (T,), 0, E)
+    got = ops.bgmv_expert(x, A, B, ids, eids)
+    want = ref.bgmv_expert_ref(x, A, B, ids, eids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("cap", [4, 8, 16])
+def test_sgmv_and_segments(cap):
+    T, d_in, r, d_out, N = 37, 128, 16, 64, 6
+    key = jax.random.PRNGKey(cap)
+    x = jax.random.normal(key, (T, d_in))
+    A = jax.random.normal(jax.random.fold_in(key, 1), (N, d_in, r)) * 0.05
+    B = jax.random.normal(jax.random.fold_in(key, 2), (N, r, d_out)) * 0.05
+    row_ad = jax.random.randint(jax.random.fold_in(key, 3), (T,), 0, N)
+    segs, seg_ad, scatter = ops.build_segments(x, row_ad, N, cap)
+    got = ops.sgmv(segs, seg_ad, A, B)
+    want = ref.sgmv_ref(segs, seg_ad, A, B)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+    # segment layout: every kept row's slot maps back to its adapter
+    segs_np, slot = np.asarray(segs), np.asarray(scatter)
+    kept = slot < N * cap
+    rows = np.asarray(x)
+    for i in np.nonzero(kept)[0][:10]:
+        a = slot[i] // cap
+        assert a == int(np.asarray(row_ad)[i])
+        np.testing.assert_allclose(segs_np.reshape(-1, d_in)[slot[i]],
+                                   rows[i], atol=1e-6)
+
+
+@pytest.mark.parametrize("E,C,d,f", [(4, 12, 64, 96), (8, 8, 256, 512),
+                                     (3, 16, 384, 640)])
+def test_gmm(E, C, d, f):
+    key = jax.random.PRNGKey(E * 1000 + C)
+    xe = jax.random.normal(key, (E, C, d))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (E, d, f)) * 0.05
+    gs = jax.random.randint(jax.random.fold_in(key, 2), (E,), 0, C + 1)
+    got = ops.gmm(xe, w, gs)
+    want = ref.gmm_ref(xe, w, gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4)
+    # rows past a group's size are zeroed (skip-empty-tiles semantics)
+    got_np = np.asarray(got)
+    for e in range(E):
+        assert np.all(got_np[e, int(gs[e]):] == 0)
+
+
+def test_ref_path_dispatch(monkeypatch):
+    """ops falls back to the jnp oracle when kernels are disabled."""
+    monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 64))
+    A = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, 16))
+    B = jax.random.normal(jax.random.fold_in(key, 2), (2, 16, 32))
+    ids = jnp.array([0, 1, -1, 0])
+    np.testing.assert_allclose(np.asarray(ops.bgmv(x, A, B, ids)),
+                               np.asarray(ref.bgmv_ref(x, A, B, ids)),
+                               atol=1e-6)

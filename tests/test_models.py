@@ -1,0 +1,210 @@
+"""Model substrate correctness: decode (recurrent) must match the parallel
+chunked forward for every family; chunked attention matches a naive oracle;
+sliding windows and int8 KV behave."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import cache as cache_mod
+from repro.models import layers as ll
+from repro.models import model as model_mod
+from repro.models import ssm
+from repro.models import transformer
+
+DECODE_ARCHS = ["smollm-360m", "qwen2-1.5b", "dbrx-132b",
+                "qwen3-moe-235b-a22b", "rwkv6-3b", "zamba2-2.7b"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_parallel(arch):
+    S = 10
+    cfg = get_config(arch).reduced()
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0),
+                                   dtype="float32")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, S), 0,
+                              cfg.vocab_size)
+    logits_par, _ = transformer.forward(params, cfg, toks, kind="prefill")
+    cache = cache_mod.init_cache(cfg, 2, S + 2, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, cache = transformer.decode_step(params, cfg, cache,
+                                            toks[:, t:t + 1])
+        outs.append(lg)
+    err = float(jnp.max(jnp.abs(logits_par - jnp.stack(outs, 1))))
+    assert err < 1e-4, err
+
+
+def test_chunked_attention_matches_naive():
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    for chunk in (8, 16, 64):
+        out = ll.causal_attention(q, k, v, q_chunk=chunk)
+        ref = ll.causal_attention(q, k, v, q_chunk=S)  # single chunk
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5)
+    # naive oracle
+    G = H // KV
+    scores = jnp.einsum("bqkgd,bskd->bkgqs",
+                        q.reshape(B, S, KV, G, hd), k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    ref2 = jnp.einsum("bkgqs,bskd->bqkgd", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref2.reshape(B, S, H, hd)),
+                               atol=1e-4)
+
+
+def test_sliding_window_attention():
+    key = jax.random.PRNGKey(0)
+    B, S, H, hd, W = 1, 32, 2, 8, 8
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    out = ll.causal_attention(q, k, v, window=W, q_chunk=8)
+    # position S-1 must not attend to keys older than S-W
+    k2 = k.at[:, : S - W].set(99.0)  # poison out-of-window keys
+    v2 = v.at[:, : S - W].set(99.0)
+    out2 = ll.causal_attention(q, k2, v2, window=W, q_chunk=8)
+    np.testing.assert_allclose(np.asarray(out[:, -1]),
+                               np.asarray(out2[:, -1]), atol=1e-4)
+
+
+def test_decode_attention_update_ring_buffer():
+    """Ring-buffer window decode equals full-cache window decode."""
+    key = jax.random.PRNGKey(0)
+    B, KV, hd, W, T = 1, 2, 8, 4, 10
+    H = KV
+    full_k = jnp.zeros((B, T, KV, hd))
+    full_v = jnp.zeros((B, T, KV, hd))
+    ring_k = jnp.zeros((B, W, KV, hd))
+    ring_v = jnp.zeros((B, W, KV, hd))
+    kp = jnp.full((W,), -1, jnp.int32)
+    for t in range(T):
+        kt = jax.random.normal(jax.random.fold_in(key, t), (B, KV, hd))
+        vt = jax.random.normal(jax.random.fold_in(key, 100 + t), (B, KV, hd))
+        qt = jax.random.normal(jax.random.fold_in(key, 200 + t), (B, H, hd))
+        o_full, full_k, full_v, _, _, _ = ll.decode_attention_update(
+            qt, kt, vt, full_k, full_v, jnp.int32(t), window=W)
+        o_ring, ring_k, ring_v, _, _, kp = ll.decode_attention_update(
+            qt, kt, vt, ring_k, ring_v, jnp.int32(t), window=W,
+            key_positions=kp, write_slot=jnp.int32(t % W))
+        np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_ring),
+                                   atol=1e-5)
+
+
+def test_int8_kv_close_to_bf16():
+    cfg = get_config("smollm-360m").reduced()
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0),
+                                   dtype="float32")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                              cfg.vocab_size)
+    c1 = cache_mod.init_cache(cfg, 2, 8, dtype=jnp.float32)
+    c2 = cache_mod.init_cache(cfg, 2, 8, kv_quant=True)
+    for t in range(6):
+        l1, c1 = transformer.decode_step(params, cfg, c1, toks[:, t:t + 1])
+        l2, c2 = transformer.decode_step(params, cfg, c2, toks[:, t:t + 1])
+    p1 = jax.nn.softmax(l1, -1)
+    p2 = jax.nn.softmax(l2, -1)
+    assert float(jnp.max(jnp.abs(p1 - p2))) < 0.05
+
+
+def test_rwkv_chunk_invariance():
+    cfg = get_config("rwkv6-3b").reduced()
+    key = jax.random.PRNGKey(0)
+    p = {k: v for k, v in model_mod.init_params(
+        cfg, key, dtype="float32")["layers"].items()}
+    lp = jax.tree_util.tree_map(lambda a: a[0], p)
+    x = jax.random.normal(jax.random.fold_in(key, 9), (2, 16, cfg.d_model))
+    st = ssm.rwkv6_init_state(cfg, 2)
+    st = ssm.RWKV6State(st.shift_tm.astype(jnp.float32),
+                        st.shift_cm.astype(jnp.float32), st.wkv)
+    outs = {}
+    for chunk in (1, 4, 16):
+        y, _ = ssm.rwkv6_time_mix(x, lp, cfg, st, chunk=chunk)
+        outs[chunk] = np.asarray(y)
+    np.testing.assert_allclose(outs[1], outs[16], atol=1e-4)
+    np.testing.assert_allclose(outs[4], outs[16], atol=1e-4)
+
+
+def test_mamba_chunk_invariance():
+    cfg = get_config("zamba2-2.7b").reduced()
+    key = jax.random.PRNGKey(0)
+    stack = model_mod.init_params(cfg, key, dtype="float32")["layers"]
+    lp = jax.tree_util.tree_map(lambda a: a[0, 0], stack)
+    x = jax.random.normal(jax.random.fold_in(key, 9), (2, 16, cfg.d_model))
+    outs = {}
+    for chunk in (1, 4, 16):
+        y, _ = ssm.mamba2_forward(x, lp, cfg, None, chunk=chunk)
+        outs[chunk] = np.asarray(y)
+    np.testing.assert_allclose(outs[1], outs[16], atol=1e-4)
+    np.testing.assert_allclose(outs[4], outs[16], atol=1e-4)
+
+
+def test_encdec_decode_consistency():
+    """Audio enc-dec: greedy decode against prefill-built caches."""
+    cfg = get_config("seamless-m4t-large-v2").reduced()
+    params = model_mod.init_params(cfg, jax.random.PRNGKey(0),
+                                   dtype="float32")
+    B, Se, Sd = 2, 8, 6
+    fe = jax.random.normal(jax.random.PRNGKey(5), (B, Se, cfg.d_model)) * 0.1
+    toks = jax.random.randint(jax.random.PRNGKey(6), (B, Sd), 0,
+                              cfg.vocab_size)
+    logits_par, kvs = transformer.forward(params, cfg, toks, frontend_emb=fe,
+                                          kind="prefill", collect_kv=True)
+    # build decode cache: cross K/V from the collected prefill tensors
+    cross_kv = kvs[1]
+    cache = cache_mod.init_cache(cfg, B, Sd + 2, dtype=jnp.float32)
+
+    def pad_cross(a):
+        return jnp.pad(a, ((0, 0), (0, 0),
+                           (0, cfg.cross_kv_len - a.shape[2]),
+                           (0, 0), (0, 0))).astype(jnp.float32)
+
+    cache["ck"] = pad_cross(cross_kv[0])
+    cache["cv"] = pad_cross(cross_kv[1])
+    cache["cross_len"] = jnp.int32(Se)
+    outs = []
+    for t in range(Sd):
+        lg, cache = transformer.decode_step(params, cfg, cache,
+                                            toks[:, t:t + 1])
+        outs.append(lg)
+    err = float(jnp.max(jnp.abs(logits_par - jnp.stack(outs, 1))))
+    assert err < 1e-4, err
+
+
+def test_flash_attention_vjp_matches_naive():
+    """Custom flash backward == autodiff through naive attention."""
+    def naive(q, k, v, causal=True, window=0):
+        B, Sq, H, hd = q.shape
+        KV = k.shape[2]
+        G = H // KV
+        qg = q.reshape(B, Sq, KV, G, hd)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / np.sqrt(hd)
+        qp, kp = jnp.arange(Sq), jnp.arange(k.shape[1])
+        mask = (qp[:, None] >= kp[None, :] if causal
+                else jnp.ones((Sq, k.shape[1]), bool))
+        if window:
+            mask &= (qp[:, None] - kp[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, -1)
+        return jnp.einsum("bkgqs,bskd->bqkgd", p, v).reshape(B, Sq, H, hd)
+
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = 2, 32, 4, 2, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+    for causal, window, qc in [(True, 0, 8), (True, 8, 8), (False, 0, 16)]:
+        f1 = lambda *a: jnp.sum(jnp.sin(ll.causal_attention(
+            *a, causal=causal, window=window, q_chunk=qc)))
+        f2 = lambda *a: jnp.sum(jnp.sin(naive(*a, causal, window)))
+        g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-4)

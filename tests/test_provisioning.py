@@ -1,0 +1,88 @@
+"""Algorithm 1 and Eqs. (5)-(6): the fast O(N^2) IAR must equal the paper's
+literal O(N^3) procedure; property tests via hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import provisioning as P
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(8, 40), lb=st.integers(4, 400),
+       s=st.floats(0.5, 2.0), m_frac=st.floats(0.1, 0.9))
+def test_fast_iar_equals_paper_algorithm(n, lb, s, m_frac):
+    probs = P.zipf_probs(n, s)
+    M = max(1, int(n * m_frac))
+    assert abs(P.iar(probs, lb, M) - P.iar_paper(probs, lb, M)) < 1e-8
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 64), lb=st.integers(8, 600))
+def test_iar_monotone_in_cache_size(n, lb):
+    probs = P.zipf_probs(n, 1.2)
+    vals = [P.iar(probs, lb, M) for M in range(1, n + 1)]
+    assert all(b >= a - 1e-9 for a, b in zip(vals, vals[1:]))
+    assert vals[-1] == pytest.approx(1.0)
+
+
+def test_min_cache_size_binary_equals_linear():
+    probs = P.zipf_probs(48, 1.2)
+    m_star = P.min_cache_size(probs, LB=128, alpha=0.9)
+    # linear scan oracle
+    lin = next(M for M in range(1, 49) if P.iar(probs, 128, M) >= 0.9)
+    assert m_star == lin
+    assert P.iar(probs, 128, m_star) >= 0.9
+    if m_star > 1:
+        assert P.iar(probs, 128, m_star - 1) < 0.9
+
+
+def test_paper_validation_point():
+    """Paper §6.3.2: 512 adapters, 4 Qwen3-30B-A3B instances; caches
+    128/192/256 -> predicted IAR 83.0/92.2/100.0%. Our model must show the
+    same cliff shape: large gap at 128, near-1 at 256."""
+    probs = P.zipf_probs(512, 1.2)
+    v = [P.iar(probs, 1024, M) for M in (128, 192, 256)]
+    assert v[0] < v[1] < v[2]
+    assert v[2] > 0.98
+    assert v[0] < 0.95
+
+
+def test_residency_threshold_solves_capacity():
+    probs = P.zipf_probs(64, 1.2)
+    lams = 256 * probs
+    for M in (8, 16, 32):
+        tau = P.solve_tau(lams, M)
+        assert abs(P.residency_q(lams, tau).sum() - M) < 1e-3
+
+
+def test_poisson_binomial_deconvolution():
+    rng = np.random.default_rng(0)
+    qs = rng.uniform(0.01, 0.99, size=30)
+    dp = P.poisson_binomial_pmf(qs)
+    for i in (0, 7, 29):
+        direct = P.poisson_binomial_pmf(np.delete(qs, i))
+        dec = P._deconvolve(dp, qs[i])
+        np.testing.assert_allclose(dec, direct, atol=1e-9)
+
+
+def test_provision_end_to_end():
+    cfg = get_config("qwen3-30b-a3b")
+    rep = P.provision(cfg, n_adapters=512, n_instances=4, b=128, p=2,
+                      slo_tpot=0.1, alpha=0.95)
+    assert rep.M_star >= 1
+    assert rep.gpus == max(rep.gpus_for_cache, rep.gpus_for_tpot)
+    assert rep.iar >= 0.95
+    assert rep.placement.m == rep.gpus
+    # more instances -> at least as much cache needed
+    rep2 = P.provision(cfg, n_adapters=512, n_instances=8, b=128, p=2)
+    assert rep2.M_star >= rep.M_star
+
+
+def test_tpot_gpu_search_monotone_in_slo():
+    cfg = get_config("mixtral-8x7b")
+    tight, _, _ = P.min_gpus_for_tpot(cfg, b=128, p=8, n_instances=4,
+                                      slo_tpot=0.05, distinct_adapters=32)
+    loose, _, _ = P.min_gpus_for_tpot(cfg, b=128, p=8, n_instances=4,
+                                      slo_tpot=0.4, distinct_adapters=32)
+    assert tight >= loose

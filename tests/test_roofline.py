@@ -1,0 +1,91 @@
+"""HLO analysis: the loop-aware parser must reproduce hand-computable flops
+and collective bytes (including while-loop trip multiplication, which
+cost_analysis famously gets wrong for scan-over-layers models)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import roofline as RL
+from repro.analysis.hlo_parse import analyze_hlo
+from repro.configs import get_config, get_shape
+
+
+def test_parser_counts_scan_trips():
+    L, B, D = 5, 8, 64
+
+    def f(x, ws):
+        def body(x, w):
+            y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+            return y.astype(x.dtype), None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x
+
+    xs = jax.ShapeDtypeStruct((B, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    compiled = jax.jit(f).lower(xs, ws).compile()
+    parsed = analyze_hlo(compiled.as_text())
+    assert parsed["flops"] == pytest.approx(2 * L * B * D * D, rel=0.01)
+    # XLA's own analysis counts the body once — document the discrepancy
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    assert ca.get("flops", 0) < parsed["flops"]
+
+
+def test_parser_nested_scans():
+    def f(x, ws):
+        def outer(x, w):
+            def inner(y, _):
+                return jnp.tanh(jnp.dot(y, w,
+                                        preferred_element_type=jnp.float32)
+                                ).astype(y.dtype), None
+            y, _ = jax.lax.scan(inner, x, None, length=3)
+            return y, None
+        x, _ = jax.lax.scan(outer, x, ws)
+        return x
+
+    B, D, L = 4, 32, 4
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((B, D), jnp.float32),
+        jax.ShapeDtypeStruct((L, D, D), jnp.float32)).compile()
+    parsed = analyze_hlo(compiled.as_text())
+    assert parsed["flops"] == pytest.approx(2 * L * 3 * B * D * D, rel=0.01)
+
+
+def test_model_flops_definitions():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    train = RL.model_flops(cfg, get_shape("train_4k"))
+    n_act = cfg.active_param_count()
+    assert train == pytest.approx(6 * n_act * 4096 * 256)
+    dec = RL.model_flops(cfg, get_shape("decode_32k"))
+    assert dec == pytest.approx(2 * n_act * 128)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = RL.Roofline("a", "s", "m", chips=256, flops_per_device=1e12,
+                    bytes_per_device=1e12, coll_bytes_per_device=1e9,
+                    coll_breakdown={}, peak_mem_per_device=0,
+                    model_flops=2.56e14)
+    assert r.t_compute == pytest.approx(1e12 / RL.PEAK_FLOPS)
+    assert r.t_memory == pytest.approx(1e12 / RL.HBM_BW)
+    assert r.bottleneck == "memory"
+    assert r.step_time == r.t_memory
+    assert 0 < r.roofline_fraction <= 1.01
+
+
+def test_dryrun_records_complete():
+    """The committed dry-run table must cover every (arch x shape) cell on
+    both meshes with OK or documented SKIP."""
+    import json
+    import pathlib
+    from repro.configs import ASSIGNED, SHAPES
+    out = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+    if not out.exists():
+        pytest.skip("dry-run artifacts not generated yet")
+    for mesh in ("single", "multi"):
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                p = out / f"{arch}__{shape}__{mesh}.json"
+                assert p.exists(), p.name
+                rec = json.loads(p.read_text())
+                assert rec["status"] in ("OK", "SKIP"), (p.name, rec["status"])

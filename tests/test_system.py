@@ -1,0 +1,76 @@
+"""End-to-end behaviour: train adapters -> serve them (coupled and
+disaggregated engines) -> cluster-level SLO comparison."""
+import copy
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import adapter as adapter_mod
+from repro.core import lora_server as ls
+from repro.models import model as model_mod
+from repro.serving import metrics, simulator as S, workload
+from repro.serving.engine import Engine, EngineConfig
+
+
+def test_engine_end_to_end_coupled_and_disagg():
+    cfg = dataclasses.replace(get_config("dbrx-132b").reduced(),
+                              lora_targets=("gate", "up", "down"),
+                              lora_rank=4)
+    key = jax.random.PRNGKey(0)
+    params = model_mod.init_params(cfg, key, dtype="float32")
+    pool = adapter_mod.init_adapter_pool(cfg, 4, jax.random.fold_in(key, 1),
+                                         rank=4, dtype=jnp.float32)
+    B = 3
+    prompts = jax.random.randint(jax.random.fold_in(key, 2), (B, 6), 0,
+                                 cfg.vocab_size)
+    ids = jnp.array([0, 2, 3])
+
+    eng_c = Engine(cfg, params, EngineConfig(max_len=32), pool=pool)
+    cache = eng_c.prefill(prompts)
+    toks_coupled = eng_c.decode(cache, prompts[:, -1:], steps=5,
+                                adapter_ids=ids)
+
+    scfg = ls.ServerConfig(m=1, x=1, y=1, cache_slots=4, rank=4)
+    server = ls.LoRAServer(cfg, scfg, dtype=jnp.float32)
+    for a in range(4):
+        server.insert(a, ls.pool_tensors_from_adapter(pool, a))
+    eng_d = Engine(cfg, params, EngineConfig(max_len=32), pool=pool,
+                   server=server)
+    cache = eng_d.prefill(prompts)
+    toks_disagg = eng_d.decode(cache, prompts[:, -1:], steps=5,
+                               adapter_ids=ids)
+    # the architectural claim: identical tokens either way
+    np.testing.assert_array_equal(np.asarray(toks_coupled),
+                                  np.asarray(toks_disagg))
+    assert toks_coupled.shape == (B, 5)
+
+
+def test_cluster_serviceable_rate_gain():
+    """Headline reproduction: InfiniLoRA sustains a higher serviceable
+    request rate than S-LoRA under the paper's SLOs."""
+    cfg = get_config("mixtral-8x7b")
+    rates = [10, 20, 30, 40, 55, 70]
+
+    def run(disagg):
+        def f(rate):
+            reqs = workload.generate(256, rate=rate, duration=80, seed=0)
+            if disagg:
+                sim = S.SimConfig(n_instances=3, gpus_per_instance=8,
+                                  disaggregated=True, server_gpus=8,
+                                  placement_x=4, server_cache_slots=104,
+                                  n_adapters=256, duration=80)
+            else:
+                sim = S.SimConfig(n_instances=4, gpus_per_instance=8,
+                                  disaggregated=False,
+                                  instance_cache_slots=25,
+                                  n_adapters=256, duration=80)
+            out = S.simulate(cfg, [copy.copy(r) for r in reqs], sim)
+            return metrics.summarize(out["requests"], 80)
+        return f
+
+    r_slora = metrics.max_serviceable_rate(run(False), rates)
+    r_infini = metrics.max_serviceable_rate(run(True), rates)
+    assert r_infini > r_slora
