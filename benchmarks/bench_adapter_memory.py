@@ -1,6 +1,6 @@
 """Fig 1a: memory of model weights, KV cache (1024 tokens), and one LoRA
 adapter (rank 64) per model; adapters-per-100GB capacity."""
-from repro.configs import REGISTRY, get_config
+from repro.configs import get_config
 from benchmarks.common import emit
 
 MODELS = ["qwen2-1.5b", "qwen2-72b", "gpt-oss-20b", "mixtral-8x7b",

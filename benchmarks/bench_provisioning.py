@@ -3,7 +3,6 @@ validation point, and the O(N^2)-vs-O(N^3) speedup of our deconvolution
 variant."""
 import time
 
-import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config

@@ -2,15 +2,18 @@
 from __future__ import annotations
 
 import copy
-import sys
-import time
-from typing import Iterable
 
 from repro.configs import get_config
 from repro.serving import metrics, simulator as S, workload
 
 
+# Every emit() row also lands here so benchmarks/run.py can dump a JSON
+# artifact (the CI smoke-bench perf trajectory).
+RESULTS: list = []
+
+
 def emit(name: str, value, derived: str = ""):
+    RESULTS.append({"name": name, "value": value, "derived": derived})
     print(f"{name},{value},{derived}")
 
 

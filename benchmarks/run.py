@@ -1,12 +1,26 @@
-# One module per paper table/figure. Prints ``name,value,derived`` CSV.
+"""One module per paper table/figure. Prints ``name,value,derived`` CSV.
+
+  python benchmarks/run.py [filter]         # full sweep (or one module)
+  python benchmarks/run.py --smoke          # tiny shapes, <= 60 s, writes
+                                            # BENCH_smoke.json (CI artifact)
+"""
+import argparse
+import json
+import os
 import sys
 import time
 
-from benchmarks import (bench_ablation, bench_adapter_memory,
+# allow ``python benchmarks/run.py`` from the repo root (or anywhere),
+# with or without PYTHONPATH=src
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
+
+from benchmarks import (bench_ablation, bench_adapter_memory,  # noqa: E402
                         bench_batch_sweep, bench_cache_ratio,
                         bench_e2e_serving, bench_kernels, bench_parallelism,
                         bench_provisioning, bench_roofline,
-                        bench_scale_instances, bench_scale_server)
+                        bench_scale_instances, bench_scale_server, common)
 
 ALL = [
     ("fig1a_adapter_memory", bench_adapter_memory.main),
@@ -22,16 +36,44 @@ ALL = [
     ("roofline_table", bench_roofline.main),
 ]
 
+# CI smoke set: analytic tables (instant) + the real slot-engine cluster on
+# tiny shapes — enough to start a perf trajectory without burning CI minutes.
+SMOKE = [
+    ("fig1a_adapter_memory", bench_adapter_memory.main),
+    ("roofline_table", bench_roofline.main),
+    ("e2e_cluster_engine", lambda: bench_e2e_serving.cluster_main(
+        smoke=True)),
+]
 
-def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    for name, fn in ALL:
-        if only and only not in name:
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("only", nargs="?", default=None,
+                    help="substring filter on benchmark names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape subset (<= 60 s) + JSON artifact")
+    ap.add_argument("--out", default=None,
+                    help="write captured rows as JSON (default "
+                         "BENCH_smoke.json in --smoke mode)")
+    args = ap.parse_args(argv)
+
+    timings = {}
+    for name, fn in (SMOKE if args.smoke else ALL):
+        if args.only and args.only not in name:
             continue
         t0 = time.time()
         print(f"# === {name} ===", flush=True)
         fn()
-        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        timings[name] = round(time.time() - t0, 2)
+        print(f"# {name} done in {timings[name]:.1f}s", flush=True)
+
+    out_path = args.out or ("BENCH_smoke.json" if args.smoke else None)
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump({"results": common.RESULTS, "timings": timings}, f,
+                      indent=1)
+        print(f"# wrote {len(common.RESULTS)} rows -> {out_path}",
+              flush=True)
 
 
 if __name__ == '__main__':

@@ -4,7 +4,6 @@ re-provisioner react to a popularity shift (appendix A.1.1).
 
     PYTHONPATH=src python examples/provision_capacity.py
 """
-import numpy as np
 
 from repro.configs import get_config
 from repro.core import provisioning as P

@@ -1,8 +1,9 @@
 """End-to-end driver (the paper's system): serve a small MoE model with
-batched multi-tenant requests through the DISAGGREGATED architecture —
+CONTINUOUS BATCHING through both architectures —
 
-  scheduler-driven prefetch -> LoRA Server slot management -> per-layer
-  activation round trips -> identical tokens to the coupled path —
+  token-level Scheduler admission -> slot engines (requests join the
+  RUNNING batch mid-decode) -> shared LoRA Server slot management ->
+  per-layer activation round trips -> identical tokens to the coupled path —
 
 then the cluster-scale view: the same control-plane code inside the
 discrete-event simulator, comparing S-LoRA vs InfiniLoRA under load with the
@@ -16,44 +17,57 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.baselines import slora as presets
 from repro.configs import get_config
 from repro.core import provisioning as P
-from repro.core.adapter import init_adapter_pool
-from repro.core.lora_server import LoRAServer, ServerConfig, \
-    pool_tensors_from_adapter
+from repro.core.adapter import init_mixed_rank_pool
+from repro.core.lora_server import LoRAServer, ServerConfig
 from repro.models import model as model_mod
 from repro.serving import metrics, simulator, workload
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.workload import Request
 
 
 def functional_demo():
-    print("=== functional: disaggregated == coupled, token for token ===")
+    print("=== continuous batching: disaggregated == coupled, per token ===")
     cfg = dataclasses.replace(get_config("qwen3-moe-235b-a22b").reduced(),
                               lora_targets=("gate", "up", "down"),
-                              lora_rank=4)
+                              lora_rank=8)
     key = jax.random.PRNGKey(0)
     params = model_mod.init_params(cfg, key, dtype="float32")
-    pool = init_adapter_pool(cfg, 6, jax.random.fold_in(key, 1), rank=4,
-                             dtype=jnp.float32)
-    server = LoRAServer(cfg, ServerConfig(m=1, x=1, y=1, cache_slots=6,
-                                          rank=4), dtype=jnp.float32)
-    for a in range(6):
-        server.insert(a, pool_tensors_from_adapter(pool, a))
+    # heterogeneous adapter ranks (zero-padded to rank 8) through one pool
+    pool = init_mixed_rank_pool(cfg, [2, 4, 8, 4, 2, 8],
+                                jax.random.fold_in(key, 1),
+                                dtype=jnp.float32)
+    # staggered arrivals: rid 2/3 join while 0/1 are mid-decode; with only
+    # 2 slots per instance, rid 4 must wait for an eviction
+    reqs = [Request(0, 0, arrival=0.0, prompt_len=5, output_len=7),
+            Request(1, 2, arrival=0.0, prompt_len=4, output_len=6),
+            Request(2, 5, arrival=2.0, prompt_len=6, output_len=5),
+            Request(3, 1, arrival=3.0, prompt_len=3, output_len=5),
+            Request(4, 3, arrival=4.0, prompt_len=4, output_len=4)]
 
-    rng = np.random.default_rng(1)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (3, 6)))
-    ids = jnp.asarray([0, 3, 5])
+    def serve(disaggregated):
+        server = None
+        if disaggregated:
+            server = LoRAServer(cfg, ServerConfig(m=1, x=1, y=1,
+                                                  cache_slots=6, rank=8),
+                                dtype=jnp.float32)
+        ccfg = ClusterConfig(n_instances=2, n_slots=2, max_len=32,
+                             disaggregated=disaggregated,
+                             adapter_cache_slots=6)
+        cluster = Cluster(cfg, params, ccfg, pool, server=server)
+        return cluster.run(reqs)  # run() copies; reqs stay pristine
 
-    coupled = Engine(cfg, params, EngineConfig(max_len=32), pool=pool)
-    disagg = Engine(cfg, params, EngineConfig(max_len=32), pool=pool,
-                    server=server)
-    t1 = coupled.decode(coupled.prefill(prompts), prompts[:, -1:], 6, ids)
-    t2 = disagg.decode(disagg.prefill(prompts), prompts[:, -1:], 6, ids)
-    same = bool((np.asarray(t1) == np.asarray(t2)).all())
-    print(f"tokens identical across architectures: {same}")
+    out_c = serve(False)
+    out_d = serve(True)
+    for r in reqs:
+        print(f"  rid={r.rid} adapter={r.adapter_id} "
+              f"arrival={r.arrival:.0f}: {out_c['tokens'][r.rid]}")
+    same = out_c["tokens"] == out_d["tokens"]
+    print(f"mid-decode admission on both paths; tokens identical across "
+          f"architectures: {same}")
     assert same
 
 

@@ -7,7 +7,6 @@ tenant, with checkpoint/restart in the middle.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.adapter import init_adapter_pool

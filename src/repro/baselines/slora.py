@@ -14,7 +14,6 @@ Cache slots are derived from the actual memory budget, like the paper does.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 from repro.configs.base import ModelConfig

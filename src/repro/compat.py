@@ -1,0 +1,27 @@
+"""Cross-version JAX compatibility shims.
+
+``shard_map`` moved twice across JAX releases:
+
+  jax <= 0.5   : ``jax.experimental.shard_map.shard_map`` with a
+                 ``check_rep`` kwarg
+  jax >= 0.6   : top-level ``jax.shard_map`` with the kwarg renamed to
+                 ``check_vma``
+
+Model code imports ``shard_map`` from here and always passes ``check_vma``;
+the shim translates to whatever the installed JAX expects.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.6: public top-level API
+    from jax import shard_map as _shard_map
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x / 0.5.x: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              **kwargs):
+    kwargs[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

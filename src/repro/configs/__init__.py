@@ -4,8 +4,8 @@ The 10 assigned architectures are selectable via ``--arch <id>`` in the
 launchers; the paper's own models are additionally available for the serving
 benchmarks.
 """
-from repro.configs.base import ModelConfig, ShapeConfig, applicable
-from repro.configs.shapes import SHAPES, get_shape
+from repro.configs.base import ModelConfig, ShapeConfig, applicable  # noqa: F401
+from repro.configs.shapes import SHAPES, get_shape  # noqa: F401
 
 from repro.configs.qwen2_1_5b import CONFIG as _qwen2_1_5b
 from repro.configs.starcoder2_15b import CONFIG as _starcoder2_15b

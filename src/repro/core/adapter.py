@@ -18,6 +18,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 
@@ -103,6 +104,40 @@ def init_adapter_pool(cfg: ModelConfig, n_adapters: int, key,
         B = (jax.random.normal(kb, b_shape, jnp.float32) * 0.01).astype(dtype)
         tensors[tgt] = {"A": A, "B": B}
     return AdapterPool(cfg, n_adapters, r, alpha / r, tensors)
+
+
+def init_mixed_rank_pool(cfg: ModelConfig, ranks, key,
+                         dtype=jnp.bfloat16, alpha: float = 16.0
+                         ) -> AdapterPool:
+    """Pool of adapters with HETEROGENEOUS ranks (CaraServe-style rank-aware
+    serving without shape-specialized kernels): adapter i only uses the
+    first ranks[i] columns; the rest are zero in both A and B, so the padded
+    max-rank GEMM computes exactly the lower-rank product. The pool's
+    uniform scale is alpha/r_max; each adapter's B is pre-multiplied by
+    r_max/ranks[i] so its effective update keeps the standard alpha/r_i
+    LoRA convention. Works unchanged through both the coupled bgmv path and
+    the disaggregated LoRA Server.
+    """
+    ranks = list(int(r) for r in ranks)
+    r_max = max(ranks)
+    pool = init_adapter_pool(cfg, len(ranks), key, rank=r_max, dtype=dtype,
+                             alpha=alpha)
+    keep = jnp.asarray(np.arange(r_max)[None, :] <
+                       np.asarray(ranks)[:, None])         # (N, r_max)
+    # fold the per-adapter alpha/r_i scale into B (pool.scale is alpha/r_max)
+    rescale = jnp.asarray(r_max / np.asarray(ranks, np.float32))   # (N,)
+    for tgt, t in pool.tensors.items():
+        A, B = t["A"], t["B"]
+        # A: (L, N, [E,] d_in, r) — rank is the LAST dim
+        a_mask = keep.reshape((1, len(ranks)) + (1,) * (A.ndim - 3)
+                              + (r_max,))
+        # B: (L, N, [E,] r, d_out) — rank is the SECOND-TO-LAST dim
+        b_mask = keep.reshape((1, len(ranks)) + (1,) * (B.ndim - 4)
+                              + (r_max, 1))
+        b_fac = rescale.reshape((1, len(ranks)) + (1,) * (B.ndim - 2))
+        t["A"] = (A * a_mask.astype(A.dtype)).astype(A.dtype)
+        t["B"] = (B * b_mask.astype(B.dtype) * b_fac).astype(B.dtype)
+    return pool
 
 
 def abstract_adapter_pool(cfg: ModelConfig, n_adapters: int,

@@ -15,16 +15,21 @@ under load (overlap, queueing, SLOs) is the simulator's job — the paper's own
 evaluation quantity. The per-layer Python loop here is the honest structure
 of the per-layer round trip; on real hardware each call is an async DMA +
 remote dispatch that overlaps the client's next GEMM.
+
+Two decode steps share one per-layer MoE hook body (``_moe_hooks_layer``):
+``disagg_decode_step`` (static batch, scalar position — the legacy engine
+API) and ``disagg_decode_step_slots`` (continuous batching, per-slot
+positions — the slot engine). Keeping the hook math in one place is what
+guarantees both stay token-identical to the coupled path.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import cache as cache_mod
 from repro.models import layers as ll
 from repro.models import moe as moe_mod
 from repro.core.lora_server import LoRAServer
@@ -37,7 +42,6 @@ def _layer_params(params, l):
 
 
 def _client_attn(x, lp, cfg, pos, k_c, v_c, positions):
-    B = x.shape[0]
     h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
     q, k, v = ll.qkv_project(h, lp["attn"], cfg)
     q = ll.apply_rope(q, positions, cfg.rope_theta)
@@ -46,6 +50,98 @@ def _client_attn(x, lp, cfg, pos, k_c, v_c, positions):
         q[:, 0], k[:, 0], v[:, 0], k_c, v_c, pos, window=cfg.sliding_window)
     x = x + ll.out_project(att[:, None], lp["attn"])
     return x, k_c, v_c
+
+
+def _moe_hooks_layer(x, lp, cfg: ModelConfig, l: int, server: LoRAServer,
+                     adapter_ids, lora_scale: float):
+    """One MoE layer with the two server hook points (paper Fig. 7b): base
+    GEMMs on the client, LoRA deltas from the remote server, router-weight
+    combine. x: (B, 1, d) post-attention residual; adapter_ids: (B,) global
+    ids (-1 rows get zero delta). Shared by BOTH decode-step variants so the
+    hook math cannot diverge between them."""
+    B = x.shape[0]
+    E, K = cfg.n_experts, cfg.top_k
+    h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    xf = h.reshape(-1, cfg.d_model)
+    T = xf.shape[0]
+    ids, wts = moe_mod.route(xf, lp["moe"]["router"], E, K)
+    # same dropless threshold as the coupled path (_moe_local): the two
+    # paths must drop (or not drop) identically at EVERY batch size, else
+    # the coupled==disagg token equality breaks on huge decode buckets
+    C = moe_mod.capacity(T, K, E, cfg.capacity_factor,
+                         dropless=(T * K <= 4096))
+    xe, slot_tok = moe_mod.local_dispatch(xf, ids, C, E)  # (E, C, d)
+    rows = xe.reshape(E * C, cfg.d_model)
+    row_expert = (jnp.arange(E * C, dtype=jnp.int32) // C)
+    tok_safe = jnp.minimum(slot_tok, T - 1)
+    row_adapter = jnp.where(slot_tok < T,
+                            jnp.asarray(adapter_ids)[tok_safe], -1)
+
+    # hook 1: up/gate — client GEMM + server delta (overlapped on HW)
+    mp = lp["moe"]
+    g = jnp.einsum("ecd,edf->ecf", xe, mp["gate"],
+                   preferred_element_type=F32)
+    u = jnp.einsum("ecd,edf->ecf", xe, mp["up"],
+                   preferred_element_type=F32)
+    d_up = server.compute("up", l, rows, row_adapter, row_expert)
+    d_up = d_up.reshape(E, C, -1) * lora_scale
+    dg, du = jnp.split(d_up, 2, axis=-1)
+    act = (jax.nn.silu(g + dg) * (u + du)).astype(x.dtype)
+
+    # hook 2: down
+    y = jnp.einsum("ecf,efd->ecd", act, mp["down"],
+                   preferred_element_type=F32)
+    d_dn = server.compute("down", l, act.reshape(E * C, -1),
+                          row_adapter, row_expert)
+    y = y + d_dn.reshape(E, C, -1) * lora_scale
+
+    # combine with router weights (same bookkeeping as the coupled path)
+    slot_expert = jnp.arange(E * C, dtype=jnp.int32) // C
+    match = ids[tok_safe] == slot_expert[:, None]
+    w_slot = jnp.where(slot_tok < T,
+                       jnp.sum(jnp.where(match, wts[tok_safe], 0.0), -1),
+                       0.0)
+    out = jnp.zeros((T + 1, cfg.d_model), F32)
+    out = out.at[slot_tok].add(y.reshape(E * C, -1) * w_slot[:, None])
+    return x + out[:T].reshape(B, 1, cfg.d_model).astype(x.dtype)
+
+
+def disagg_decode_step_slots(params, cfg: ModelConfig, k_cache, v_cache,
+                             tokens, pos_vec, server: LoRAServer,
+                             adapter_ids, lora_scale: float):
+    """Continuous-batching disaggregated decode (per-slot positions).
+
+    The slot-engine twin of ``transformer.decode_step_slots``: identical
+    client math (embed -> attn -> MoE base GEMMs), with the LoRA deltas
+    computed by the remote ``server`` at the two MoE hook points instead of
+    in-model. tokens: (B, 1); pos_vec: (B,) int32 (-1 = inactive slot, its
+    adapter id must be -1 too so the server contributes zero delta);
+    k_cache/v_cache: (L, B, S, KV, hd).
+
+    Returns (logits (B, V), k_cache', v_cache').
+    """
+    assert cfg.is_moe, "disaggregated hooks target MoE FFNs (paper Fig. 3b)"
+    x = ll.embed(tokens, params["embed"])
+    positions = jnp.maximum(pos_vec, 0)[:, None]
+    adapter_ids = jnp.asarray(adapter_ids)
+
+    for l in range(cfg.n_layers):
+        lp = _layer_params(params, l)
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = ll.qkv_project(h, lp["attn"], cfg)
+        q = ll.apply_rope(q, positions, cfg.rope_theta)
+        k = ll.apply_rope(k, positions, cfg.rope_theta)
+        att, k_l, v_l = ll.decode_attention_update_slots(
+            q[:, 0], k[:, 0], v[:, 0], k_cache[l], v_cache[l], pos_vec,
+            window=cfg.sliding_window)
+        k_cache = k_cache.at[l].set(k_l)
+        v_cache = v_cache.at[l].set(v_l)
+        x = x + ll.out_project(att[:, None], lp["attn"])
+        x = _moe_hooks_layer(x, lp, cfg, l, server, adapter_ids, lora_scale)
+
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params.get("lm_head", params["embed"]))
+    return logits[:, 0], k_cache, v_cache
 
 
 def disagg_decode_step(params, cfg: ModelConfig, cache: Dict, tokens,
@@ -62,7 +158,6 @@ def disagg_decode_step(params, cfg: ModelConfig, cache: Dict, tokens,
     x = ll.embed(tokens, params["embed"])
     positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
     new_k, new_v = cache["k"], cache["v"]
-    E, K = cfg.n_experts, cfg.top_k
 
     for l in range(cfg.n_layers):
         lp = _layer_params(params, l)
@@ -70,46 +165,7 @@ def disagg_decode_step(params, cfg: ModelConfig, cache: Dict, tokens,
                                    positions)
         new_k = new_k.at[l].set(k_l)
         new_v = new_v.at[l].set(v_l)
-
-        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
-        xf = h.reshape(-1, cfg.d_model)
-        T = xf.shape[0]
-        ids, wts = moe_mod.route(xf, lp["moe"]["router"], E, K)
-        C = moe_mod.capacity(T, K, E, cfg.capacity_factor, dropless=True)
-        xe, slot_tok = moe_mod.local_dispatch(xf, ids, C, E)  # (E, C, d)
-        rows = xe.reshape(E * C, cfg.d_model)
-        row_expert = (jnp.arange(E * C, dtype=jnp.int32) // C)
-        tok_safe = jnp.minimum(slot_tok, T - 1)
-        row_adapter = jnp.where(slot_tok < T,
-                                jnp.asarray(adapter_ids)[tok_safe], -1)
-
-        # hook 1: up/gate — client GEMM + server delta (overlapped on HW)
-        mp = lp["moe"]
-        g = jnp.einsum("ecd,edf->ecf", xe, mp["gate"],
-                       preferred_element_type=F32)
-        u = jnp.einsum("ecd,edf->ecf", xe, mp["up"],
-                       preferred_element_type=F32)
-        d_up = server.compute("up", l, rows, row_adapter, row_expert)
-        d_up = d_up.reshape(E, C, -1) * lora_scale
-        dg, du = jnp.split(d_up, 2, axis=-1)
-        act = (jax.nn.silu(g + dg) * (u + du)).astype(x.dtype)
-
-        # hook 2: down
-        y = jnp.einsum("ecf,efd->ecd", act, mp["down"],
-                       preferred_element_type=F32)
-        d_dn = server.compute("down", l, act.reshape(E * C, -1),
-                              row_adapter, row_expert)
-        y = y + d_dn.reshape(E, C, -1) * lora_scale
-
-        # combine with router weights (same bookkeeping as the coupled path)
-        slot_expert = jnp.arange(E * C, dtype=jnp.int32) // C
-        match = ids[tok_safe] == slot_expert[:, None]
-        w_slot = jnp.where(slot_tok < T,
-                           jnp.sum(jnp.where(match, wts[tok_safe], 0.0), -1),
-                           0.0)
-        out = jnp.zeros((T + 1, cfg.d_model), F32)
-        out = out.at[slot_tok].add(y.reshape(E * C, -1) * w_slot[:, None])
-        x = x + out[:T].reshape(B, 1, cfg.d_model).astype(x.dtype)
+        x = _moe_hooks_layer(x, lp, cfg, l, server, adapter_ids, lora_scale)
 
     new_cache = dict(cache)
     new_cache["k"], new_cache["v"] = new_k, new_v

@@ -13,7 +13,6 @@ Contracts:
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 F32 = jnp.float32

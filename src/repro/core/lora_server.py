@@ -23,17 +23,16 @@ code path end to end.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
-from repro.core.adapter import AdapterPool, active_targets, target_dims
+from repro.core.adapter import AdapterPool
 from repro.core.placement import Placement
 
 F32 = jnp.float32
@@ -101,6 +100,7 @@ class LoRAServer:
         self.slot_of: Dict[int, int] = {}
         self.free_slots = list(range(M))
         self._steps = {}
+        self._lut = None  # cached id->slot array, invalidated on insert/evict
 
     # ------------------------------------------------------------------ #
     # residency management (driven by serving.cache's policy)             #
@@ -118,6 +118,7 @@ class LoRAServer:
             raise RuntimeError("LoRA server cache full")
         slot = self.free_slots.pop(0)
         self.slot_of[adapter_id] = slot
+        self._lut = None
         if tensors is not None:
             self._write_slot(slot, tensors, layers)
         return slot
@@ -125,6 +126,7 @@ class LoRAServer:
     def evict(self, adapter_id: int):
         slot = self.slot_of.pop(adapter_id)
         self.free_slots.append(slot)
+        self._lut = None
 
     def _write_slot(self, slot: int, tensors, layers=None):
         """tensors: {'up_A': (L, E, d, r), ...} full-layer stacks."""
@@ -199,16 +201,25 @@ class LoRAServer:
         self._steps[hook] = fn
         return fn
 
+    def resolve_slots(self, adapter_ids) -> np.ndarray:
+        """Map (R,) global adapter ids -> resident slot ids (-1 = absent /
+        inactive row). The LUT is cached across calls — one decode step hits
+        this 2 x n_layers times — and rebuilt only after insert/evict."""
+        if self._lut is None:
+            lut = np.full(max(self.slot_of, default=0) + 2, -1, np.int32)
+            for aid, slot in self.slot_of.items():
+                lut[aid] = slot
+            self._lut = lut
+        lut = self._lut
+        ids = np.asarray(adapter_ids)
+        return np.where((ids >= 0) & (ids < len(lut)),
+                        lut[np.clip(ids, 0, len(lut) - 1)], -1)
+
     def compute(self, hook: str, layer: int, rows, adapter_ids, expert_ids):
         """rows: (R, d_in); adapter_ids: (R,) global ids (resolved to slots
         here); expert_ids: (R,). Returns deltas (R, d_out) f32."""
         stage, li = layer % self.y, layer // self.y
-        lut = np.full(max(self.slot_of, default=0) + 2, -1, np.int32)
-        for aid, slot in self.slot_of.items():
-            lut[aid] = slot
-        ids = np.asarray(adapter_ids)
-        slots = jnp.asarray(np.where((ids >= 0) & (ids < len(lut)),
-                                     lut[np.clip(ids, 0, len(lut) - 1)], -1))
+        slots = jnp.asarray(self.resolve_slots(adapter_ids))
         if hook == "up":
             A, B = self.pool["up_A"], self.pool["up_B"]
         else:

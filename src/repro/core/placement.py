@@ -16,7 +16,6 @@ server's shard_map specs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import numpy as np
 

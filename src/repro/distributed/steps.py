@@ -15,7 +15,6 @@ Rule-sets (see DESIGN.md §7):
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional
 
 import jax
@@ -23,7 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.distributed.sharding import ShardingRules, use_rules, constrain
+from repro.distributed.sharding import ShardingRules, use_rules
 from repro.models import cache as cache_mod
 from repro.models import model as model_mod
 from repro.models import transformer

@@ -21,7 +21,6 @@ block dims are 128-lane aligned via the ops.py padding wrapper.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ VMEM-resident: Cb x db + db x fb + Cb x fb.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

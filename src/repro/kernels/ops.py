@@ -16,7 +16,6 @@ import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import bgmv as _bgmv
 from repro.kernels import gmm as _gmm

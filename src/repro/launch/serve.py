@@ -18,7 +18,6 @@ from repro.baselines import slora as presets
 from repro.configs import get_config
 from repro.core import adapter as adapter_mod
 from repro.core import lora_server as ls
-from repro.models import cache as cache_mod
 from repro.models import model as model_mod
 from repro.serving import metrics, simulator, workload
 from repro.serving.engine import Engine, EngineConfig

@@ -17,7 +17,7 @@ halves decode HBM traffic and cache footprint (beyond-paper optimization).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ Conventions:
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -243,7 +242,7 @@ def causal_attention(q, k, v, *, causal: bool = True, window: int = 0,
         return out.reshape(B, Sq, H, hd)
 
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     n_model = mesh_axis_size(model_ax)
     H_loc = H // n_model
@@ -284,10 +283,18 @@ def _local_decode_scores(q, k, v, key_positions, pos, window, k_scale=None,
     hd = q.shape[-1]
     scale = 1.0 / np.sqrt(hd)
     scores = jnp.einsum("bkgd,bskd->bkgs", q.astype(F32), k.astype(F32)) * scale
-    valid = (key_positions >= 0) & (key_positions < pos)
-    if window:
-        valid &= key_positions >= pos - window
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    if jnp.ndim(pos) == 0:  # one shared position (static batch)
+        valid = (key_positions >= 0) & (key_positions < pos)
+        if window:
+            valid &= key_positions >= pos - window
+        vmask = valid[None, None, None, :]
+    else:  # per-row positions (continuous batching: pos is (B,))
+        kp = key_positions[None, :]
+        valid = (kp >= 0) & (kp < pos[:, None])
+        if window:
+            valid &= kp >= pos[:, None] - window
+        vmask = valid[:, None, None, :]
+    scores = jnp.where(vmask, scores, NEG_INF)
     m = jnp.max(scores, axis=-1)
     e = jnp.exp(scores - m[..., None])
     l = jnp.sum(e, axis=-1)
@@ -378,7 +385,7 @@ def decode_attention_update(q, k_new, v_new, k_cache, v_cache, pos, *,
         return (out.reshape(B, H, hd).astype(q.dtype), k_c, v_c, ks, vs, kp)
 
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     batch_axes = rules.spec(["batch"], [B])[0]
     kv_spec = P(batch_axes, axis, None, None)
@@ -407,6 +414,46 @@ def decode_attention_update(q, k_new, v_new, k_cache, v_cache, pos, *,
     out, k_c, v_c, kp, ks, vs = fn(qg, k_new, v_new, k_cache, v_cache,
                                    key_positions, k_scale, v_scale, pos, slot)
     return (out.reshape(B, H, hd).astype(q.dtype), k_c, v_c, ks, vs, kp)
+
+
+def decode_attention_update_slots(q, k_new, v_new, k_cache, v_cache, pos_vec,
+                                  *, window: int = 0):
+    """Per-slot KV-write + flash-decode attention for continuous batching.
+
+    Each batch row is an engine slot with its OWN sequence length: this
+    token's write position and the valid-key mask differ per row, unlike
+    ``decode_attention_update`` where one scalar ``pos`` covers the batch.
+
+    q: (B, H, hd); k_new/v_new: (B, KV, hd) post-RoPE; k_cache/v_cache:
+    (B, S, KV, hd); pos_vec: (B,) int32 tokens already cached per row.
+    Rows with pos_vec < 0 are INACTIVE slots: their cache rows are left
+    untouched and their output is ignorable garbage (finite, never NaN).
+
+    Single-shard only — the slot engine runs one instance per host; the
+    sharded static-batch variant stays ``decode_attention_update``.
+
+    Returns (out (B, H, hd), k_cache', v_cache').
+    """
+    B, H, hd = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    S = k_cache.shape[1]
+    active = pos_vec >= 0
+    idx = jnp.clip(pos_vec, 0, S - 1)
+    bidx = jnp.arange(B)
+    # masked per-row scatter write: inactive rows rewrite their old value
+    k_row = jnp.where(active[:, None, None], k_new.astype(k_cache.dtype),
+                      k_cache[bidx, idx])
+    v_row = jnp.where(active[:, None, None], v_new.astype(v_cache.dtype),
+                      v_cache[bidx, idx])
+    k_cache = k_cache.at[bidx, idx].set(k_row)
+    v_cache = v_cache.at[bidx, idx].set(v_row)
+    qg = q.reshape(B, KV, G, hd)
+    kp = jnp.arange(S, dtype=jnp.int32)
+    m, l, o = _local_decode_scores(qg, k_cache, v_cache, kp, pos_vec + 1,
+                                   window)
+    out = o / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(B, H, hd).astype(q.dtype), k_cache, v_cache
 
 
 def quantize_kv_token(x):
@@ -446,7 +493,7 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
         return out.reshape(B, H, hd).astype(q.dtype)
 
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     n_shards = mesh_axis_size(axis)
     S_loc = S // n_shards
@@ -516,7 +563,7 @@ def mlp(x, p, cfg):
                          p["down"]).astype(x.dtype)
 
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
 
     # weight at-rest specs (dim0/dim1 per param_specs: fsdp x model)
     def wspec(name, dim_ff):

@@ -11,14 +11,11 @@ and exports hook activations (see repro.core.disagg).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import constrain
-from repro.models import cache as cache_mod
 from repro.models import layers as ll
 from repro.models import moe as moe_mod
 from repro.models import ssm
@@ -157,11 +154,13 @@ def _embed_inputs(params, cfg, tokens, frontend_emb):
 
 
 def forward(params, cfg, tokens, frontend_emb=None, kind="train",
-            lora_ctx=None, collect_kv=False):
+            lora_ctx=None, collect_kv=False, unembed=True):
     """Parallel forward. tokens: (B, S_text); frontend_emb: (B, S_front, d).
 
     Returns (logits (B, S, V), aux) where aux holds per-layer K/V stacks when
     collect_kv (prefill) or SSM final states for recurrent families.
+    ``unembed=False`` (KV-only prefill, attention LMs) skips the final norm
+    and lm-head GEMM and returns (None, aux).
     """
     fam = cfg.family
     if fam == "audio":
@@ -192,6 +191,8 @@ def forward(params, cfg, tokens, frontend_emb=None, kind="train",
         body = jax.checkpoint(
             body, policy=jax.checkpoint_policies.nothing_saveable)
     x, kvs = jax.lax.scan(body, x, (params["layers"], lora_stack))
+    if not unembed:
+        return None, kvs
     x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = ll.unembed(x, params.get("lm_head", params["embed"]))
     return logits, kvs
@@ -314,6 +315,85 @@ def _forward_encdec(params, cfg, tokens, frontend_emb, kind, collect_kv):
     x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = ll.unembed(x, params.get("lm_head", params["embed"]))
     return logits, kvs
+
+
+# --------------------------------------------------------------------- #
+# Continuous-batching decode step (per-slot positions)                    #
+# --------------------------------------------------------------------- #
+def decode_step_slots(params, cfg, k_cache, v_cache, tokens, pos_vec,
+                      lora_ctx=None):
+    """One decode token for a batch of engine SLOTS with per-slot positions.
+
+    The continuous-batching data plane: rows are slots admitted/evicted at
+    step boundaries, so each carries its own sequence length. tokens: (B, 1);
+    pos_vec: (B,) int32 position of this token per slot (-1 = inactive slot:
+    no cache write, garbage logits). k_cache/v_cache: (L, B, S, KV, hd).
+    dense/moe/vlm families only (the serving targets); no int8 KV.
+
+    Returns (logits (B, V), k_cache', v_cache').
+    """
+    fam = cfg.family
+    if fam not in ("dense", "moe", "vlm"):
+        raise ValueError(f"slot decode supports attention LMs, not {fam}")
+    B = tokens.shape[0]
+    x = ll.embed(tokens, params["embed"])
+    positions = jnp.maximum(pos_vec, 0)[:, None]  # (B, 1) for RoPE
+
+    ids_tok = lora_ctx["ids"] if lora_ctx is not None else None
+    lora_scale = lora_ctx["scale"] if lora_ctx is not None else 1.0
+    lora_stack = _lora_slice(lora_ctx, ("q", "k", "v", "o", "gate", "up",
+                                        "down"))
+
+    def body(carry, xs):
+        x, k_all, v_all, l = carry
+        lp, lora_layer = xs
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = ll.qkv_project(h, lp["attn"], cfg)
+        if lora_layer is not None:
+            xf = h.reshape(B, -1)
+            for name in ("q", "k", "v"):
+                dlt = _delta(xf, lora_layer, name, ids_tok, lora_scale)
+                if dlt is not None:
+                    if name == "q":
+                        q = q + dlt.reshape(q.shape).astype(q.dtype)
+                    elif name == "k":
+                        k = k + dlt.reshape(k.shape).astype(k.dtype)
+                    else:
+                        v = v + dlt.reshape(v.shape).astype(v.dtype)
+        q = ll.apply_rope(q, positions, cfg.rope_theta)
+        k = ll.apply_rope(k, positions, cfg.rope_theta)
+        k_l = jax.lax.dynamic_index_in_dim(k_all, l, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(v_all, l, 0, keepdims=False)
+        att, k_l, v_l = ll.decode_attention_update_slots(
+            q[:, 0], k[:, 0], v[:, 0], k_l, v_l, pos_vec,
+            window=cfg.sliding_window)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, k_l, l, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, v_l, l, 0)
+        att = att[:, None]  # (B, 1, H, hd)
+        y = ll.out_project(att, lp["attn"])
+        if lora_layer is not None:
+            dlt = _delta(att.reshape(B, -1), lora_layer, "o", ids_tok,
+                         lora_scale)
+            if dlt is not None:
+                y = y + dlt.reshape(y.shape).astype(y.dtype)
+        x = x + y
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y = moe_mod.moe_block(h, lp["moe"], cfg, kind="decode",
+                                  lora=lora_layer, ids_tok=ids_tok,
+                                  lora_scale=lora_scale)
+        else:
+            y = _mlp_with_lora(h, lp["mlp"], cfg, lora_layer, ids_tok,
+                               lora_scale)
+        x = x + y
+        return (x, k_all, v_all, l + 1), None
+
+    carry0 = (x, k_cache, v_cache, jnp.int32(0))
+    (x, k_cache, v_cache, _), _ = jax.lax.scan(
+        body, carry0, (params["layers"], lora_stack))
+    x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = ll.unembed(x, params.get("lm_head", params["embed"]))
+    return logits[:, 0], k_cache, v_cache
 
 
 # --------------------------------------------------------------------- #

@@ -17,7 +17,7 @@ All times are simulation timestamps (seconds); the simulator advances them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Set
+from typing import Dict, Optional
 
 
 @dataclasses.dataclass

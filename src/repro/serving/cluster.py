@@ -1,0 +1,203 @@
+"""Cluster driver: N slot-engine instances under the token-level Scheduler.
+
+This is the REAL-execution twin of ``serving/simulator.py``: the same
+control plane (``Scheduler`` admission/pinning/retirement, ``LoRACache``
+residency, greedy adapter placement) drives actual JAX decode steps on
+``Engine`` instances instead of the analytic step-time model. Time is
+virtual — every global decode round advances the clock by ``step_time`` —
+so admission, layer-wise adapter loading, and SLO bookkeeping run the exact
+code paths the simulator exercises, while tokens come from the model.
+
+Both systems run end to end:
+
+  coupled (S-LoRA)       : per-instance adapter caches, requests routed to
+                           the instance owning their adapter (greedy
+                           pre-assignment, paper §6.1), adapters applied
+                           in-model
+  disaggregated          : one shared LoRA cache; any instance serves any
+  (InfiniLoRA)             request (least-loaded first); the shared
+                           ``LoRAServer``'s resident slots mirror the cache
+
+Requests are admitted at decode-step boundaries into a RUNNING batch
+(continuous batching) and evicted the step they finish; greedy decoding is
+deterministic, so for the same workload the two modes must produce
+identical tokens per request — the architectural equivalence claim,
+now measurable under churn rather than on a static batch.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.adapter import AdapterPool
+from repro.core.lora_server import LoRAServer, pool_tensors_from_adapter
+from repro.serving.cache import LoRACache
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.scheduler import InstanceState, Scheduler, \
+    assign_adapters_greedy
+from repro.serving.workload import Request
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    n_instances: int = 2
+    n_slots: int = 4                 # decode slots (max batch) per instance
+    max_len: int = 64
+    disaggregated: bool = False
+    adapter_cache_slots: int = 8     # per instance (coupled) / shared (disagg)
+    policy: str = "fcfs"
+    step_time: float = 1.0           # virtual seconds per decode round
+    # adapter load bandwidth; inf -> load time exactly 0, so cold adapters
+    # admit the SAME round (any finite bw defers admission one round)
+    host_bw: float = float("inf")
+    layerwise_loading: bool = True
+    max_rounds: int = 100_000
+
+
+class Cluster:
+    """N client instances against one adapter plane (pool or shared server)."""
+
+    def __init__(self, cfg: ModelConfig, params, ccfg: ClusterConfig,
+                 pool: AdapterPool, server: Optional[LoRAServer] = None):
+        if ccfg.disaggregated and server is None:
+            raise ValueError("disaggregated mode needs a LoRAServer")
+        if ccfg.disaggregated and server.M < ccfg.adapter_cache_slots:
+            # the shared LoRACache mirrors into the server's slot pool, so a
+            # smaller server would hit "cache full" mid-run during sync
+            raise ValueError(
+                f"LoRAServer has {server.M} slots < adapter_cache_slots="
+                f"{ccfg.adapter_cache_slots}")
+        self.cfg = cfg
+        self.ccfg = ccfg
+        self.pool = pool
+        self.server = server if ccfg.disaggregated else None
+        ecfg = EngineConfig(max_len=ccfg.max_len, n_slots=ccfg.n_slots)
+        self.engines = [Engine(cfg, params, ecfg, pool=pool,
+                               server=self.server)
+                        for _ in range(ccfg.n_instances)]
+
+    # ------------------------------------------------------------------ #
+    def _prompt(self, req: Request) -> np.ndarray:
+        """Deterministic prompt tokens for a request: either the tokens it
+        carries (served verbatim — feasibility is checked up front in
+        ``run``, never silently truncated), or a seeded draw from its rid —
+        identical across modes so token-equivalence is meaningful. Synthetic
+        prompts are clamped so prompt + output fit the KV allocation."""
+        if req.prompt:
+            return np.asarray(req.prompt, np.int32).reshape(-1)
+        room = self.ccfg.max_len - req.output_len - 1
+        plen = max(1, min(req.prompt_len, room))
+        rng = np.random.default_rng(7919 + req.rid)
+        return rng.integers(0, self.cfg.vocab_size, plen).astype(np.int32)
+
+    def _sync_server(self, cache: LoRACache) -> None:
+        """Mirror the shared cache's residency set into the LoRAServer's
+        slot pool (evictions first so slots free up for the inserts)."""
+        for aid in list(self.server.slot_of):
+            if aid not in cache.resident:
+                self.server.evict(aid)
+        for aid in cache.resident:
+            if not self.server.is_resident(aid):
+                self.server.insert(aid,
+                                   pool_tensors_from_adapter(self.pool, aid))
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: Sequence[Request]) -> Dict:
+        """Serve ``requests`` to completion (or ``max_rounds``): returns
+        {"tokens": {rid: [token, ...]}, "requests": ..., "rounds": n}.
+
+        The caller's Request objects are not mutated — runtime fields
+        (first_token/finish/...) land on the copies in ``out["requests"]``,
+        so one request list can be reused across runs/modes."""
+        requests = [copy.copy(r) for r in requests]
+        ccfg = self.ccfg
+        for r in requests:
+            # engine feasibility: plen + output_len <= max_len + 1, plen >= 1
+            # (the KV-capacity bound the admission contract promises) —
+            # reject up front rather than crash mid-run at the engine guard.
+            # Caller-supplied prompts are served verbatim, so they must fit;
+            # synthetic prompts are clamped in _prompt down to one token.
+            plen = len(r.prompt) if r.prompt else 1
+            if plen + r.output_len > ccfg.max_len + 1:
+                raise ValueError(
+                    f"request {r.rid}: prompt_len {plen} + output_len "
+                    f"{r.output_len} cannot fit a max_len={ccfg.max_len} "
+                    f"slot")
+            if not 0 <= r.adapter_id < self.pool.n:
+                # out-of-range ids would be silently clamped by the gather
+                # kernels to the last adapter's weights
+                raise ValueError(
+                    f"request {r.rid}: adapter_id {r.adapter_id} outside "
+                    f"pool of {self.pool.n}")
+        n_adapters = max(self.pool.n,
+                         max((r.adapter_id for r in requests), default=0) + 1)
+        instances = [InstanceState(i, ccfg.n_slots)
+                     for i in range(ccfg.n_instances)]
+        adapter_bytes = self.pool.bytes_per_adapter()
+        mk_cache = lambda: LoRACache(  # noqa: E731
+            ccfg.adapter_cache_slots, adapter_bytes, self.cfg.n_layers,
+            host_bw=ccfg.host_bw, layerwise=ccfg.layerwise_loading,
+            prefetch=ccfg.layerwise_loading)
+        if ccfg.disaggregated:
+            caches = {-1: mk_cache()}
+            owner = None
+        else:
+            counts = np.bincount([r.adapter_id for r in requests],
+                                 minlength=n_adapters).astype(float)
+            owner = assign_adapters_greedy(n_adapters, counts,
+                                           ccfg.n_instances)
+            caches = {i: mk_cache() for i in range(ccfg.n_instances)}
+        sched = Scheduler(instances, caches, owner, policy=ccfg.policy,
+                          shared_cache=ccfg.disaggregated)
+
+        tokens: Dict[int, List[int]] = {r.rid: [] for r in requests}
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        pi = 0
+        rnd = 0
+        while rnd < ccfg.max_rounds:
+            now = rnd * ccfg.step_time
+            while pi < len(pending) and pending[pi].arrival <= now:
+                sched.enqueue(pending[pi], now)
+                pi += 1
+            # admission at the step boundary, least-loaded instance first
+            for iid in sorted(range(ccfg.n_instances),
+                              key=lambda i: instances[i].batch):
+                admitted = sched.admit(iid, now)
+                if admitted and ccfg.disaggregated:
+                    self._sync_server(caches[-1])
+                for r in admitted:
+                    self.engines[iid].add_request(r.rid, self._prompt(r),
+                                                  r.adapter_id)
+            # one decode step per busy instance; requests admitted above are
+            # already in the running batch (continuous batching)
+            step_end = (rnd + 1) * ccfg.step_time
+            busy = False
+            for iid in range(ccfg.n_instances):
+                eng = self.engines[iid]
+                if not eng.active_rids():
+                    continue
+                busy = True
+                for rid, tok in eng.step().items():
+                    tokens[rid].append(tok)
+                for r in sched.step_complete(iid, step_end):
+                    eng.evict_request(r.rid)
+            rnd += 1
+            if not busy and pi >= len(pending) and sched.queue_len() == 0:
+                break
+        unfinished = [r.rid for r in requests if r.finish < 0]
+        if unfinished:
+            # never return silently-truncated token streams (they would make
+            # cross-mode equality checks pass trivially on empty dicts)
+            raise RuntimeError(
+                f"cluster run ended after {rnd} rounds with unfinished "
+                f"requests {unfinished} (queue={sched.queue_len()}) — "
+                f"adapter cache too small or max_rounds exhausted?")
+        return {"tokens": tokens, "requests": list(requests), "rounds": rnd,
+                "cache_stats": {
+                    k: {"hits": c.hits, "misses": c.misses,
+                        "evictions": c.evictions}
+                    for k, c in caches.items()}}

@@ -1,19 +1,43 @@
 """Decode engine: the REAL JAX execution path for serving (examples/tests).
 
-Wraps prefill -> cache -> token-by-token decode for a batch of requests with
-per-request adapters, in either mode:
+The primary structure is a SLOT-BASED CONTINUOUS-BATCHING engine: the engine
+owns ``n_slots`` persistent decode slots backed by one KV cache
+(``models/cache.py`` layout, (L, n_slots, S, KV, hd)); requests are admitted
+into free slots and evicted at any decode-step boundary, so a new request
+joins the RUNNING batch without restarting anyone else. Each slot carries
+its own position and adapter id; one ``step()`` decodes one token for every
+occupied slot.
 
-  coupled        : adapters applied in-model (S-LoRA batched path)
-  disaggregated  : base-only client + remote LoRAServer round trips
+Execution is shape-bucketed: occupied slots are gathered into a contiguous
+batch padded to the next power-of-two bucket, so jit compiles once per
+bucket size (and once per prompt-length bucket for prefill) regardless of
+the admission pattern. The jitted steps are MODULE-LEVEL functions taking
+the (hashable, frozen) ModelConfig statically, so N engine instances of one
+cluster share a single compile cache instead of recompiling per instance.
+Padding rows run with position -1 (no cache write, output discarded) and
+are scattered back with out-of-bounds indices in ``mode="drop"`` so a
+padding duplicate can never clobber an active slot.
 
-The cluster-scale wall-clock behavior is the simulator's job; this engine is
-the functional data plane (it is what you would deploy per instance, jitted
-per shape bucket).
+Both adapter modes share the slot machinery:
+
+  coupled        : adapters applied in-model (S-LoRA batched path) — the
+                   whole step is one jit per bucket
+  disaggregated  : base-only client + remote LoRAServer round trips per
+                   layer (host dispatch, so gather/step/scatter run eagerly)
+
+Prefill primes a slot's cache rows with the prompt's first ``len-1`` tokens
+via the parallel ``forward(collect_kv=True)`` path (LoRA-free: under PD
+disaggregation prefill runs on separate instances, paper footnote 1); the
+last prompt token is the first decode input. Cluster-scale wall-clock
+behavior stays the simulator's job; this engine is the functional data plane
+you would deploy per instance. The pre-refactor static-batch ``prefill`` /
+``decode`` API is kept as thin legacy wrappers.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import functools
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +48,90 @@ from repro.core import disagg as disagg_mod
 from repro.core.adapter import AdapterPool
 from repro.core.lora_server import LoRAServer
 from repro.models import cache as cache_mod
-from repro.models import model as model_mod
 from repro.models import transformer
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Next power-of-two >= n, capped at cap (>= 1)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+# ------------------------------------------------------------------ #
+# module-level jitted steps (compile cache shared across instances)   #
+# ------------------------------------------------------------------ #
+# The caller always overwrites self._k/_v with the returned caches, so the
+# old buffers are donated for in-place XLA updates — avoiding a 2x KV peak
+# and a full-cache copy per decoded token. CPU does not implement donation
+# (it would just warn), so gate on the backend — resolved LAZILY on first
+# call: probing jax.default_backend() at import would initialize the JAX
+# backend as a side effect of importing this module, breaking later
+# jax.distributed.initialize() / platform overrides in launchers.
+def _kv_jit(fn, kv_argnums, **jit_kw):
+    jitted = []
+
+    def call(*args):
+        if not jitted:
+            kw = dict(jit_kw)
+            if jax.default_backend() != "cpu":
+                kw["donate_argnums"] = kv_argnums
+            jitted.append(jax.jit(fn, **kw))
+        return jitted[0](*args)
+    return call
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _decode_static(params, cfg, cache, tokens, lora_ctx):
+    return transformer.decode_step(params, cfg, cache, tokens, lora_ctx)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _prefill_collect(params, cfg, tokens):
+    # unembed=False: admission only needs the KV stacks; the lm-head GEMM
+    # over the padded prompt would be discarded work
+    return transformer.forward(params, cfg, tokens, kind="decode",
+                               collect_kv=True, unembed=False)
+
+
+def _coupled_slot_step_fn(params, cfg, k, v, sel, scatter_idx, toks,
+                          pos_vec, lora_ctx):
+    k_rows, v_rows = jnp.take(k, sel, axis=1), jnp.take(v, sel, axis=1)
+    logits, k_rows, v_rows = transformer.decode_step_slots(
+        params, cfg, k_rows, v_rows, toks, pos_vec, lora_ctx)
+    logits = logits[:, : cfg.vocab_size]  # drop padded vocab
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    k = k.at[:, scatter_idx].set(k_rows, mode="drop")
+    v = v.at[:, scatter_idx].set(v_rows, mode="drop")
+    return tok, k, v
+
+
+_coupled_slot_step = _kv_jit(_coupled_slot_step_fn, (2, 3),
+                             static_argnames=("cfg",))
+
+
+@jax.jit  # cache must survive this call: NOT donated
+def _gather_rows(k, v, sel):
+    return jnp.take(k, sel, axis=1), jnp.take(v, sel, axis=1)
+
+
+def _scatter_rows_fn(k, v, k_rows, v_rows, idx):
+    return (k.at[:, idx].set(k_rows, mode="drop"),
+            v.at[:, idx].set(v_rows, mode="drop"))
+
+
+_scatter_rows = _kv_jit(_scatter_rows_fn, (0, 1))
+
+
+def _write_prefill_rows_fn(k, v, k_rows, v_rows, slot):
+    start = (0, slot, 0, 0, 0)
+    k = jax.lax.dynamic_update_slice(k, k_rows.astype(k.dtype), start)
+    v = jax.lax.dynamic_update_slice(v, v_rows.astype(v.dtype), start)
+    return k, v
+
+
+_write_prefill_rows = _kv_jit(_write_prefill_rows_fn, (0, 1))
 
 
 @dataclasses.dataclass
@@ -33,6 +139,16 @@ class EngineConfig:
     max_len: int = 256
     kv_quant: bool = False
     greedy: bool = True
+    n_slots: int = 8               # continuous-batching decode slots
+    cache_dtype: Optional[object] = None  # None -> kv_dtype(kv_quant)
+
+
+@dataclasses.dataclass
+class SlotState:
+    rid: int
+    adapter_id: int
+    pos: int            # position of the NEXT token fed to the model
+    last_token: int     # next decode input
 
 
 class Engine:
@@ -44,11 +160,146 @@ class Engine:
         self.ecfg = ecfg
         self.pool = pool
         self.server = server
-        self._decode = jax.jit(
-            lambda p, c, t, lc: transformer.decode_step(p, cfg, c, t, lc))
-        self._decode_base = jax.jit(
-            lambda p, c, t: transformer.decode_step(p, cfg, c, t))
+        # slot cache is lazily allocated on the first add_request so legacy
+        # static-batch users don't pay (L, n_slots, max_len, KV, hd) twice
+        self._k = self._v = None
+        self.slots: List[Optional[SlotState]] = [None] * ecfg.n_slots
+        self._by_rid: Dict[int, int] = {}
 
+    # ------------------------------------------------------------------ #
+    # slot admission / eviction (continuous batching control surface)     #
+    # ------------------------------------------------------------------ #
+    @property
+    def n_slots(self) -> int:
+        return len(self.slots)
+
+    def free_slots(self) -> int:
+        return sum(1 for s in self.slots if s is None)
+
+    def active_rids(self) -> List[int]:
+        return [s.rid for s in self.slots if s is not None]
+
+    def _ensure_slot_cache(self) -> None:
+        if self._k is None:
+            if self.ecfg.kv_quant and self.ecfg.cache_dtype is None:
+                # decode_step_slots does not thread k_scale/v_scale; an int8
+                # cache here would be unscaled truncation -> garbage tokens
+                raise ValueError(
+                    "slot engine does not support int8 KV quantization; "
+                    "use the legacy prefill/decode API for kv_quant")
+            dtype = self.ecfg.cache_dtype or \
+                cache_mod.kv_dtype(self.ecfg.kv_quant)
+            full = cache_mod.init_cache(self.cfg, self.n_slots,
+                                        self.ecfg.max_len, dtype=dtype)
+            self._k, self._v = full["k"], full["v"]
+
+    def add_request(self, rid: int, prompt: Sequence[int],
+                    adapter_id: int) -> int:
+        """Admit a request into a free slot at a decode-step boundary: prime
+        the slot's KV rows with the prompt (all but the last token), leaving
+        the running batch untouched. Returns the slot index."""
+        if rid in self._by_rid:
+            raise ValueError(f"rid {rid} already running")
+        slot = next((i for i, s in enumerate(self.slots) if s is None), None)
+        if slot is None:
+            raise RuntimeError("no free decode slot")
+        self._ensure_slot_cache()
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        plen = int(prompt.shape[0])
+        # plen == max_len still fits: only plen-1 prompt tokens are written
+        # and the first decode write lands at position plen-1 <= max_len-1
+        if plen < 1 or plen > self.ecfg.max_len:
+            raise ValueError(f"prompt length {plen} vs max_len")
+        if plen > 1:
+            s_pad = _bucket(plen - 1, self.ecfg.max_len)
+            toks = np.zeros((1, s_pad), np.int32)
+            toks[0, :plen - 1] = prompt[:-1]
+            _, (k_rows, v_rows) = _prefill_collect(self.params, self.cfg,
+                                                   jnp.asarray(toks))
+            # kvs: (L, 1, s_pad, KV, hd); positions >= plen-1 hold garbage
+            # from padding tokens, but they are overwritten by decode steps
+            # before the per-slot valid mask can ever reach them.
+            self._k, self._v = _write_prefill_rows(self._k, self._v, k_rows,
+                                                   v_rows, slot)
+        self.slots[slot] = SlotState(rid=rid, adapter_id=int(adapter_id),
+                                     pos=plen - 1,
+                                     last_token=int(prompt[-1]))
+        self._by_rid[rid] = slot
+        return slot
+
+    def evict_request(self, rid: int) -> None:
+        """Free a slot at a step boundary (finish or preemption). The KV
+        rows are left in place: a later occupant masks them out via its own
+        position vector and overwrites them as it decodes."""
+        slot = self._by_rid.pop(rid)
+        self.slots[slot] = None
+
+    # ------------------------------------------------------------------ #
+    # continuous-batching decode step                                     #
+    # ------------------------------------------------------------------ #
+    def step(self) -> Dict[int, int]:
+        """Decode ONE token for every occupied slot; returns {rid: token}.
+
+        Gathers occupied slots into a power-of-two bucket (one jit compile
+        per bucket size), pads with inactive rows (pos -1, adapter -1), and
+        scatters the updated KV rows back (padding rows dropped)."""
+        occupied = [i for i, s in enumerate(self.slots) if s is not None]
+        if not occupied:
+            return {}
+        nb = _bucket(len(occupied), self.n_slots)
+        sel = np.zeros(nb, np.int32)
+        sel[: len(occupied)] = occupied
+        # padding rows scatter to index n_slots: out of bounds -> dropped
+        scatter_idx = np.full(nb, self.n_slots, np.int32)
+        scatter_idx[: len(occupied)] = occupied
+        toks = np.zeros((nb, 1), np.int32)
+        pos_vec = np.full(nb, -1, np.int32)
+        ads = np.full(nb, -1, np.int32)
+        for row, i in enumerate(occupied):
+            s = self.slots[i]
+            if s.pos >= self.ecfg.max_len:
+                # the per-row write clips to max_len-1, which would silently
+                # clobber the last cache cell — fail loudly instead
+                raise RuntimeError(
+                    f"rid {s.rid} exhausted slot KV capacity "
+                    f"(pos {s.pos} >= max_len {self.ecfg.max_len})")
+            toks[row, 0] = s.last_token
+            pos_vec[row] = s.pos
+            ads[row] = s.adapter_id
+        sel_j = jnp.asarray(sel)
+        sc_j = jnp.asarray(scatter_idx)
+        toks_j, pos_j = jnp.asarray(toks), jnp.asarray(pos_vec)
+
+        if self.server is not None:
+            k_rows, v_rows = _gather_rows(self._k, self._v, sel_j)
+            logits, k_rows, v_rows = disagg_mod.disagg_decode_step_slots(
+                self.params, self.cfg, k_rows, v_rows, toks_j, pos_j,
+                self.server, jnp.asarray(ads),
+                self.pool.scale if self.pool else 1.0)
+            logits = logits[:, : self.cfg.vocab_size]
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self._k, self._v = _scatter_rows(self._k, self._v, k_rows,
+                                             v_rows, sc_j)
+        else:
+            lora_ctx = None
+            if self.pool is not None:
+                lora_ctx = self.pool.lora_ctx(jnp.asarray(ads))
+            tok, self._k, self._v = _coupled_slot_step(
+                self.params, self.cfg, self._k, self._v, sel_j, sc_j,
+                toks_j, pos_j, lora_ctx)
+
+        tok = np.asarray(tok)
+        out: Dict[int, int] = {}
+        for row, i in enumerate(occupied):
+            s = self.slots[i]
+            t = int(tok[row])
+            s.pos += 1
+            s.last_token = t
+            out[s.rid] = t
+        return out
+
+    # ------------------------------------------------------------------ #
+    # legacy static-batch API (quickstart / launch.serve / test_system)    #
     # ------------------------------------------------------------------ #
     def prefill(self, tokens: jax.Array, frontend_emb=None) -> Dict:
         """tokens: (B, S_prompt) -> cache primed with the prompt."""
@@ -56,16 +307,14 @@ class Engine:
         cache = cache_mod.init_cache(self.cfg, B, self.ecfg.max_len,
                                      self.ecfg.kv_quant)
         # simple functional prefill: replay the prompt through decode steps
-        # (shape-bucketed prefill via forward(collect_kv) is the optimized
-        # path; replay keeps one compiled step for the demo engine)
         for t in range(S):
-            _, cache = self._decode_base(self.params, cache, tokens[:, t:t + 1])
+            _, cache = _decode_static(self.params, self.cfg, cache,
+                                      tokens[:, t:t + 1], None)
         return cache
 
     def decode(self, cache: Dict, last_token: jax.Array, steps: int,
                adapter_ids: Optional[jax.Array] = None) -> jax.Array:
         """Greedy-decode ``steps`` tokens. adapter_ids: (B,) per sequence."""
-        B = last_token.shape[0]
         out = []
         tok = last_token
         lora_ctx = None
@@ -77,10 +326,9 @@ class Engine:
                 logits, cache = disagg_mod.disagg_decode_step(
                     self.params, self.cfg, cache, tok, self.server,
                     adapter_ids, self.pool.scale if self.pool else 1.0)
-            elif lora_ctx is not None:
-                logits, cache = self._decode(self.params, cache, tok, lora_ctx)
             else:
-                logits, cache = self._decode_base(self.params, cache, tok)
+                logits, cache = _decode_static(self.params, self.cfg, cache,
+                                               tok, lora_ctx)
             logits = logits[:, : self.cfg.vocab_size]  # drop padded vocab
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             out.append(tok)

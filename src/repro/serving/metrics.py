@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 import numpy as np
 

@@ -133,6 +133,25 @@ class Scheduler:
         inst.running.extend(admitted)
         return admitted
 
+    def step_complete(self, iid: int, now: float) -> List[Request]:
+        """Per-decode-step bookkeeping shared by the analytic simulator and
+        the real cluster driver: every running request earned one token at
+        ``now``; stamp first-token / finish times, retire the finished, and
+        return them. The caller is responsible for what a "step" costs
+        (analytic step model vs. real JAX execution) — admission, token
+        accounting, and retirement are this one implementation."""
+        inst = self.instances[iid]
+        finished = []
+        for r in inst.running:
+            r.tokens_done += 1
+            if r.tokens_done == 1:
+                r.first_token = now
+            if r.tokens_done >= r.output_len:
+                r.finish = now
+                finished.append(r)
+        self.retire(iid, finished, now)
+        return finished
+
     def retire(self, iid: int, finished: List[Request], now: float):
         inst = self.instances[iid]
         cache = self.cache_for(iid)

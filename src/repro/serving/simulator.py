@@ -247,15 +247,7 @@ def simulate(cfg: ModelConfig, requests: Sequence[Request],
             stepping[iid] = False
             if not inst.alive:
                 continue
-            finished = []
-            for r in inst.running:
-                r.tokens_done += 1
-                if r.tokens_done == 1:
-                    r.first_token = now
-                if r.tokens_done >= r.output_len:
-                    r.finish = now
-                    finished.append(r)
-            sched.retire(iid, finished, now)
+            sched.step_complete(iid, now)
             batch_log.append((now, inst.batch))
             if sim.disaggregated:
                 active_log.append((now, caches[-1].active_count()))

@@ -8,7 +8,7 @@ BurstGPT [37]; we match its reported token-count scales).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 
@@ -20,6 +20,7 @@ class Request:
     arrival: float
     prompt_len: int
     output_len: int
+    prompt: tuple = ()           # optional real token ids (cluster driver)
     # runtime (filled by the simulator / engine)
     instance: int = -1
     decode_start: float = -1.0   # first decode step admitted

@@ -9,7 +9,6 @@ re-added before the next quantization). Used by train_step when
 tests/test_training.py (bounded bias, exact with feedback over repeats)."""
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ fine-tuning (base weights frozen)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ feedback for the cross-pod all-reduce.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

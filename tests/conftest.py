@@ -1,4 +1,8 @@
+import functools
 import os
+import random
+import sys
+import types
 
 # Keep kernels on the interpret/ref path and JAX on the single host device
 # (the dry-run is the ONLY place that forces 512 devices).
@@ -7,6 +11,61 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import pytest  # noqa: E402
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # Container images without hypothesis: register a minimal deterministic
+    # stand-in (seeded random draws over the same strategy space) so the
+    # property tests still collect and run everywhere.
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(lo, hi):
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _floats(lo, hi, **_kw):
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def _sampled_from(xs):
+        return _Strategy(lambda rng: rng.choice(list(xs)))
+
+    def _lists(elem, min_size=0, max_size=None):
+        hi = max_size if max_size is not None else min_size + 16
+
+        def draw(rng):
+            n = rng.randint(min_size, hi)
+            return [elem.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def _given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                rng = random.Random(0)
+                for _ in range(getattr(wrapper, "_max_examples", 30)):
+                    args = [s.draw(rng) for s in arg_strategies]
+                    kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                    fn(*args, **kw)
+            # pytest must see a zero-arg signature, not the wrapped one
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    def _settings(max_examples=30, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers, _st.floats = _integers, _floats
+    _st.sampled_from, _st.lists = _sampled_from, _lists
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given, _hyp.settings, _hyp.strategies = _given, _settings, _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 jax.config.update("jax_enable_x64", False)
 

@@ -1,6 +1,5 @@
 """Per-kernel allclose vs the pure-jnp oracle, swept over shapes and dtypes
 (Pallas interpret mode executes the kernel body on CPU)."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ and collective bytes (including while-loop trip multiplication, which
 cost_analysis famously gets wrong for scan-over-layers models)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis import roofline as RL
