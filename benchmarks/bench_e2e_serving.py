@@ -57,14 +57,21 @@ def cluster_main(smoke: bool = False):
             for i in range(n_req)]
 
     tokens_by_mode = {}
-    for name, disagg in (("coupled", False), ("disagg", True)):
+    kv_stats = {}
+    runs = (("coupled", False, False), ("disagg", True, False),
+            ("coupled_paged", False, True), ("disagg_paged", True, True))
+    for name, disagg, paged in runs:
         server = None
         if disagg:
             server = LoRAServer(cfg, ServerConfig(m=1, x=1, y=1,
                                                   cache_slots=4, rank=4),
                                 dtype=jnp.float32)
+        # paged: pool sized to HALF the dense 2x32-row slab — the workload
+        # fits because admission gates on pages, not slots
         ccfg = ClusterConfig(n_instances=1, n_slots=2, max_len=32,
-                             disaggregated=disagg, adapter_cache_slots=4)
+                             disaggregated=disagg, adapter_cache_slots=4,
+                             paged=paged, page_size=4, n_pages=8,
+                             prefill_chunk=8)
         cluster = Cluster(cfg, params, ccfg, pool, server=server)
         cluster.run(reqs)  # warm-up: compile every bucket outside the clock
         t0 = time.perf_counter()
@@ -75,10 +82,22 @@ def cluster_main(smoke: bool = False):
         emit(f"e2e_cluster.{name}.decode_tokens_per_s",
              round(n_tok / wall, 2), f"n_req={n_req},rounds={out['rounds']}")
         emit(f"e2e_cluster.{name}.rounds", out["rounds"])
-    equal = tokens_by_mode["coupled"] == tokens_by_mode["disagg"]
+        if paged:
+            kv_stats[name] = out["kv_stats"][0]
+    equal = all(t == tokens_by_mode["coupled"]
+                for t in tokens_by_mode.values())
     emit("e2e_cluster.tokens_identical", int(equal),
-         "coupled vs disaggregated, continuous batching")
-    assert equal, "coupled and disaggregated cluster tokens diverged"
+         "coupled vs disaggregated vs paged, continuous batching")
+    st = kv_stats["coupled_paged"]
+    emit("e2e_cluster.paged.kv_pool_bytes", st["pool_bytes"],
+         f"page_size={st['page_size']},n_pages={st['n_pages']}")
+    emit("e2e_cluster.paged.kv_dense_slab_bytes", st["dense_slab_bytes"])
+    emit("e2e_cluster.paged.kv_bytes_ratio",
+         round(st["pool_bytes"] / st["dense_slab_bytes"], 3),
+         f"peak_pages={st['peak_pages']}")
+    assert equal, "cluster tokens diverged across modes"
+    assert st["pool_bytes"] < st["dense_slab_bytes"], \
+        "paged pool must be smaller than the dense slab"
 
 
 def main():

@@ -108,7 +108,8 @@ def _moe_hooks_layer(x, lp, cfg: ModelConfig, l: int, server: LoRAServer,
 
 def disagg_decode_step_slots(params, cfg: ModelConfig, k_cache, v_cache,
                              tokens, pos_vec, server: LoRAServer,
-                             adapter_ids, lora_scale: float):
+                             adapter_ids, lora_scale: float, *,
+                             block_table=None):
     """Continuous-batching disaggregated decode (per-slot positions).
 
     The slot-engine twin of ``transformer.decode_step_slots``: identical
@@ -116,7 +117,9 @@ def disagg_decode_step_slots(params, cfg: ModelConfig, k_cache, v_cache,
     computed by the remote ``server`` at the two MoE hook points instead of
     in-model. tokens: (B, 1); pos_vec: (B,) int32 (-1 = inactive slot, its
     adapter id must be -1 too so the server contributes zero delta);
-    k_cache/v_cache: (L, B, S, KV, hd).
+    k_cache/v_cache: (L, B, S, KV, hd) — or paged pools
+    (L, n_pages, page_size, KV, hd) when ``block_table`` (B, nb) is given,
+    mirroring the coupled slot step.
 
     Returns (logits (B, V), k_cache', v_cache').
     """
@@ -131,9 +134,14 @@ def disagg_decode_step_slots(params, cfg: ModelConfig, k_cache, v_cache,
         q, k, v = ll.qkv_project(h, lp["attn"], cfg)
         q = ll.apply_rope(q, positions, cfg.rope_theta)
         k = ll.apply_rope(k, positions, cfg.rope_theta)
-        att, k_l, v_l = ll.decode_attention_update_slots(
-            q[:, 0], k[:, 0], v[:, 0], k_cache[l], v_cache[l], pos_vec,
-            window=cfg.sliding_window)
+        if block_table is None:
+            att, k_l, v_l = ll.decode_attention_update_slots(
+                q[:, 0], k[:, 0], v[:, 0], k_cache[l], v_cache[l], pos_vec,
+                window=cfg.sliding_window)
+        else:
+            att, k_l, v_l = ll.decode_attention_update_slots_paged(
+                q[:, 0], k[:, 0], v[:, 0], k_cache[l], v_cache[l],
+                block_table, pos_vec, window=cfg.sliding_window)
         k_cache = k_cache.at[l].set(k_l)
         v_cache = v_cache.at[l].set(v_l)
         x = x + ll.out_project(att[:, None], lp["attn"])

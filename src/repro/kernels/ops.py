@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.kernels import bgmv as _bgmv
 from repro.kernels import gmm as _gmm
+from repro.kernels import paged as _paged
 from repro.kernels import ref as _ref
 from repro.kernels import sgmv as _sgmv
 
@@ -113,6 +114,37 @@ def gmm(xe, w, group_sizes=None):
         group_sizes = jnp.full((xe.shape[0],), C, jnp.int32)
     out = _gmm_call(xe, w, group_sizes, interpret=not on_tpu())
     return out[:, :C]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def _paged_attention_call(q, k_pool, v_pool, block_tables, pos, window=0,
+                          interpret=True):
+    # lanes: hd -> 128; sublanes: G (q/out) and KV (pools) -> 8. The kernel
+    # derives its softmax scale from the padded hd, so pre-scale q by
+    # sqrt(hd_pad)/sqrt(hd) to cancel (zero-padded lanes add 0 to scores).
+    KV, G, hd = q.shape[1:]
+    q = _pad_to(_pad_to(_pad_to(q, 8, 1), 8, 2), 128, 3)
+    k_pool = _pad_to(_pad_to(k_pool, 8, 2), 128, 3)
+    v_pool = _pad_to(_pad_to(v_pool, 8, 2), 128, 3)
+    hd_pad = q.shape[-1]
+    if hd_pad != hd:
+        q = q * jnp.asarray((hd_pad / hd) ** 0.5, q.dtype)
+    out = _paged.paged_attention(q, k_pool, v_pool, block_tables, pos,
+                                 window=window, interpret=interpret)
+    return out[:, :KV, :G, :hd]
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, pos, *, window: int = 0):
+    """Flash-decode attention over a paged KV pool.
+
+    q: (B, KV, G, hd); k/v pool: (P, page_size, KV, hd); block_tables:
+    (B, nb) int32; pos: (B,) int32 — see kernels/paged.py. -> (B,KV,G,hd) f32
+    """
+    if not kernels_enabled():
+        return _ref.paged_attention_ref(q, k_pool, v_pool, block_tables,
+                                        pos, window)
+    return _paged_attention_call(q, k_pool, v_pool, block_tables, pos,
+                                 window=window, interpret=not on_tpu())
 
 
 build_segments = _sgmv.build_segments

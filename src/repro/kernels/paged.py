@@ -1,0 +1,127 @@
+"""Paged-attention Pallas TPU kernel — flash decode over a block-pool KV.
+
+The paged engine keeps KV in a shared (n_pages, page_size, KV, hd) pool per
+layer; each decode row owns a block table of page ids. Dense decode would
+first gather every row's pages into a contiguous (B, S, KV, hd) cache — an
+HBM copy of the whole working set per token. This kernel instead moves the
+gather into the *grid index map* (the same trick as bgmv.py): the scalar-
+prefetched block tables steer each grid step's BlockSpec, so Mosaic's
+pipeline emitter DMAs exactly one page from HBM to VMEM per (row, block)
+step and the online-softmax state lives in VMEM scratch. No contiguous
+copy of the KV ever exists.
+
+  q           : (B, KV, G, hd)           one decode token per row
+  k/v pool    : (P, page_size, KV, hd)   one layer's shared block pool
+  block_tables: (B, nb) int32            page id per block (-1 = unallocated)
+  pos         : (B,) int32               tokens already cached per row; the
+                                         row attends over keys 0..pos[b]
+                                         (pos < 0 = inactive row -> zeros)
+  -> (B, KV, G, hd) f32
+
+Grid is (B, nb) with the block index minor, so one row's pages are visited
+consecutively and m/l/acc scratch carries the running softmax between them;
+the output block is written once on the row's last step. Pages with id < 0
+and rows with pos < 0 are skipped via pl.when (the DMA still fetches a
+clamped page, but nothing is accumulated). Masked score slots are excluded
+from the exp-sum explicitly, so a fully-masked row yields exact zeros, never
+NaN — the padding-row contract the slot engine relies on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, scale: float, window: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]
+    page = bt_ref[b, j]
+
+    @pl.when((page >= 0) & (pos >= 0))
+    def _():
+        ps = k_ref.shape[1]
+        q = q_ref[0].astype(F32)                    # (KV, G, hd)
+        k = k_ref[0].astype(F32)                    # (ps, KV, hd)
+        v = v_ref[0].astype(F32)
+        # scores (KV, G, ps): contract hd, batch over KV
+        s = jax.lax.dot_general(
+            q, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=F32) * scale
+        # 2D iota: 1D iota does not lower on TPU (guide: common pitfalls)
+        kp = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        valid = kp <= pos
+        if window:
+            valid &= kp > pos - window
+        vmask = valid[None]  # (1, 1, ps) broadcasting over (KV, G, ps)
+        m_cur = jnp.max(jnp.where(vmask, s, NEG_INF), axis=-1)  # (KV, G)
+        m_new = jnp.maximum(m_ref[...], m_cur)
+        # exclude masked slots from the exp-sum explicitly: when every slot
+        # of a page is masked, exp(s - m_new) would be exp(0)=1 garbage
+        p = jnp.where(vmask, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_ref[...] - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(                    # (KV, G, hd)
+            p, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=F32)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _():
+        o_ref[...] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-20)[..., None])[None]
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, pos, *,
+                    window: int = 0, interpret: bool = True):
+    """See module docstring. Lane/sublane alignment is ops.py's job."""
+    B, KV, G, hd = q.shape
+    P, ps = k_pool.shape[:2]
+    nb = block_tables.shape[1]
+    scale = 1.0 / float(np.sqrt(hd))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, j, bt, pos: (b, 0, 0, 0)),
+            pl.BlockSpec((1, ps, KV, hd),
+                         lambda b, j, bt, pos:
+                         (jnp.maximum(bt[b, j], 0), 0, 0, 0)),
+            pl.BlockSpec((1, ps, KV, hd),
+                         lambda b, j, bt, pos:
+                         (jnp.maximum(bt[b, j], 0), 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, hd),
+                               lambda b, j, bt, pos: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), F32),       # running max
+            pltpu.VMEM((KV, G), F32),       # running sum-exp
+            pltpu.VMEM((KV, G, hd), F32),   # running weighted values
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=int(window)),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), F32),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32),
+      q, k_pool, v_pool)

@@ -34,3 +34,34 @@ def gmm_ref(xe, w, group_sizes=None):
         mask = jnp.arange(C)[None, :] < group_sizes[:, None]
         y = jnp.where(mask[..., None], y, 0.0)
     return y
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_tables, pos, window=0):
+    """q: (B, KV, G, hd); k/v pool: (P, page_size, KV, hd); block_tables:
+    (B, nb) int32 (-1 = unallocated); pos: (B,) tokens already cached (the
+    row attends over key positions 0..pos[b]; pos < 0 -> zeros).
+
+    Materializes the gather (B, nb*page_size, KV, hd) — the memory traffic
+    the Pallas kernel's index-map gather avoids — then runs one masked
+    softmax. -> (B, KV, G, hd) f32.
+    """
+    B, KV, G, hd = q.shape
+    P, ps = k_pool.shape[:2]
+    nb = block_tables.shape[1]
+    safe = jnp.clip(block_tables, 0, P - 1)
+    k = k_pool[safe].reshape(B, nb * ps, KV, hd)
+    v = v_pool[safe].reshape(B, nb * ps, KV, hd)
+    kp = (jnp.arange(nb)[:, None] * ps + jnp.arange(ps)[None, :])
+    kp = jnp.where(block_tables[:, :, None] >= 0, kp[None], -1)
+    kp = kp.reshape(B, nb * ps)
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(F32), k.astype(F32))
+    s = s / jnp.sqrt(jnp.asarray(hd, F32))
+    valid = (kp >= 0) & (kp <= pos[:, None]) & (pos[:, None] >= 0)
+    if window:
+        valid &= kp > pos[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1)
+    e = jnp.where(valid[:, None, None, :], jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(e, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", e, v.astype(F32))
+    return o / jnp.maximum(l, 1e-20)[..., None]

@@ -77,9 +77,17 @@ def build_segments(rows: jax.Array, row_adapter: jax.Array, n_adapters: int,
     T, d = rows.shape
     order = jnp.argsort(row_adapter, stable=True)
     sorted_ad = row_adapter[order]
-    counts = jnp.bincount(jnp.maximum(row_adapter, 0), length=n_adapters)
+    # padding rows (adapter -1) must NOT count into adapter 0's bin: they
+    # sort ahead of every real row, so adapter a's run starts at
+    # n_padding + starts[a] with starts computed over REAL rows only.
+    # (Folding -1 into bin 0 shifted adapter 0's positions by n_padding,
+    # silently dropping its rows once count0 > cap - n_padding.)
+    counts = jnp.bincount(jnp.where(row_adapter >= 0, row_adapter,
+                                    n_adapters), length=n_adapters + 1)
+    counts = counts[:n_adapters]
+    n_padding = jnp.sum(row_adapter < 0)
     starts = jnp.cumsum(counts) - counts
-    pos = jnp.arange(T) - starts[jnp.maximum(sorted_ad, 0)]
+    pos = jnp.arange(T) - n_padding - starts[jnp.maximum(sorted_ad, 0)]
     keep = (pos < cap) & (sorted_ad >= 0)
     slot = jnp.where(keep, jnp.maximum(sorted_ad, 0) * cap + pos, n_adapters * cap)
     seg_rows = jnp.zeros((n_adapters * cap + 1, d), rows.dtype)

@@ -31,6 +31,51 @@ def kv_dtype(quant: bool):
     return jnp.int8 if quant else jnp.bfloat16
 
 
+# --------------------------- paged KV pool ------------------------------ #
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` KV rows (0 tokens -> 0 pages)."""
+    return max(0, -(-int(n_tokens) // int(page_size)))
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=None) -> Dict[str, jax.Array]:
+    """Block-pool KV cache for the paged slot engine (S-LoRA unified paging).
+
+    Instead of a dense (L, n_slots, max_len, KV, hd) slab where every slot
+    pays for max_len, the pool holds ``n_pages`` blocks of ``page_size``
+    token rows shared by all slots:
+
+        k/v : (L, n_pages, page_size, KV, hd)
+
+    A page id addresses the same block index across all L layers (vLLM-style
+    layer-uniform block tables), so the per-slot block table is one int32
+    row of ``ceil(max_len / page_size)`` entries (-1 = unallocated). Total
+    KV bytes scale with actual token residency, not n_slots x max_len.
+    Attention-KV families only (dense/moe/vlm) — the serving targets.
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"paged KV cache supports dense/moe/vlm, not '{cfg.family}'")
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    dt = dtype or kv_dtype(False)
+    shp = (L, n_pages, page_size, KV, hd)
+    return {"k": jnp.zeros(shp, dt), "v": jnp.zeros(shp, dt)}
+
+
+def paged_cache_bytes(cfg: ModelConfig, n_pages: int, page_size: int,
+                      dtype=None) -> int:
+    dt = jnp.dtype(dtype or kv_dtype(False))
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return 2 * L * n_pages * page_size * KV * hd * dt.itemsize
+
+
+def dense_cache_bytes(cfg: ModelConfig, n_slots: int, max_len: int,
+                      dtype=None) -> int:
+    dt = jnp.dtype(dtype or kv_dtype(False))
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    return 2 * L * n_slots * max_len * KV * hd * dt.itemsize
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                kv_quant: bool = False, dtype=None) -> Dict[str, jax.Array]:
     L, KV, hd, d = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim, cfg.d_model

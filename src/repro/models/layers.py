@@ -456,6 +456,46 @@ def decode_attention_update_slots(q, k_new, v_new, k_cache, v_cache, pos_vec,
     return out.reshape(B, H, hd).astype(q.dtype), k_cache, v_cache
 
 
+def decode_attention_update_slots_paged(q, k_new, v_new, k_pool, v_pool,
+                                        block_table, pos_vec, *,
+                                        window: int = 0):
+    """Per-slot KV-write + flash-decode attention over a PAGED block pool.
+
+    The paged twin of ``decode_attention_update_slots``: instead of each row
+    owning a contiguous (S, KV, hd) cache strip, rows own block tables into
+    a shared (P, page_size, KV, hd) pool, so KV memory is bounded by actual
+    token residency rather than n_slots x max_len.
+
+    q: (B, H, hd); k_new/v_new: (B, KV, hd) post-RoPE; k_pool/v_pool:
+    (P, page_size, KV, hd); block_table: (B, nb) int32 page ids (-1 =
+    unallocated); pos_vec: (B,) int32 tokens already cached per row. The
+    caller (engine) guarantees the page covering position pos_vec[b] is
+    allocated for every active row. Rows with pos_vec < 0 are inactive:
+    no write, finite garbage output. Pages are slot-exclusive, so distinct
+    active rows can never scatter to the same (page, offset) cell.
+
+    Returns (out (B, H, hd), k_pool', v_pool').
+    """
+    B, H, hd = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    P, ps = k_pool.shape[:2]
+    bidx = jnp.arange(B)
+    posc = jnp.maximum(pos_vec, 0)
+    page = block_table[bidx, posc // ps]
+    # inactive rows and unallocated pages scatter out of bounds -> dropped
+    page = jnp.where((pos_vec >= 0) & (page >= 0), page, P)
+    off = posc % ps
+    k_pool = k_pool.at[page, off].set(k_new.astype(k_pool.dtype),
+                                      mode="drop")
+    v_pool = v_pool.at[page, off].set(v_new.astype(v_pool.dtype),
+                                      mode="drop")
+    from repro.kernels import ops
+    out = ops.paged_attention(q.reshape(B, KV, G, hd), k_pool, v_pool,
+                              block_table, pos_vec, window=window)
+    return out.reshape(B, H, hd).astype(q.dtype), k_pool, v_pool
+
+
 def quantize_kv_token(x):
     """x: (B, KV, hd) -> (int8, scale (B, KV, 1))."""
     amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True)

@@ -318,17 +318,75 @@ def _forward_encdec(params, cfg, tokens, frontend_emb, kind, collect_kv):
 
 
 # --------------------------------------------------------------------- #
+# Chunked prefill (parallel within a chunk, incremental across chunks)    #
+# --------------------------------------------------------------------- #
+def prefill_chunk(params, cfg, tokens, k_ctx, v_ctx):
+    """One fixed-size prefill chunk attending over previously-cached KV.
+
+    Chunked prefill admits a long prompt as a series of small parallel
+    forwards instead of one power-of-two-padded shot: chunk c computes
+    self-attention for its C tokens against [all earlier chunks' KV | this
+    chunk], so the math is position-for-position identical to a monolithic
+    ``forward(collect_kv=True)`` while the peak activation is O(C) and the
+    KV for earlier chunks can already live in cache rows or pages.
+
+    tokens: (B, C); k_ctx/v_ctx: (L, B, S_ctx, KV, hd) the earlier chunks'
+    KV (S_ctx may be 0; it sets the position offset, so it must hold
+    exactly the first S_ctx positions). LoRA-free, like all prefill here
+    (paper footnote 1: prefill runs on separate LoRA-free instances under
+    PD disaggregation). dense/moe/vlm only. No lm-head (admission needs
+    only the KV).
+
+    Returns (k_chunk, v_chunk), each (L, B, C, KV, hd).
+    """
+    fam = cfg.family
+    if fam not in ("dense", "moe", "vlm"):
+        raise ValueError(f"chunked prefill supports attention LMs, not {fam}")
+    x = _embed_inputs(params, cfg, tokens, None)
+    B, C, _ = x.shape
+    pos0 = k_ctx.shape[2]
+    positions = jnp.broadcast_to(pos0 + jnp.arange(C, dtype=jnp.int32),
+                                 (B, C))
+
+    def body(x, xs):
+        lp, kc, vc = xs
+        h = ll.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = ll.qkv_project(h, lp["attn"], cfg)
+        q = ll.apply_rope(q, positions, cfg.rope_theta)
+        k = ll.apply_rope(k, positions, cfg.rope_theta)
+        k_full = jnp.concatenate([kc.astype(k.dtype), k], axis=1)
+        v_full = jnp.concatenate([vc.astype(v.dtype), v], axis=1)
+        attn = ll.causal_attention(q, k_full, v_full, causal=True,
+                                   window=cfg.sliding_window, q_offset=pos0)
+        x = x + ll.out_project(attn, lp["attn"])
+        h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            y = moe_mod.moe_block(h, lp["moe"], cfg, kind="decode")
+        else:
+            y = ll.mlp(h, lp["mlp"], cfg)
+        x = x + y
+        return x, (k, v)
+
+    _, kvs = jax.lax.scan(body, x, (params["layers"], k_ctx, v_ctx))
+    return kvs
+
+
+# --------------------------------------------------------------------- #
 # Continuous-batching decode step (per-slot positions)                    #
 # --------------------------------------------------------------------- #
 def decode_step_slots(params, cfg, k_cache, v_cache, tokens, pos_vec,
-                      lora_ctx=None):
+                      lora_ctx=None, *, block_table=None):
     """One decode token for a batch of engine SLOTS with per-slot positions.
 
     The continuous-batching data plane: rows are slots admitted/evicted at
     step boundaries, so each carries its own sequence length. tokens: (B, 1);
     pos_vec: (B,) int32 position of this token per slot (-1 = inactive slot:
-    no cache write, garbage logits). k_cache/v_cache: (L, B, S, KV, hd).
-    dense/moe/vlm families only (the serving targets); no int8 KV.
+    no cache write, garbage logits). k_cache/v_cache: (L, B, S, KV, hd) —
+    or, when ``block_table`` (B, nb) is given, PAGED pools
+    (L, n_pages, page_size, KV, hd) shared by all slots, with per-row page
+    ids resolving each write/read (see layers
+    .decode_attention_update_slots_paged). dense/moe/vlm families only (the
+    serving targets); no int8 KV.
 
     Returns (logits (B, V), k_cache', v_cache').
     """
@@ -364,9 +422,14 @@ def decode_step_slots(params, cfg, k_cache, v_cache, tokens, pos_vec,
         k = ll.apply_rope(k, positions, cfg.rope_theta)
         k_l = jax.lax.dynamic_index_in_dim(k_all, l, 0, keepdims=False)
         v_l = jax.lax.dynamic_index_in_dim(v_all, l, 0, keepdims=False)
-        att, k_l, v_l = ll.decode_attention_update_slots(
-            q[:, 0], k[:, 0], v[:, 0], k_l, v_l, pos_vec,
-            window=cfg.sliding_window)
+        if block_table is None:
+            att, k_l, v_l = ll.decode_attention_update_slots(
+                q[:, 0], k[:, 0], v[:, 0], k_l, v_l, pos_vec,
+                window=cfg.sliding_window)
+        else:
+            att, k_l, v_l = ll.decode_attention_update_slots_paged(
+                q[:, 0], k[:, 0], v[:, 0], k_l, v_l, block_table, pos_vec,
+                window=cfg.sliding_window)
         k_all = jax.lax.dynamic_update_index_in_dim(k_all, k_l, l, 0)
         v_all = jax.lax.dynamic_update_index_in_dim(v_all, v_l, l, 0)
         att = att[:, None]  # (B, 1, H, hd)

@@ -35,6 +35,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.adapter import AdapterPool
 from repro.core.lora_server import LoRAServer, pool_tensors_from_adapter
+from repro.models.cache import pages_for
 from repro.serving.cache import LoRACache
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.scheduler import InstanceState, Scheduler, \
@@ -56,6 +57,13 @@ class ClusterConfig:
     host_bw: float = float("inf")
     layerwise_loading: bool = True
     max_rounds: int = 100_000
+    # paged KV engine: block-pool cache + page-budget admission (see
+    # serving/engine.py). n_pages=None sizes the pool to the dense-slab
+    # worst case; smaller values trade admission concurrency for memory.
+    paged: bool = False
+    page_size: int = 8
+    n_pages: Optional[int] = None
+    prefill_chunk: int = 16
 
 
 class Cluster:
@@ -75,7 +83,10 @@ class Cluster:
         self.ccfg = ccfg
         self.pool = pool
         self.server = server if ccfg.disaggregated else None
-        ecfg = EngineConfig(max_len=ccfg.max_len, n_slots=ccfg.n_slots)
+        ecfg = EngineConfig(max_len=ccfg.max_len, n_slots=ccfg.n_slots,
+                            paged=ccfg.paged, page_size=ccfg.page_size,
+                            n_pages=ccfg.n_pages,
+                            prefill_chunk=ccfg.prefill_chunk)
         self.engines = [Engine(cfg, params, ecfg, pool=pool,
                                server=self.server)
                         for _ in range(ccfg.n_instances)]
@@ -133,6 +144,14 @@ class Cluster:
                 raise ValueError(
                     f"request {r.rid}: adapter_id {r.adapter_id} outside "
                     f"pool of {self.pool.n}")
+            if ccfg.paged:
+                need = pages_for(int(self._prompt(r).shape[0])
+                                 + r.output_len - 1, ccfg.page_size)
+                budget = self.engines[0].total_pages
+                if need > budget:
+                    raise ValueError(
+                        f"request {r.rid}: needs {need} KV pages but the "
+                        f"pool has {budget} — it could never be admitted")
         n_adapters = max(self.pool.n,
                          max((r.adapter_id for r in requests), default=0) + 1)
         instances = [InstanceState(i, ccfg.n_slots)
@@ -151,8 +170,25 @@ class Cluster:
             owner = assign_adapters_greedy(n_adapters, counts,
                                            ccfg.n_instances)
             caches = {i: mk_cache() for i in range(ccfg.n_instances)}
+        kv_pages = kv_need = None
+        if ccfg.paged:
+            # a resident request's page footprint: prompt positions plus one
+            # page-row per decoded token (the last emitted token is never
+            # written, hence -1); memoized by rid — admit() consults it for
+            # every resident request each round
+            kv_pages = {i: self.engines[i].total_pages
+                        for i in range(ccfg.n_instances)}
+            need_by_rid: Dict[int, int] = {}
+
+            def kv_need(r: Request) -> int:
+                if r.rid not in need_by_rid:
+                    plen = int(self._prompt(r).shape[0])
+                    need_by_rid[r.rid] = pages_for(
+                        plen + r.output_len - 1, ccfg.page_size)
+                return need_by_rid[r.rid]
         sched = Scheduler(instances, caches, owner, policy=ccfg.policy,
-                          shared_cache=ccfg.disaggregated)
+                          shared_cache=ccfg.disaggregated,
+                          kv_pages=kv_pages, kv_page_need=kv_need)
 
         tokens: Dict[int, List[int]] = {r.rid: [] for r in requests}
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
@@ -196,8 +232,12 @@ class Cluster:
                 f"cluster run ended after {rnd} rounds with unfinished "
                 f"requests {unfinished} (queue={sched.queue_len()}) — "
                 f"adapter cache too small or max_rounds exhausted?")
-        return {"tokens": tokens, "requests": list(requests), "rounds": rnd,
-                "cache_stats": {
-                    k: {"hits": c.hits, "misses": c.misses,
-                        "evictions": c.evictions}
-                    for k, c in caches.items()}}
+        out = {"tokens": tokens, "requests": list(requests), "rounds": rnd,
+               "cache_stats": {
+                   k: {"hits": c.hits, "misses": c.misses,
+                       "evictions": c.evictions}
+                   for k, c in caches.items()}}
+        if ccfg.paged:
+            out["kv_stats"] = {i: self.engines[i].kv_stats()
+                               for i in range(ccfg.n_instances)}
+        return out

@@ -1,18 +1,35 @@
 """Decode engine: the REAL JAX execution path for serving (examples/tests).
 
 The primary structure is a SLOT-BASED CONTINUOUS-BATCHING engine: the engine
-owns ``n_slots`` persistent decode slots backed by one KV cache
-(``models/cache.py`` layout, (L, n_slots, S, KV, hd)); requests are admitted
-into free slots and evicted at any decode-step boundary, so a new request
-joins the RUNNING batch without restarting anyone else. Each slot carries
-its own position and adapter id; one ``step()`` decodes one token for every
+owns ``n_slots`` persistent decode slots; requests are admitted into free
+slots and evicted at any decode-step boundary, so a new request joins the
+RUNNING batch without restarting anyone else. Each slot carries its own
+position and adapter id; one ``step()`` decodes one token for every
 occupied slot.
+
+KV lives in one of two layouts:
+
+  dense slab  : (L, n_slots, max_len, KV, hd) — every slot pays for
+                ``max_len`` rows whether its request needs 8 tokens or 256
+  paged pool  : (L, n_pages, page_size, KV, hd) + per-slot block tables
+                (``EngineConfig.paged``) — S-LoRA-style unified paging;
+                pages are allocated as positions are written and freed at
+                eviction, so KV memory is bounded by actual token residency
+                and admission is gated on FREE PAGES (the paper's real
+                KV-capacity bound) instead of "free slot".
+
+Prompt admission uses CHUNKED PREFILL: the prompt's first ``len-1`` tokens
+run through fixed-size parallel chunks (``transformer.prefill_chunk``),
+each attending over the previously cached chunks, instead of one
+power-of-two-padded shot — peak activation is O(chunk) and the per-chunk
+KV streams straight into slot rows or pages. Prefill is LoRA-free (under
+PD disaggregation prefill runs on separate instances, paper footnote 1).
 
 Execution is shape-bucketed: occupied slots are gathered into a contiguous
 batch padded to the next power-of-two bucket, so jit compiles once per
-bucket size (and once per prompt-length bucket for prefill) regardless of
-the admission pattern. The jitted steps are MODULE-LEVEL functions taking
-the (hashable, frozen) ModelConfig statically, so N engine instances of one
+bucket size (and once per chunk geometry for prefill) regardless of the
+admission pattern. The jitted steps are MODULE-LEVEL functions taking the
+(hashable, frozen) ModelConfig statically, so N engine instances of one
 cluster share a single compile cache instead of recompiling per instance.
 Padding rows run with position -1 (no cache write, output discarded) and
 are scattered back with out-of-bounds indices in ``mode="drop"`` so a
@@ -25,13 +42,9 @@ Both adapter modes share the slot machinery:
   disaggregated  : base-only client + remote LoRAServer round trips per
                    layer (host dispatch, so gather/step/scatter run eagerly)
 
-Prefill primes a slot's cache rows with the prompt's first ``len-1`` tokens
-via the parallel ``forward(collect_kv=True)`` path (LoRA-free: under PD
-disaggregation prefill runs on separate instances, paper footnote 1); the
-last prompt token is the first decode input. Cluster-scale wall-clock
-behavior stays the simulator's job; this engine is the functional data plane
-you would deploy per instance. The pre-refactor static-batch ``prefill`` /
-``decode`` API is kept as thin legacy wrappers.
+Cluster-scale wall-clock behavior stays the simulator's job; this engine is
+the functional data plane you would deploy per instance. The pre-refactor
+static-batch ``prefill`` / ``decode`` API is kept as thin legacy wrappers.
 """
 from __future__ import annotations
 
@@ -49,6 +62,8 @@ from repro.core.adapter import AdapterPool
 from repro.core.lora_server import LoRAServer
 from repro.models import cache as cache_mod
 from repro.models import transformer
+
+SLOT_FAMILIES = ("dense", "moe", "vlm")
 
 
 def _bucket(n: int, cap: int) -> int:
@@ -89,10 +104,14 @@ def _decode_static(params, cfg, cache, tokens, lora_ctx):
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _prefill_collect(params, cfg, tokens):
-    # unembed=False: admission only needs the KV stacks; the lm-head GEMM
-    # over the padded prompt would be discarded work
+    # unembed=False: priming a cache only needs the KV stacks; the lm-head
+    # GEMM over the padded prompt would be discarded work
     return transformer.forward(params, cfg, tokens, kind="decode",
                                collect_kv=True, unembed=False)
+
+
+_prefill_chunk = functools.partial(jax.jit, static_argnames=("cfg",))(
+    transformer.prefill_chunk)
 
 
 def _coupled_slot_step_fn(params, cfg, k, v, sel, scatter_idx, toks,
@@ -111,6 +130,23 @@ _coupled_slot_step = _kv_jit(_coupled_slot_step_fn, (2, 3),
                              static_argnames=("cfg",))
 
 
+def _coupled_paged_step_fn(params, cfg, k_pool, v_pool, bt, toks, pos_vec,
+                           lora_ctx):
+    # the paged step needs no gather/scatter: every row reads and writes the
+    # SHARED pool through its block table, so the per-token KV copies of the
+    # dense path disappear entirely
+    logits, k_pool, v_pool = transformer.decode_step_slots(
+        params, cfg, k_pool, v_pool, toks, pos_vec, lora_ctx,
+        block_table=bt)
+    logits = logits[:, : cfg.vocab_size]
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return tok, k_pool, v_pool
+
+
+_coupled_paged_step = _kv_jit(_coupled_paged_step_fn, (2, 3),
+                              static_argnames=("cfg",))
+
+
 @jax.jit  # cache must survive this call: NOT donated
 def _gather_rows(k, v, sel):
     return jnp.take(k, sel, axis=1), jnp.take(v, sel, axis=1)
@@ -124,14 +160,48 @@ def _scatter_rows_fn(k, v, k_rows, v_rows, idx):
 _scatter_rows = _kv_jit(_scatter_rows_fn, (0, 1))
 
 
-def _write_prefill_rows_fn(k, v, k_rows, v_rows, slot):
-    start = (0, slot, 0, 0, 0)
-    k = jax.lax.dynamic_update_slice(k, k_rows.astype(k.dtype), start)
-    v = jax.lax.dynamic_update_slice(v, v_rows.astype(v.dtype), start)
+@functools.partial(jax.jit, static_argnames=("n",))
+def _gather_ctx_rows(k, v, slot, n):
+    """Rows [0:n] of ``slot`` from a dense slab -> (L, 1, n, KV, hd)."""
+    L, _, _, KV, hd = k.shape
+    kc = jax.lax.dynamic_slice(k, (0, slot, 0, 0, 0), (L, 1, n, KV, hd))
+    vc = jax.lax.dynamic_slice(v, (0, slot, 0, 0, 0), (L, 1, n, KV, hd))
+    return kc, vc
+
+
+@jax.jit  # pool must survive: NOT donated (recompiles per page count)
+def _gather_ctx_pages(k_pool, v_pool, pages):
+    """Pages of one slot's context -> (L, 1, n_pages*page_size, KV, hd)."""
+    L, _, ps, KV, hd = k_pool.shape
+    n = pages.shape[0]
+    kc = jnp.take(k_pool, pages, axis=1).reshape(L, 1, n * ps, KV, hd)
+    vc = jnp.take(v_pool, pages, axis=1).reshape(L, 1, n * ps, KV, hd)
+    return kc, vc
+
+
+def _write_chunk_rows_fn(k, v, k_rows, v_rows, slot, start):
+    st = (0, slot, start, 0, 0)
+    k = jax.lax.dynamic_update_slice(k, k_rows.astype(k.dtype), st)
+    v = jax.lax.dynamic_update_slice(v, v_rows.astype(v.dtype), st)
     return k, v
 
 
-_write_prefill_rows = _kv_jit(_write_prefill_rows_fn, (0, 1))
+_write_chunk_rows = _kv_jit(_write_chunk_rows_fn, (0, 1))
+
+
+def _write_chunk_pages_fn(k_pool, v_pool, k_rows, v_rows, pages):
+    """Scatter a chunk's (L, 1, w, KV, hd) KV into ``pages`` (w/ps ids;
+    ids >= n_pages are dropped — unallocated tail of a padded chunk)."""
+    L, _, ps, KV, hd = k_pool.shape
+    n = pages.shape[0]
+    kr = k_rows.reshape(L, n, ps, KV, hd).astype(k_pool.dtype)
+    vr = v_rows.reshape(L, n, ps, KV, hd).astype(v_pool.dtype)
+    k_pool = k_pool.at[:, pages].set(kr, mode="drop")
+    v_pool = v_pool.at[:, pages].set(vr, mode="drop")
+    return k_pool, v_pool
+
+
+_write_chunk_pages = _kv_jit(_write_chunk_pages_fn, (0, 1))
 
 
 @dataclasses.dataclass
@@ -141,6 +211,14 @@ class EngineConfig:
     greedy: bool = True
     n_slots: int = 8               # continuous-batching decode slots
     cache_dtype: Optional[object] = None  # None -> kv_dtype(kv_quant)
+    # paged KV pool (tentpole): block-granular allocation instead of the
+    # dense n_slots x max_len slab
+    paged: bool = False
+    page_size: int = 8
+    n_pages: Optional[int] = None  # None -> n_slots * ceil(max_len/page)
+    # admission prefill chunk width (tokens); rounded up to a page multiple
+    # in paged mode
+    prefill_chunk: int = 16
 
 
 @dataclasses.dataclass
@@ -161,10 +239,28 @@ class Engine:
         self.pool = pool
         self.server = server
         # slot cache is lazily allocated on the first add_request so legacy
-        # static-batch users don't pay (L, n_slots, max_len, KV, hd) twice
+        # static-batch users don't pay the slab/pool twice
         self._k = self._v = None
         self.slots: List[Optional[SlotState]] = [None] * ecfg.n_slots
         self._by_rid: Dict[int, int] = {}
+        self._chunk = max(int(ecfg.prefill_chunk), 1)
+        if ecfg.paged:
+            ps = int(ecfg.page_size)
+            if ps < 1:
+                raise ValueError(f"page_size must be >= 1, got {ps}")
+            if ecfg.max_len % ps:
+                raise ValueError(
+                    f"paged engine needs page_size ({ps}) to divide "
+                    f"max_len ({ecfg.max_len})")
+            self._chunk = -(-self._chunk // ps) * ps  # page multiple
+            self.blocks_per_slot = ecfg.max_len // ps
+            self.total_pages = ecfg.n_pages if ecfg.n_pages is not None \
+                else ecfg.n_slots * self.blocks_per_slot
+            self._bt = np.full((ecfg.n_slots, self.blocks_per_slot), -1,
+                               np.int32)
+            self._free: List[int] = list(range(self.total_pages - 1, -1, -1))
+            self.peak_pages = 0
+        self._chunk = min(self._chunk, ecfg.max_len)
 
     # ------------------------------------------------------------------ #
     # slot admission / eviction (continuous batching control surface)     #
@@ -179,16 +275,59 @@ class Engine:
     def active_rids(self) -> List[int]:
         return [s.rid for s in self.slots if s is not None]
 
+    def free_pages(self) -> int:
+        """Unallocated pages in the paged pool (the KV admission bound)."""
+        if not self.ecfg.paged:
+            raise RuntimeError("free_pages() requires EngineConfig.paged")
+        return len(self._free)
+
+    def kv_stats(self) -> Dict[str, int]:
+        """Paged-pool memory accounting vs the dense-slab equivalent."""
+        if not self.ecfg.paged:
+            raise RuntimeError("kv_stats() requires EngineConfig.paged")
+        dtype = self.ecfg.cache_dtype or cache_mod.kv_dtype(False)
+        return {
+            "page_size": self.ecfg.page_size,
+            "n_pages": self.total_pages,
+            "pages_in_use": self.total_pages - len(self._free),
+            "peak_pages": self.peak_pages,
+            "pool_bytes": cache_mod.paged_cache_bytes(
+                self.cfg, self.total_pages, self.ecfg.page_size, dtype),
+            "dense_slab_bytes": cache_mod.dense_cache_bytes(
+                self.cfg, self.n_slots, self.ecfg.max_len, dtype),
+        }
+
+    def _alloc_page(self) -> int:
+        p = self._free.pop()
+        self.peak_pages = max(self.peak_pages,
+                              self.total_pages - len(self._free))
+        return p
+
     def _ensure_slot_cache(self) -> None:
-        if self._k is None:
-            if self.ecfg.kv_quant and self.ecfg.cache_dtype is None:
-                # decode_step_slots does not thread k_scale/v_scale; an int8
-                # cache here would be unscaled truncation -> garbage tokens
-                raise ValueError(
-                    "slot engine does not support int8 KV quantization; "
-                    "use the legacy prefill/decode API for kv_quant")
-            dtype = self.ecfg.cache_dtype or \
-                cache_mod.kv_dtype(self.ecfg.kv_quant)
+        if self._k is not None:
+            return
+        fam = self.cfg.family
+        if fam not in SLOT_FAMILIES:
+            # init_cache for these families has no per-slot "k"/"v" rows; a
+            # bare KeyError('k') here was the only symptom before
+            raise ValueError(
+                f"slot engine requires a per-slot attention KV cache; "
+                f"family '{fam}' has none (supported: "
+                f"{', '.join(SLOT_FAMILIES)}). Use the legacy "
+                f"prefill/decode API for ssm/hybrid/audio models.")
+        if self.ecfg.kv_quant and self.ecfg.cache_dtype is None:
+            # decode_step_slots does not thread k_scale/v_scale; an int8
+            # cache here would be unscaled truncation -> garbage tokens
+            raise ValueError(
+                "slot engine does not support int8 KV quantization; "
+                "use the legacy prefill/decode API for kv_quant")
+        dtype = self.ecfg.cache_dtype or \
+            cache_mod.kv_dtype(self.ecfg.kv_quant)
+        if self.ecfg.paged:
+            pool = cache_mod.init_paged_cache(
+                self.cfg, self.total_pages, self.ecfg.page_size, dtype=dtype)
+            self._k, self._v = pool["k"], pool["v"]
+        else:
             full = cache_mod.init_cache(self.cfg, self.n_slots,
                                         self.ecfg.max_len, dtype=dtype)
             self._k, self._v = full["k"], full["v"]
@@ -196,8 +335,11 @@ class Engine:
     def add_request(self, rid: int, prompt: Sequence[int],
                     adapter_id: int) -> int:
         """Admit a request into a free slot at a decode-step boundary: prime
-        the slot's KV rows with the prompt (all but the last token), leaving
-        the running batch untouched. Returns the slot index."""
+        the slot's KV with the prompt (all but the last token) via chunked
+        prefill, leaving the running batch untouched. In paged mode the
+        prompt's pages are allocated here (admission requires free pages to
+        cover it; later decode pages are allocated incrementally in
+        ``step``). Returns the slot index."""
         if rid in self._by_rid:
             raise ValueError(f"rid {rid} already running")
         slot = next((i for i, s in enumerate(self.slots) if s is None), None)
@@ -210,29 +352,70 @@ class Engine:
         # and the first decode write lands at position plen-1 <= max_len-1
         if plen < 1 or plen > self.ecfg.max_len:
             raise ValueError(f"prompt length {plen} vs max_len")
+        if self.ecfg.paged:
+            need = cache_mod.pages_for(plen - 1, self.ecfg.page_size)
+            if need > len(self._free):
+                raise RuntimeError(
+                    f"rid {rid}: free KV pages ({len(self._free)}) do not "
+                    f"cover the prompt ({need} pages) — the scheduler must "
+                    f"gate admission on free_pages()")
+            for j in range(need):
+                self._bt[slot, j] = self._alloc_page()
         if plen > 1:
-            s_pad = _bucket(plen - 1, self.ecfg.max_len)
-            toks = np.zeros((1, s_pad), np.int32)
-            toks[0, :plen - 1] = prompt[:-1]
-            _, (k_rows, v_rows) = _prefill_collect(self.params, self.cfg,
-                                                   jnp.asarray(toks))
-            # kvs: (L, 1, s_pad, KV, hd); positions >= plen-1 hold garbage
-            # from padding tokens, but they are overwritten by decode steps
-            # before the per-slot valid mask can ever reach them.
-            self._k, self._v = _write_prefill_rows(self._k, self._v, k_rows,
-                                                   v_rows, slot)
+            self._prefill_slot(slot, prompt[:-1])
         self.slots[slot] = SlotState(rid=rid, adapter_id=int(adapter_id),
                                      pos=plen - 1,
                                      last_token=int(prompt[-1]))
         self._by_rid[rid] = slot
         return slot
 
+    def _prefill_slot(self, slot: int, toks: np.ndarray) -> None:
+        """Chunked prefill: run ``toks`` through fixed-width parallel
+        chunks, each attending over the already-cached context, writing
+        each chunk's KV into the slot's rows (dense) or pages (paged).
+        The final chunk is zero-padded to its width; the padded positions'
+        KV is garbage but sits beyond the slot position, so it is masked by
+        every attention until decode overwrites it."""
+        n_tok = int(toks.shape[0])
+        C = self._chunk
+        ps = self.ecfg.page_size
+        for c in range(0, n_tok, C):
+            w = min(C, self.ecfg.max_len - c)   # keep writes in the slot
+            chunk = np.zeros((1, w), np.int32)
+            m = min(w, n_tok - c)
+            chunk[0, :m] = toks[c:c + m]
+            if self.ecfg.paged:
+                pages = jnp.asarray(self._bt[slot, : c // ps])
+                k_ctx, v_ctx = _gather_ctx_pages(self._k, self._v, pages)
+            else:
+                k_ctx, v_ctx = _gather_ctx_rows(self._k, self._v,
+                                                jnp.int32(slot), c)
+            k_c, v_c = _prefill_chunk(self.params, self.cfg,
+                                      jnp.asarray(chunk), k_ctx, v_ctx)
+            if self.ecfg.paged:
+                # w <= max_len - c keeps this slice fully in the block
+                # table; unallocated tail pages (padded final chunk) map to
+                # total_pages -> write dropped
+                have = self._bt[slot, c // ps: c // ps + w // ps]
+                pg = np.where(have < 0, self.total_pages,
+                              have).astype(np.int32)
+                self._k, self._v = _write_chunk_pages(
+                    self._k, self._v, k_c, v_c, jnp.asarray(pg))
+            else:
+                self._k, self._v = _write_chunk_rows(
+                    self._k, self._v, k_c, v_c, jnp.int32(slot),
+                    jnp.int32(c))
+
     def evict_request(self, rid: int) -> None:
-        """Free a slot at a step boundary (finish or preemption). The KV
-        rows are left in place: a later occupant masks them out via its own
-        position vector and overwrites them as it decodes."""
+        """Free a slot at a step boundary (finish or preemption). Dense: the
+        KV rows are left in place (a later occupant masks them via its own
+        position vector). Paged: the slot's pages return to the free pool —
+        the memory actually comes back."""
         slot = self._by_rid.pop(rid)
         self.slots[slot] = None
+        if self.ecfg.paged:
+            self._free.extend(int(p) for p in self._bt[slot] if p >= 0)
+            self._bt[slot, :] = -1
 
     # ------------------------------------------------------------------ #
     # continuous-batching decode step                                     #
@@ -242,7 +425,9 @@ class Engine:
 
         Gathers occupied slots into a power-of-two bucket (one jit compile
         per bucket size), pads with inactive rows (pos -1, adapter -1), and
-        scatters the updated KV rows back (padding rows dropped)."""
+        scatters the updated KV rows back (padding rows dropped). Paged
+        mode allocates each row's next page on demand and steps through the
+        shared pool directly — no gather/scatter copies."""
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         if not occupied:
             return {}
@@ -263,30 +448,54 @@ class Engine:
                 raise RuntimeError(
                     f"rid {s.rid} exhausted slot KV capacity "
                     f"(pos {s.pos} >= max_len {self.ecfg.max_len})")
+            if self.ecfg.paged:
+                pidx = s.pos // self.ecfg.page_size
+                if self._bt[i, pidx] < 0:
+                    if not self._free:
+                        raise RuntimeError(
+                            f"rid {s.rid}: KV page pool exhausted "
+                            f"mid-decode (admission over-committed "
+                            f"{self.total_pages} pages)")
+                    self._bt[i, pidx] = self._alloc_page()
             toks[row, 0] = s.last_token
             pos_vec[row] = s.pos
             ads[row] = s.adapter_id
         sel_j = jnp.asarray(sel)
         sc_j = jnp.asarray(scatter_idx)
         toks_j, pos_j = jnp.asarray(toks), jnp.asarray(pos_vec)
+        bt_j = jnp.asarray(self._bt[sel]) if self.ecfg.paged else None
 
         if self.server is not None:
-            k_rows, v_rows = _gather_rows(self._k, self._v, sel_j)
-            logits, k_rows, v_rows = disagg_mod.disagg_decode_step_slots(
-                self.params, self.cfg, k_rows, v_rows, toks_j, pos_j,
-                self.server, jnp.asarray(ads),
-                self.pool.scale if self.pool else 1.0)
+            if self.ecfg.paged:
+                logits, self._k, self._v = \
+                    disagg_mod.disagg_decode_step_slots(
+                        self.params, self.cfg, self._k, self._v, toks_j,
+                        pos_j, self.server, jnp.asarray(ads),
+                        self.pool.scale if self.pool else 1.0,
+                        block_table=bt_j)
+            else:
+                k_rows, v_rows = _gather_rows(self._k, self._v, sel_j)
+                logits, k_rows, v_rows = \
+                    disagg_mod.disagg_decode_step_slots(
+                        self.params, self.cfg, k_rows, v_rows, toks_j,
+                        pos_j, self.server, jnp.asarray(ads),
+                        self.pool.scale if self.pool else 1.0)
+                self._k, self._v = _scatter_rows(self._k, self._v, k_rows,
+                                                 v_rows, sc_j)
             logits = logits[:, : self.cfg.vocab_size]
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            self._k, self._v = _scatter_rows(self._k, self._v, k_rows,
-                                             v_rows, sc_j)
         else:
             lora_ctx = None
             if self.pool is not None:
                 lora_ctx = self.pool.lora_ctx(jnp.asarray(ads))
-            tok, self._k, self._v = _coupled_slot_step(
-                self.params, self.cfg, self._k, self._v, sel_j, sc_j,
-                toks_j, pos_j, lora_ctx)
+            if self.ecfg.paged:
+                tok, self._k, self._v = _coupled_paged_step(
+                    self.params, self.cfg, self._k, self._v, bt_j, toks_j,
+                    pos_j, lora_ctx)
+            else:
+                tok, self._k, self._v = _coupled_slot_step(
+                    self.params, self.cfg, self._k, self._v, sel_j, sc_j,
+                    toks_j, pos_j, lora_ctx)
 
         tok = np.asarray(tok)
         out: Dict[int, int] = {}
@@ -302,11 +511,43 @@ class Engine:
     # legacy static-batch API (quickstart / launch.serve / test_system)    #
     # ------------------------------------------------------------------ #
     def prefill(self, tokens: jax.Array, frontend_emb=None) -> Dict:
-        """tokens: (B, S_prompt) -> cache primed with the prompt."""
+        """tokens: (B, S_prompt) -> cache primed with the prompt.
+
+        Attention LMs run the prompt through ONE parallel
+        ``forward(collect_kv=True)`` (the same path slot admission uses);
+        the old implementation replayed it one token at a time through
+        ``decode_step`` — O(S) sequential dispatches for identical math.
+        Recurrent/audio families keep the replay (their stateful caches
+        are only advanced by decode steps)."""
         B, S = tokens.shape
         cache = cache_mod.init_cache(self.cfg, B, self.ecfg.max_len,
                                      self.ecfg.kv_quant)
-        # simple functional prefill: replay the prompt through decode steps
+        if (self.cfg.family in SLOT_FAMILIES and S > 0
+                and frontend_emb is None):
+            if S > self.ecfg.max_len:
+                raise ValueError(f"prompt length {S} vs max_len")
+            _, (k_rows, v_rows) = _prefill_collect(self.params, self.cfg,
+                                                   tokens)
+            zero = (0, 0, 0, 0, 0)
+            if self.ecfg.kv_quant:
+                kq, ks = cache_mod.quantize_kv(k_rows)
+                vq, vs = cache_mod.quantize_kv(v_rows)
+                cache["k"] = jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                          zero)
+                cache["v"] = jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                          zero)
+                cache["k_scale"] = jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks, zero)
+                cache["v_scale"] = jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs, zero)
+            else:
+                cache["k"] = jax.lax.dynamic_update_slice(
+                    cache["k"], k_rows.astype(cache["k"].dtype), zero)
+                cache["v"] = jax.lax.dynamic_update_slice(
+                    cache["v"], v_rows.astype(cache["v"].dtype), zero)
+            cache["pos"] = jnp.asarray(S, jnp.int32)
+            return cache
+        # recurrent/audio/frontend paths: replay through decode steps
         for t in range(S):
             _, cache = _decode_static(self.params, self.cfg, cache,
                                       tokens[:, t:t + 1], None)

@@ -10,14 +10,17 @@ Used by the simulator for both systems:
     checks the shared cache and picks the least-loaded instance.
 
 Admission (per decode-step boundary, i.e. token level): a request is admitted
-iff (a) the target engine batch has a free slot (KV-capacity bound) and
-(b) its adapter is resident or a slot can be freed; otherwise it queues
-(FCFS, or SJF with oracle output lengths for the S-LoRA w/ SJF baseline).
+iff (a) the target engine batch has a free slot, (b) when the engine is
+PAGED, the instance's KV page budget covers the request's whole footprint
+(prompt + output pages — the paper's real KV-capacity bound, replacing the
+"one slot = max_len rows" proxy), and (c) its adapter is resident or a slot
+can be freed; otherwise it queues (FCFS, or SJF with oracle output lengths
+for the S-LoRA w/ SJF baseline).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -56,12 +59,19 @@ def assign_adapters_greedy(n_adapters: int, popularity: np.ndarray,
 class Scheduler:
     def __init__(self, instances: Sequence[InstanceState],
                  caches: Dict[int, LoRACache], owner: Optional[np.ndarray],
-                 policy: str = "fcfs", shared_cache: bool = False):
+                 policy: str = "fcfs", shared_cache: bool = False,
+                 kv_pages: Optional[Dict[int, int]] = None,
+                 kv_page_need: Optional[Callable[[Request], int]] = None):
         self.instances = {i.iid: i for i in instances}
         self.caches = caches          # iid -> cache (or {-1: shared})
         self.owner = owner            # adapter -> instance (coupled only)
         self.policy = policy
         self.shared_cache = shared_cache
+        # paged-KV admission: kv_pages[iid] is the instance's page budget,
+        # kv_page_need(req) the pages the request holds over its lifetime
+        # (prompt + decoded tokens). None -> slot-count admission only.
+        self.kv_pages = kv_pages
+        self.kv_page_need = kv_page_need
         self.queues: Dict[int, List[Request]] = {i.iid: [] for i in instances}
         if shared_cache:
             self.queues[-1] = []
@@ -80,19 +90,50 @@ class Scheduler:
             self.caches[iid].prefetch_hint(req.adapter_id, now)
 
     def requeue_instance(self, iid: int, now: float):
-        """Fault handling: move a dead instance's work back to the queues."""
+        """Fault handling: move a dead instance's work back to the queues.
+
+        Coupled mode: requests route to ``owner[adapter_id]``, so simply
+        re-enqueueing would put them back on the DEAD instance's own queue,
+        where ``admit()`` returns [] forever — they would never finish.
+        The dead instance's adapters are therefore reassigned to the
+        least-loaded surviving instances first (heaviest affected adapter
+        first), and anything already waiting in its queue is rerouted too.
+        With no survivor the work stays queued on ``iid`` and resumes only
+        if it recovers. Shared-cache (disaggregated) mode has one global
+        queue, so only the running set needs requeueing."""
         inst = self.instances[iid]
         inst.alive = False
         cache = self.cache_for(iid)
-        for r in inst.running:
+        orphans = list(inst.running)
+        inst.running.clear()
+        stranded: List[Request] = []
+        if not self.shared_cache:
+            stranded = self.queues[iid]
+            self.queues[iid] = []
+        for r in orphans + stranded:
             r.decode_start = -1.0
             r.first_token = -1.0
             r.tokens_done = 0
             if r.reserved:
                 cache.unpin(r.adapter_id, now)
                 r.reserved = False
+        if not self.shared_cache:
+            survivors = [i for i in self.instances.values() if i.alive]
+            if survivors:
+                weight: Dict[int, int] = {}
+                for r in orphans + stranded:
+                    weight[r.adapter_id] = weight.get(r.adapter_id, 0) + 1
+                load = {i.iid: i.batch + len(self.queues[i.iid])
+                        for i in survivors}
+                orphan_adapters = [a for a in range(len(self.owner))
+                                   if int(self.owner[a]) == iid]
+                for a in sorted(orphan_adapters,
+                                key=lambda a: -weight.get(a, 0)):
+                    tgt = min(load, key=lambda j: load[j])
+                    self.owner[a] = tgt
+                    load[tgt] += weight.get(a, 0)
+        for r in orphans + stranded:
             self.enqueue(r, now)
-        inst.running.clear()
 
     def _sorted_queue(self, q: List[Request]) -> List[Request]:
         if self.policy == "sjf":  # oracle output lengths (paper baseline)
@@ -110,8 +151,21 @@ class Scheduler:
         queue = self._sorted_queue(self.queues[q_key])
         admitted = []
         rest = []
+        held = 0
+        if self.kv_pages is not None:
+            # the real KV-capacity bound: every resident request holds its
+            # full prompt+output page footprint, so admission never lets
+            # the pool be over-committed mid-decode (pages are physically
+            # allocated lazily by the engine, but the budget is reserved
+            # here)
+            held = sum(self.kv_page_need(r) for r in inst.running)
         for req in queue:
             if req.arrival > now or inst.batch + len(admitted) >= inst.max_batch:
+                rest.append(req)
+                continue
+            need = self.kv_page_need(req) if self.kv_pages is not None else 0
+            if self.kv_pages is not None and \
+                    held + need > self.kv_pages[iid]:
                 rest.append(req)
                 continue
             ready = cache.admit(req.adapter_id, now)
@@ -129,6 +183,7 @@ class Scheduler:
             req.instance = iid
             req.decode_start = now
             admitted.append(req)
+            held += need
         self.queues[q_key] = [r for r in rest]
         inst.running.extend(admitted)
         return admitted

@@ -48,6 +48,55 @@ def test_engine_end_to_end_coupled_and_disagg():
     assert toks_coupled.shape == (B, 5)
 
 
+def test_legacy_prefill_parallel_matches_token_replay():
+    """Regression for the O(S)-sequential legacy prefill: the parallel
+    forward(collect_kv=True) path must produce the same cache (and the same
+    downstream greedy tokens) as replaying the prompt one token at a time
+    through decode_step — with and without int8 KV quantization."""
+    from repro.models import cache as cache_mod
+    from repro.serving.engine import _decode_static
+    cfg = get_config("qwen2-1.5b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = model_mod.init_params(cfg, key, dtype="float32")
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (2, 5), 0,
+                              cfg.vocab_size)
+    for quant in (False, True):
+        eng = Engine(cfg, params, EngineConfig(max_len=16, kv_quant=quant))
+        fast = eng.prefill(toks)
+        slow = cache_mod.init_cache(cfg, 2, 16, quant)
+        for t in range(5):
+            _, slow = _decode_static(params, cfg, slow, toks[:, t:t + 1],
+                                     None)
+        assert int(fast["pos"]) == int(slow["pos"]) == 5
+        if quant:
+            # int8 codes may differ by an ULP from reduction-order jitter;
+            # compare the DEQUANTIZED values
+            kf = np.asarray(fast["k"], np.float32) * \
+                np.asarray(fast["k_scale"])
+            ks = np.asarray(slow["k"], np.float32) * \
+                np.asarray(slow["k_scale"])
+            np.testing.assert_allclose(kf, ks, atol=5e-2, rtol=5e-2)
+        else:
+            np.testing.assert_allclose(np.asarray(fast["k"], np.float32),
+                                       np.asarray(slow["k"], np.float32),
+                                       atol=1e-2, rtol=1e-2)
+        last = jnp.full((2, 1), 3, jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(eng.decode(fast, last, 4)),
+            np.asarray(eng.decode(slow, last, 4)))
+
+
+def test_slot_engine_rejects_non_attention_families():
+    """Regression: _ensure_slot_cache died with a bare KeyError('k') for
+    cache families without per-slot KV rows."""
+    import pytest
+    for name in ("rwkv6-3b", "zamba2-2.7b"):
+        cfg = get_config(name).reduced()
+        eng = Engine(cfg, None, EngineConfig(max_len=8))
+        with pytest.raises(ValueError, match="dense, moe, vlm"):
+            eng.add_request(0, [1, 2, 3], adapter_id=0)
+
+
 def test_cluster_serviceable_rate_gain():
     """Headline reproduction: InfiniLoRA sustains a higher serviceable
     request rate than S-LoRA under the paper's SLOs."""
