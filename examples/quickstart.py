@@ -1,21 +1,22 @@
-"""Quickstart: multi-LoRA serving of a tiny MoE model on CPU in ~a minute.
+"""Quickstart: multi-LoRA serving of a tiny MoE model on CPU in ~a minute,
+through the one serving front door (``repro.serving.api``).
 
-Builds a reduced DBRX-family MoE, a pool of LoRA adapters, and decodes a
-batch where every request uses a different adapter — the coupled (S-LoRA
-style) path with the BGMV/SGMV kernel contracts underneath.
+Builds a reduced DBRX-family MoE and a pool of LoRA adapters, then submits
+a batch of requests — each with its own adapter — to a ``ServeSystem``:
+continuous batching on the real JAX slot engine, per-token streaming, and
+a mid-flight cancellation, all from ``submit()`` handles.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core.adapter import init_adapter_pool
 from repro.models import model as model_mod
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.api import ServeConfig, build_system
 
 
 def main():
@@ -26,24 +27,44 @@ def main():
           f"{cfg.n_experts} experts top-{cfg.top_k})")
     key = jax.random.PRNGKey(0)
     params = model_mod.init_params(cfg, key)
-    pool = init_adapter_pool(cfg, n_adapters=4, key=jax.random.fold_in(key, 1),
-                             rank=4)
+    pool = init_adapter_pool(cfg, n_adapters=4,
+                             key=jax.random.fold_in(key, 1), rank=4)
     print(f"adapter pool: 4 adapters x {pool.bytes_per_adapter()/1e6:.2f} MB")
 
-    engine = Engine(cfg, params, EngineConfig(max_len=48), pool=pool)
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 8)))
-    adapter_ids = jnp.arange(4)
+    system = build_system(
+        ServeConfig(backend="cluster", n_instances=1, max_batch=4,
+                    max_len=48, adapter_cache_slots=4),
+        cfg, params=params, pool=pool)
 
-    cache = engine.prefill(prompts)
-    base = engine.decode(cache, prompts[:, -1:], steps=8)
-    cache = engine.prefill(prompts)
-    tuned = engine.decode(cache, prompts[:, -1:], steps=8,
-                          adapter_ids=adapter_ids)
-    print("base   :", np.asarray(base).tolist())
-    print("adapted:", np.asarray(tuned).tolist())
-    diff = int((np.asarray(base) != np.asarray(tuned)).sum())
-    print(f"{diff} / {base.size} tokens differ under per-request adapters")
+    # one shared prompt, four adapters: every request personalizes decoding
+    rng = np.random.default_rng(0)
+    prompt = [int(t) for t in rng.integers(0, cfg.vocab_size, 8)]
+    handles = [system.submit(prompt, adapter_id=a, max_new_tokens=8)
+               for a in range(4)]
+
+    # stream adapter 0's tokens as they decode (the others run alongside)
+    print("adapter 0 streams:", end=" ", flush=True)
+    for tok in handles[0]:
+        print(tok, end=" ", flush=True)
+    print()
+
+    system.drain()
+    for h in handles:
+        print(f"  adapter {h.request.adapter_id}: {h.tokens}  "
+              f"[{h.state.name.lower()}]")
+    rows = np.array([h.tokens for h in handles])
+    diff = int((rows != rows[0]).sum())
+    print(f"{diff} / {rows.size} tokens differ across per-request adapters")
+
+    # cancellation: give up on a request mid-decode; its slot frees for work
+    h = system.submit(prompt, adapter_id=1, max_new_tokens=12)
+    while h.n_tokens < 3:
+        system.step()
+    h.cancel()
+    system.drain()
+    print(f"cancelled rid={h.rid} after {h.n_tokens} tokens "
+          f"[{h.state.name.lower()}]; slots in use: "
+          f"{system.kv_stats()[0]['slots_in_use']}")
 
 
 if __name__ == "__main__":

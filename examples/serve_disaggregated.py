@@ -1,18 +1,20 @@
-"""End-to-end driver (the paper's system): serve a small MoE model with
-CONTINUOUS BATCHING through both architectures —
+"""End-to-end driver (the paper's system) through the one serving front
+door: serve a small MoE model with CONTINUOUS BATCHING on the real JAX
+cluster plane in both architectures —
 
-  token-level Scheduler admission -> slot engines (requests join the
-  RUNNING batch mid-decode) -> shared LoRA Server slot management ->
-  per-layer activation round trips -> identical tokens to the coupled path —
+  ServeSystem.submit -> token-level Scheduler admission -> slot engines
+  (requests join the RUNNING batch mid-decode) -> shared LoRA Server slot
+  management -> per-layer activation round trips -> identical tokens to
+  the coupled path — plus the two request-level scenarios the front door
+  adds: mid-stream token consumption and cancellation under churn.
 
-then the cluster-scale view: the same control-plane code inside the
-discrete-event simulator, comparing S-LoRA vs InfiniLoRA under load with the
-paper's SLOs, plus SLO-driven provisioning (Algorithm 1) choosing the server
-size.
+Then the cluster-scale view: the SAME control-plane code inside the
+discrete-event simulator (``backend="sim"``), comparing S-LoRA vs
+InfiniLoRA under load with the paper's SLOs, plus SLO-driven provisioning
+(Algorithm 1) choosing the server size.
 
     PYTHONPATH=src python examples/serve_disaggregated.py
 """
-import copy
 import dataclasses
 
 import jax
@@ -24,13 +26,42 @@ from repro.core import provisioning as P
 from repro.core.adapter import init_mixed_rank_pool
 from repro.core.lora_server import LoRAServer, ServerConfig
 from repro.models import model as model_mod
-from repro.serving import metrics, simulator, workload
-from repro.serving.cluster import Cluster, ClusterConfig
-from repro.serving.workload import Request
+from repro.serving import workload
+from repro.serving.api import ServeConfig, build_system
+
+REQS = [
+    # (adapter, arrival, prompt_len, output_len): rid 2/3 join while 0/1
+    # are mid-decode; with only 2 slots per instance, rid 4 must wait for
+    # an eviction
+    (0, 0.0, 5, 7), (2, 0.0, 4, 6), (5, 2.0, 6, 5),
+    (1, 3.0, 3, 5), (3, 4.0, 4, 4),
+]
+
+
+def serve(cfg, params, pool, disaggregated, cancel_rid=None):
+    server = None
+    if disaggregated:
+        server = LoRAServer(cfg, ServerConfig(m=1, x=1, y=1, cache_slots=6,
+                                              rank=8), dtype=jnp.float32)
+    system = build_system(
+        ServeConfig(backend="cluster", disaggregated=disaggregated,
+                    n_instances=2, max_batch=2, max_len=32,
+                    adapter_cache_slots=6),
+        cfg, params=params, pool=pool, server=server)
+    handles = [system.submit(adapter_id=a, arrival=t, prompt_len=p,
+                             max_new_tokens=o)
+               for a, t, p, o in REQS]
+    if cancel_rid is not None:
+        h = handles[cancel_rid]
+        while h.n_tokens < 2:       # let it reach mid-decode first
+            system.step()
+        h.cancel()
+    system.drain()
+    return system, handles
 
 
 def functional_demo():
-    print("=== continuous batching: disaggregated == coupled, per token ===")
+    print("=== front door: disaggregated == coupled, per token ===")
     cfg = dataclasses.replace(get_config("qwen3-moe-235b-a22b").reduced(),
                               lora_targets=("gate", "up", "down"),
                               lora_rank=8)
@@ -40,35 +71,25 @@ def functional_demo():
     pool = init_mixed_rank_pool(cfg, [2, 4, 8, 4, 2, 8],
                                 jax.random.fold_in(key, 1),
                                 dtype=jnp.float32)
-    # staggered arrivals: rid 2/3 join while 0/1 are mid-decode; with only
-    # 2 slots per instance, rid 4 must wait for an eviction
-    reqs = [Request(0, 0, arrival=0.0, prompt_len=5, output_len=7),
-            Request(1, 2, arrival=0.0, prompt_len=4, output_len=6),
-            Request(2, 5, arrival=2.0, prompt_len=6, output_len=5),
-            Request(3, 1, arrival=3.0, prompt_len=3, output_len=5),
-            Request(4, 3, arrival=4.0, prompt_len=4, output_len=4)]
-
-    def serve(disaggregated):
-        server = None
-        if disaggregated:
-            server = LoRAServer(cfg, ServerConfig(m=1, x=1, y=1,
-                                                  cache_slots=6, rank=8),
-                                dtype=jnp.float32)
-        ccfg = ClusterConfig(n_instances=2, n_slots=2, max_len=32,
-                             disaggregated=disaggregated,
-                             adapter_cache_slots=6)
-        cluster = Cluster(cfg, params, ccfg, pool, server=server)
-        return cluster.run(reqs)  # run() copies; reqs stay pristine
-
-    out_c = serve(False)
-    out_d = serve(True)
-    for r in reqs:
-        print(f"  rid={r.rid} adapter={r.adapter_id} "
-              f"arrival={r.arrival:.0f}: {out_c['tokens'][r.rid]}")
-    same = out_c["tokens"] == out_d["tokens"]
+    _, hs_c = serve(cfg, params, pool, disaggregated=False)
+    _, hs_d = serve(cfg, params, pool, disaggregated=True)
+    for h in hs_c:
+        print(f"  rid={h.rid} adapter={h.request.adapter_id} "
+              f"arrival={h.request.arrival:.0f}: {h.tokens}")
+    same = all(c.tokens == d.tokens for c, d in zip(hs_c, hs_d))
     print(f"mid-decode admission on both paths; tokens identical across "
           f"architectures: {same}")
     assert same
+
+    print("\n=== cancellation under churn (both planes share the path) ===")
+    system, hs = serve(cfg, params, pool, disaggregated=True, cancel_rid=0)
+    st = system.kv_stats()
+    print(f"  rid=0 cancelled after {hs[0].n_tokens}/"
+          f"{hs[0].request.output_len} tokens [{hs[0].state.name.lower()}]; "
+          f"others: {[h.state.name.lower() for h in hs[1:]]}")
+    print(f"  slots in use after drain: "
+          f"{[s['slots_in_use'] for s in st.values()]}")
+    assert hs[0].request.finish < 0 and all(h.done for h in hs)
 
 
 def provisioning_demo():
@@ -85,20 +106,27 @@ def provisioning_demo():
 
 
 def cluster_demo(rep):
-    print("\n=== cluster: S-LoRA vs InfiniLoRA under load (simulator) ===")
+    print("\n=== cluster: S-LoRA vs InfiniLoRA under load (sim plane) ===")
     cfg = get_config("qwen3-30b-a3b")
     duration, n_ad = 80.0, 512
-    s_cfg = presets.slora_config(cfg, 4, 8, n_ad, duration)
-    i_cfg = presets.infinilora_config(cfg, 3, 8, max(rep.gpus, 8), n_ad,
-                                      duration)
+    serve_cfgs = {
+        "s-lora": ServeConfig.from_sim(
+            presets.slora_config(cfg, 4, 8, n_ad, duration)),
+        "infinilora": ServeConfig.from_sim(
+            presets.infinilora_config(cfg, 3, 8, max(rep.gpus, 8), n_ad,
+                                      duration)),
+    }
     for rate in (15, 30, 45):
         reqs = workload.generate(n_ad, rate=rate, duration=duration, seed=0)
         row = [f"rate={rate:3d}"]
-        for name, sim in (("s-lora", s_cfg), ("infinilora", i_cfg)):
-            out = simulator.simulate(cfg, [copy.copy(r) for r in reqs], sim)
-            s = metrics.summarize(out["requests"], duration)
+        for name, scfg in serve_cfgs.items():
+            system = build_system(scfg, cfg)
+            system.submit_workload(reqs)
+            system.drain()
+            s = system.summary(duration=duration)
             row.append(f"{name}: p95ttft={s.p95_ttft:7.3f}s "
-                       f"tpot={s.mean_tpot:.3f}s attain={s.slo_attainment:.0%}")
+                       f"tpot={s.mean_tpot:.3f}s "
+                       f"attain={s.slo_attainment:.0%}")
         print("  ".join(row))
 
 

@@ -1,4 +1,5 @@
-"""Serving driver: real multi-LoRA decode on this host + cluster simulation.
+"""Serving driver: real multi-LoRA decode on this host + cluster simulation,
+both through the one serving front door (``repro.serving.api``).
 
   PYTHONPATH=src python -m repro.launch.serve --arch dbrx-132b --reduced \
       --mode disagg --requests 8
@@ -8,19 +9,16 @@
 from __future__ import annotations
 
 import argparse
-import copy
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.baselines import slora as presets
 from repro.configs import get_config
 from repro.core import adapter as adapter_mod
-from repro.core import lora_server as ls
 from repro.models import model as model_mod
-from repro.serving import metrics, simulator, workload
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving import workload
+from repro.serving.api import ServeConfig, build_system
 
 
 def run_local(args):
@@ -33,23 +31,21 @@ def run_local(args):
     params = model_mod.init_params(cfg, key)
     pool = adapter_mod.init_adapter_pool(cfg, args.adapters,
                                          jax.random.fold_in(key, 1), rank=4)
-    server = None
-    if args.mode == "disagg":
-        scfg = ls.ServerConfig(m=1, x=1, y=1, cache_slots=args.adapters,
-                               rank=4)
-        server = ls.LoRAServer(cfg, scfg)
-        for a in range(args.adapters):
-            server.insert(a, ls.pool_tensors_from_adapter(pool, a))
-    eng = Engine(cfg, params, EngineConfig(max_len=64), pool=pool,
-                 server=server)
-    B = args.requests
+    system = build_system(
+        ServeConfig(backend="cluster", disaggregated=args.mode == "disagg",
+                    n_instances=1, max_batch=args.requests, max_len=64,
+                    adapter_cache_slots=args.adapters),
+        cfg, params=params, pool=pool)
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 8)))
-    ids = jnp.asarray(rng.integers(0, args.adapters, (B,)))
-    cache = eng.prefill(prompts)
-    toks = eng.decode(cache, prompts[:, -1:], steps=8, adapter_ids=ids)
-    print(f"served batch={B} adapters={sorted(set(int(i) for i in ids))}")
-    print("generated:", np.asarray(toks)[:, :8].tolist())
+    handles = [
+        system.submit([int(t) for t in rng.integers(0, cfg.vocab_size, 8)],
+                      adapter_id=int(a), max_new_tokens=8)
+        for a in rng.integers(0, args.adapters, args.requests)]
+    system.drain()
+    ids = sorted({h.request.adapter_id for h in handles})
+    print(f"served batch={len(handles)} adapters={ids}")
+    print("generated:", [h.tokens for h in handles])
+    assert all(h.state.name == "FINISHED" for h in handles)
     return 0
 
 
@@ -57,17 +53,16 @@ def run_cluster(args):
     cfg = get_config(args.arch)
     reqs = workload.generate(args.adapters, rate=args.rate,
                              duration=args.duration, seed=0)
-    cmp = {}
-    s_cfg = presets.slora_config(cfg, 4, args.gpus_per_instance,
-                                 args.adapters, args.duration)
-    i_cfg = presets.infinilora_config(cfg, 3, args.gpus_per_instance,
-                                      args.gpus_per_instance, args.adapters,
-                                      args.duration)
-    for name, sim in (("s-lora", s_cfg), ("infinilora", i_cfg)):
-        rs = [copy.copy(r) for r in reqs]
-        out = simulator.simulate(cfg, rs, sim)
-        cmp[name] = metrics.summarize(out["requests"], args.duration)
-    for name, s in cmp.items():
+    s_cfg = ServeConfig.from_sim(presets.slora_config(
+        cfg, 4, args.gpus_per_instance, args.adapters, args.duration))
+    i_cfg = ServeConfig.from_sim(presets.infinilora_config(
+        cfg, 3, args.gpus_per_instance, args.gpus_per_instance,
+        args.adapters, args.duration))
+    for name, scfg in (("s-lora", s_cfg), ("infinilora", i_cfg)):
+        system = build_system(scfg, cfg)
+        system.submit_workload(reqs)
+        system.drain()
+        s = system.summary(duration=args.duration)
         print(f"{name:12s} p95_ttft={s.p95_ttft:8.3f}s tpot={s.mean_tpot:.4f}s "
               f"thr={s.throughput_rps:7.2f}r/s attain={s.slo_attainment:.2%}")
     return 0

@@ -1,0 +1,608 @@
+"""One serving front door: ``ServeConfig`` -> ``Backend`` -> ``RequestHandle``.
+
+The repo's execution planes — the analytic discrete-event simulator
+(``serving/simulator.py``) and the real JAX slot-engine cluster
+(``serving/cluster.py``) — used to be wired by hand through three
+overlapping configs (``SimConfig`` / ``ClusterConfig`` / ``EngineConfig``).
+This module is the single request-level frontend over both:
+
+    ServeConfig ──> build_system(cfg, model, ...) ──> ServeSystem
+                                                          │ submit()
+                                                          ▼
+                  Backend (protocol)                 RequestHandle
+                  ├── SimBackend    (analytic plane) states, tokens,
+                  └── ClusterBackend (real JAX plane) cancel(), iter()
+
+Request lifecycle (identical on both planes, so ``metrics.summarize``
+observes the same thing either way):
+
+    QUEUED ──> PREFILLING ──> DECODING ──> FINISHED
+      │             │             │
+      └──────────── ┴──── cancel()┴──────> CANCELLED
+    submit() that violates the admission contract ───> REJECTED
+
+Streaming: every decoded token reaches the handle the round it is produced
+— consume via ``handle.on_token(cb)`` or ``for tok in handle`` (the
+iterator pumps the system). The analytic plane emits token *events* with
+``token=None`` (it models time, not token ids).
+
+Cancellation (``handle.cancel()``): takes effect at the next round/event
+boundary; the decode slot, the KV pages, and the scheduler's adapter pin
+all come back immediately (``ServeSystem.kv_stats`` returns to its
+pre-admission values), and the request is never counted in
+``Summary.n_finished``.
+
+Migration from the legacy entrypoints (kept working as shims):
+
+    Engine.prefill/decode  -> build_system(ServeConfig(backend="cluster"))
+    Cluster(...).run(reqs) -> system.submit_workload(reqs); system.drain()
+    simulator.simulate     -> ServeConfig(backend="sim"); system.summary()
+    SimConfig/ClusterConfig -> ServeConfig.from_sim / ServeConfig.from_cluster
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Callable, Dict, Iterator, List, Optional, Protocol, \
+    Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.cost_model import Hardware, V5E
+from repro.serving import metrics
+from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.engine import EngineConfig
+from repro.serving.metrics import Summary
+from repro.serving.simulator import SimConfig, Simulation
+from repro.serving.workload import Request
+
+__all__ = [
+    "ServeConfig", "Backend", "SimBackend", "ClusterBackend",
+    "ServeSystem", "RequestHandle", "RequestState", "Event",
+    "SLOClass", "INTERACTIVE", "BATCH", "TERMINAL_STATES",
+    "build_system", "Request", "Summary",
+]
+
+
+# --------------------------- request lifecycle --------------------------- #
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+    CANCELLED = "cancelled"
+    REJECTED = "rejected"
+
+
+TERMINAL_STATES = frozenset({RequestState.FINISHED, RequestState.CANCELLED,
+                             RequestState.REJECTED})
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One observable lifecycle step, identical across backends."""
+    time: float
+    rid: int
+    kind: str                    # queued|prefill|token|finished|cancelled
+    token: Optional[int] = None  # real token id (cluster) / None (sim)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """Per-request latency class (paper §6.1 SLOs are the default)."""
+    name: str
+    ttft_slo: float
+    tpot_slo: float
+
+
+INTERACTIVE = SLOClass("interactive", metrics.TTFT_SLO, metrics.TPOT_SLO)
+BATCH = SLOClass("batch", 4 * metrics.TTFT_SLO, 4 * metrics.TPOT_SLO)
+
+
+# ------------------------------ ServeConfig ------------------------------ #
+@dataclasses.dataclass
+class ServeConfig:
+    """The one serving config: derives the legacy ``EngineConfig`` /
+    ``ClusterConfig`` / ``SimConfig`` triplet instead of repeating their
+    overlapping knobs at every call site."""
+    # execution plane
+    backend: str = "cluster"        # "cluster" (real JAX) | "sim" (analytic)
+    disaggregated: bool = False
+    # capacity (previously triplicated across the three configs)
+    n_instances: int = 1
+    max_batch: int = 4              # decode slots per instance
+    max_len: int = 64               # KV rows per slot
+    adapter_cache_slots: int = 8    # per instance (coupled) / shared (disagg)
+    policy: str = "fcfs"            # or "sjf" (oracle output lengths)
+    # KV layout (cluster plane)
+    paged: bool = False
+    page_size: int = 8
+    n_pages: Optional[int] = None
+    prefill_chunk: int = 16
+    # timing / adapter loading
+    step_time: float = 1.0          # cluster: virtual seconds per round
+    host_bw: float = float("inf")   # cluster: adapter load bandwidth
+    layerwise_loading: bool = True
+    max_rounds: int = 100_000
+    # analytic plane (sim backend) only
+    gpus_per_instance: int = 8
+    server_gpus: int = 8
+    placement_x: Optional[int] = None
+    duration: float = 300.0
+    overlap: bool = True
+    fast_kernels: bool = True
+    protocol: str = "push"
+    hw: Hardware = V5E
+    lora_rank: Optional[int] = None
+    zipf_s: float = 1.2
+    n_adapters: int = 512
+    step_overhead: float = 0.004
+    failures: Tuple[Tuple[float, int], ...] = ()
+    recoveries: Tuple[Tuple[float, int], ...] = ()
+    stragglers: Tuple[Tuple[float, int, float], ...] = ()
+    straggler_mitigation: bool = True
+
+    # ------------------------- derivations --------------------------- #
+    def engine_config(self) -> EngineConfig:
+        return EngineConfig(max_len=self.max_len, n_slots=self.max_batch,
+                            paged=self.paged, page_size=self.page_size,
+                            n_pages=self.n_pages,
+                            prefill_chunk=self.prefill_chunk)
+
+    def cluster_config(self) -> ClusterConfig:
+        return ClusterConfig(
+            n_instances=self.n_instances, n_slots=self.max_batch,
+            max_len=self.max_len, disaggregated=self.disaggregated,
+            adapter_cache_slots=self.adapter_cache_slots, policy=self.policy,
+            step_time=self.step_time, host_bw=self.host_bw,
+            layerwise_loading=self.layerwise_loading,
+            max_rounds=self.max_rounds, paged=self.paged,
+            page_size=self.page_size, n_pages=self.n_pages,
+            prefill_chunk=self.prefill_chunk)
+
+    def sim_config(self) -> SimConfig:
+        return SimConfig(
+            n_instances=self.n_instances,
+            gpus_per_instance=self.gpus_per_instance,
+            max_batch=self.max_batch, duration=self.duration,
+            disaggregated=self.disaggregated, server_gpus=self.server_gpus,
+            server_cache_slots=self.adapter_cache_slots,
+            placement_x=self.placement_x,
+            instance_cache_slots=self.adapter_cache_slots,
+            overlap=self.overlap,
+            layerwise_loading=self.layerwise_loading,
+            fast_kernels=self.fast_kernels, protocol=self.protocol,
+            policy=self.policy, hw=self.hw, lora_rank=self.lora_rank,
+            zipf_s=self.zipf_s, n_adapters=self.n_adapters,
+            step_overhead=self.step_overhead, failures=self.failures,
+            recoveries=self.recoveries, stragglers=self.stragglers,
+            straggler_mitigation=self.straggler_mitigation)
+
+    # ------------------------ migration shims ------------------------ #
+    @classmethod
+    def from_sim(cls, sim: SimConfig, **overrides) -> "ServeConfig":
+        """Lift a legacy ``SimConfig`` (e.g. the baselines' presets) into
+        the front door."""
+        slots = sim.server_cache_slots if sim.disaggregated \
+            else sim.instance_cache_slots
+        kw = dict(
+            backend="sim", disaggregated=sim.disaggregated,
+            n_instances=sim.n_instances, max_batch=sim.max_batch,
+            adapter_cache_slots=slots, policy=sim.policy,
+            gpus_per_instance=sim.gpus_per_instance,
+            server_gpus=sim.server_gpus, placement_x=sim.placement_x,
+            duration=sim.duration, overlap=sim.overlap,
+            layerwise_loading=sim.layerwise_loading,
+            fast_kernels=sim.fast_kernels, protocol=sim.protocol,
+            hw=sim.hw, lora_rank=sim.lora_rank, zipf_s=sim.zipf_s,
+            n_adapters=sim.n_adapters, step_overhead=sim.step_overhead,
+            failures=sim.failures, recoveries=sim.recoveries,
+            stragglers=sim.stragglers,
+            straggler_mitigation=sim.straggler_mitigation)
+        kw.update(overrides)
+        return cls(**kw)
+
+    @classmethod
+    def from_cluster(cls, ccfg: ClusterConfig, **overrides) -> "ServeConfig":
+        """Lift a legacy ``ClusterConfig`` into the front door."""
+        kw = dict(
+            backend="cluster", disaggregated=ccfg.disaggregated,
+            n_instances=ccfg.n_instances, max_batch=ccfg.n_slots,
+            max_len=ccfg.max_len,
+            adapter_cache_slots=ccfg.adapter_cache_slots,
+            policy=ccfg.policy, step_time=ccfg.step_time,
+            host_bw=ccfg.host_bw, layerwise_loading=ccfg.layerwise_loading,
+            max_rounds=ccfg.max_rounds, paged=ccfg.paged,
+            page_size=ccfg.page_size, n_pages=ccfg.n_pages,
+            prefill_chunk=ccfg.prefill_chunk)
+        kw.update(overrides)
+        return cls(**kw)
+
+
+# ------------------------------- backends -------------------------------- #
+class Backend(Protocol):
+    """An execution plane the front door can drive: accepts requests,
+    advances virtual time in steps, emits lifecycle ``Event``s, and can
+    release an in-flight request."""
+
+    def submit(self, req: Request) -> None: ...
+
+    def cancel(self, rid: int, at: Optional[float] = None) -> List[Event]: ...
+
+    def step(self) -> List[Event]: ...
+
+    def idle(self) -> bool: ...
+
+    @property
+    def now(self) -> float: ...
+
+    def requests(self) -> List[Request]: ...
+
+    def kv_stats(self) -> Dict: ...
+
+    def default_duration(self) -> float: ...
+
+
+class SimBackend:
+    """The analytic discrete-event plane (wraps ``simulator.Simulation``).
+
+    Token events carry ``token=None``: this plane models *time* (TTFT,
+    TPOT, SLO attainment at cluster scale), not token ids."""
+
+    def __init__(self, model: ModelConfig, cfg: ServeConfig):
+        self.sim = Simulation(model, cfg.sim_config())
+        self._duration = cfg.duration
+
+    def submit(self, req: Request) -> None:
+        self.sim.submit(req)
+
+    def cancel(self, rid: int, at: Optional[float] = None) -> List[Event]:
+        self.sim.cancel(rid, at=at)
+        return []                   # the CANCELLED event arrives via step()
+
+    def step(self) -> List[Event]:
+        return [Event(t, rid, kind) for t, rid, kind in self.sim.step()]
+
+    def idle(self) -> bool:
+        return self.sim.idle()
+
+    @property
+    def now(self) -> float:
+        return self.sim.now
+
+    def requests(self) -> List[Request]:
+        return list(self.sim.requests)
+
+    def kv_stats(self) -> Dict:
+        return {}                   # the analytic plane holds no real KV
+
+    def default_duration(self) -> float:
+        return self._duration
+
+
+class ClusterBackend:
+    """The real JAX plane (wraps the slot-engine ``Cluster`` session):
+    actual decode steps, real token ids, paged or dense KV."""
+
+    def __init__(self, model: ModelConfig, params, cfg: ServeConfig, pool,
+                 server=None):
+        self.cluster = Cluster(model, params, cfg.cluster_config(), pool,
+                               server=server)
+        self.cluster.open()
+        self.max_rounds = cfg.max_rounds
+        self.step_time = cfg.step_time
+        self._reqs: List[Request] = []
+        self._req_by_rid: Dict[int, Request] = {}
+        self._cancels: List[Tuple[float, int]] = []   # (at, rid) scheduled
+
+    def submit(self, req: Request) -> None:
+        self.cluster.submit(req)    # raises ValueError -> REJECTED
+        self._reqs.append(req)
+        self._req_by_rid[req.rid] = req
+
+    def _live_cancels(self) -> List[Tuple[float, int]]:
+        """Scheduled cancels whose target is still in flight — a cancel
+        outliving its (finished or already-cancelled) request must not keep
+        the backend awake spinning empty rounds toward max_rounds."""
+        return [(t, rid) for t, rid in self._cancels
+                if (r := self._req_by_rid.get(rid)) is not None
+                and r.finish < 0 and not r.cancelled]
+
+    def cancel(self, rid: int, at: Optional[float] = None) -> List[Event]:
+        now = self.cluster.now
+        if at is not None and at > now:
+            self._cancels.append((at, rid))
+            return []
+        if self.cluster.cancel(rid):
+            return [Event(now, rid, "cancelled")]
+        return []
+
+    def step(self) -> List[Event]:
+        if self.cluster.rnd >= self.max_rounds:
+            raise RuntimeError(
+                f"cluster exceeded max_rounds={self.max_rounds} with "
+                f"unfinished work — adapter cache too small?")
+        evs: List[Event] = []
+        now = self.cluster.now
+        self._cancels = self._live_cancels()
+        due = [(t, rid) for t, rid in self._cancels if t <= now]
+        self._cancels = [(t, rid) for t, rid in self._cancels if t > now]
+        for t, rid in due:
+            evs.extend(self.cancel(rid))
+        rep = self.cluster.step_round()
+        evs.extend(Event(rep["now"], r.rid, "queued")
+                   for r in rep["enqueued"])
+        evs.extend(Event(rep["now"], r.rid, "prefill")
+                   for r in rep["admitted"])
+        evs.extend(Event(rep["step_end"], rid, "token", token=tok)
+                   for rid, tok in rep["tokens"].items())
+        evs.extend(Event(rep["step_end"], r.rid, "finished")
+                   for r in rep["finished"])
+        return evs
+
+    def idle(self) -> bool:
+        return self.cluster.idle() and not self._live_cancels()
+
+    @property
+    def now(self) -> float:
+        return self.cluster.now
+
+    def requests(self) -> List[Request]:
+        return list(self._reqs)
+
+    def kv_stats(self) -> Dict:
+        return self.cluster.kv_stats()
+
+    def default_duration(self) -> float:
+        return max(self.cluster.rnd, 1) * self.step_time
+
+
+# ---------------------------- request handle ----------------------------- #
+class RequestHandle:
+    """Client-side view of one submitted request: live state, the token
+    stream so far, per-token callbacks, an iterator that pumps the system,
+    and ``cancel()``."""
+
+    def __init__(self, system: "ServeSystem", request: Request,
+                 slo_class: SLOClass):
+        self._system = system
+        self.request = request
+        self.rid = request.rid
+        self.slo_class = slo_class
+        self.state = RequestState.QUEUED
+        self.tokens: List[int] = []          # real ids (cluster plane)
+        self.n_tokens = 0                    # lifecycle count (both planes)
+        self.events: List[Event] = []
+        self.error: Optional[str] = None
+        self._stream: List[Optional[int]] = []
+        self._cbs: List[Callable[["RequestHandle", Optional[int]], None]] = []
+
+    # ------------------------- consumption --------------------------- #
+    @property
+    def done(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+    def on_token(self, cb: Callable[["RequestHandle", Optional[int]], None]
+                 ) -> "RequestHandle":
+        """Register a per-token callback ``cb(handle, token)``; fires the
+        round each token is decoded."""
+        self._cbs.append(cb)
+        return self
+
+    def result(self) -> List[int]:
+        """Pump the system until this request is terminal (or the backend
+        runs dry); returns the tokens decoded so far."""
+        while not self.done and not self._system.backend.idle():
+            self._system.step()
+        return self.tokens
+
+    def __iter__(self) -> Iterator[Optional[int]]:
+        """Stream tokens as they are decoded, pumping the system between
+        yields — mid-stream consumption while OTHER requests keep being
+        admitted/evicted around this one."""
+        sent = 0
+        while True:
+            while sent < len(self._stream):
+                yield self._stream[sent]
+                sent += 1
+            if self.done or self._system.backend.idle():
+                return
+            self._system.step()
+
+    def cancel(self, at: Optional[float] = None) -> bool:
+        """Cancel this request (now, or at virtual time ``at``). Frees its
+        decode slot, KV pages, and adapter pin at the next round/event
+        boundary; it will never count as finished."""
+        if self.done:
+            return False
+        return self._system.cancel(self.rid, at=at)
+
+    # --------------------- metrics passthrough ----------------------- #
+    @property
+    def ttft(self) -> float:
+        return self.request.ttft
+
+    @property
+    def tpot(self) -> float:
+        return self.request.tpot
+
+    def __repr__(self):
+        return (f"RequestHandle(rid={self.rid}, state={self.state.name}, "
+                f"tokens={self.n_tokens}/{self.request.output_len})")
+
+    # -------------------------- internals ----------------------------- #
+    def _reject(self, reason: str) -> None:
+        self.state = RequestState.REJECTED
+        self.error = reason
+
+    def _apply(self, ev: Event) -> None:
+        self.events.append(ev)
+        if ev.kind == "queued":
+            if self.state == RequestState.QUEUED:
+                return               # submit() already set it
+            self.state = RequestState.QUEUED   # requeued after a failure
+        elif ev.kind == "prefill":
+            self.state = RequestState.PREFILLING
+        elif ev.kind == "token":
+            self.state = RequestState.DECODING
+            self.n_tokens += 1
+            self._stream.append(ev.token)
+            if ev.token is not None:
+                self.tokens.append(ev.token)
+            for cb in self._cbs:
+                cb(self, ev.token)
+        elif ev.kind == "finished":
+            self.state = RequestState.FINISHED
+        elif ev.kind == "cancelled":
+            self.state = RequestState.CANCELLED
+
+
+# ------------------------------ the system ------------------------------- #
+class ServeSystem:
+    """The front door: one object that owns a backend, assigns rids, fans
+    lifecycle events out to handles, and summarizes SLO metrics."""
+
+    def __init__(self, cfg: ServeConfig, model: ModelConfig, params=None,
+                 pool=None, server=None):
+        self.cfg = cfg
+        self.model = model
+        if cfg.backend == "sim":
+            self.backend: Backend = SimBackend(model, cfg)
+        elif cfg.backend == "cluster":
+            if params is None or pool is None:
+                raise ValueError(
+                    "backend='cluster' runs the real model: pass params= "
+                    "and pool= (or use backend='sim' for the analytic "
+                    "plane)")
+            if cfg.disaggregated and server is None:
+                server = self._make_server(model, cfg, pool)
+            self.backend = ClusterBackend(model, params, cfg, pool,
+                                          server=server)
+        else:
+            raise ValueError(f"unknown backend {cfg.backend!r} "
+                             f"(expected 'sim' or 'cluster')")
+        self.handles: Dict[int, RequestHandle] = {}
+        self._rid = itertools.count()
+
+    @staticmethod
+    def _make_server(model: ModelConfig, cfg: ServeConfig, pool):
+        """Default single-device LoRA Server sized to the shared cache."""
+        from repro.core.lora_server import LoRAServer, ServerConfig
+        dtype = next(iter(pool.tensors.values()))["A"].dtype
+        scfg = ServerConfig(m=1, x=1, y=1,
+                            cache_slots=cfg.adapter_cache_slots,
+                            rank=pool.rank)
+        return LoRAServer(model, scfg, dtype=dtype)
+
+    # --------------------------- submission -------------------------- #
+    def submit(self, prompt: Optional[Sequence[int]] = None,
+               adapter_id: int = 0, *, max_new_tokens: int = 8,
+               prompt_len: Optional[int] = None,
+               arrival: Optional[float] = None,
+               slo_class: SLOClass = INTERACTIVE,
+               on_token: Optional[Callable] = None,
+               rid: Optional[int] = None) -> RequestHandle:
+        """Submit one request; returns its handle immediately (state QUEUED,
+        or REJECTED if it violates the admission contract — never raises
+        for a bad request). ``prompt`` is real token ids (cluster plane);
+        without one, ``prompt_len`` synthesizes a deterministic prompt from
+        the rid."""
+        if prompt is None and prompt_len is None:
+            raise TypeError("submit() needs prompt= or prompt_len=")
+        rid = next(self._rid) if rid is None else rid
+        # materialize first: `if prompt` would crash on numpy/jnp arrays
+        # (ambiguous truth value) and silently drop an explicit empty prompt
+        ids = tuple(int(t) for t in prompt) if prompt is not None else ()
+        plen = len(ids) if prompt is not None else int(prompt_len)
+        req = Request(rid, int(adapter_id),
+                      arrival=self.backend.now if arrival is None
+                      else float(arrival),
+                      prompt_len=plen, output_len=int(max_new_tokens),
+                      prompt=ids)
+        handle = RequestHandle(self, req, slo_class)
+        if on_token is not None:
+            handle.on_token(on_token)
+        if prompt is not None and plen == 0:
+            handle._reject(f"request {rid}: empty prompt")
+            return handle
+        try:
+            self.backend.submit(req)
+        except ValueError as e:       # admission contract violation
+            handle._reject(str(e))
+            return handle
+        self.handles[rid] = handle
+        return handle
+
+    def submit_workload(self, requests: Sequence[Request],
+                        slo_class: SLOClass = INTERACTIVE
+                        ) -> List[RequestHandle]:
+        """Replay a generated workload (``workload.generate``) through the
+        front door, preserving each request's rid and arrival time."""
+        handles = [self.submit(adapter_id=r.adapter_id,
+                               prompt=r.prompt or None,
+                               prompt_len=r.prompt_len,
+                               max_new_tokens=r.output_len,
+                               arrival=r.arrival, rid=r.rid,
+                               slo_class=slo_class)
+                   for r in requests]
+        # keep auto-rids collision-free without ever rewinding the counter
+        # below rids already issued by plain submit() calls
+        top = max((r.rid for r in requests), default=-1)
+        self._rid = itertools.count(max(top + 1, next(self._rid)))
+        return handles
+
+    # ---------------------------- pumping ----------------------------- #
+    def step(self) -> List[Event]:
+        """Advance the backend one quantum; route events to handles."""
+        evs = self.backend.step()
+        for ev in evs:
+            h = self.handles.get(ev.rid)
+            if h is not None:
+                h._apply(ev)
+        return evs
+
+    def drain(self) -> None:
+        """Run until the backend is idle (every request terminal or the
+        plane's horizon reached)."""
+        while not self.backend.idle():
+            self.step()
+
+    def cancel(self, rid: int, at: Optional[float] = None) -> bool:
+        h = self.handles.get(rid)
+        if h is None or h.done:
+            return False
+        for ev in self.backend.cancel(rid, at=at):
+            self.handles[ev.rid]._apply(ev)
+        return True
+
+    @property
+    def now(self) -> float:
+        return self.backend.now
+
+    # ---------------------------- metrics ----------------------------- #
+    def kv_stats(self) -> Dict:
+        return self.backend.kv_stats()
+
+    def summary(self, duration: Optional[float] = None,
+                slo_class: Optional[SLOClass] = None,
+                warmup: float = 0.1) -> Summary:
+        """SLO summary over the live request objects — identical math for
+        both planes. ``slo_class`` filters to that class's requests and
+        applies its thresholds; default: all requests, paper SLOs."""
+        reqs = self.backend.requests()
+        if slo_class is not None:
+            keep = {h.rid for h in self.handles.values()
+                    if h.slo_class.name == slo_class.name}
+            reqs = [r for r in reqs if r.rid in keep]
+        sc = slo_class or INTERACTIVE
+        return metrics.summarize(
+            reqs, duration if duration is not None
+            else self.backend.default_duration(),
+            ttft_slo=sc.ttft_slo, tpot_slo=sc.tpot_slo, warmup=warmup)
+
+
+def build_system(cfg: ServeConfig, model: ModelConfig, *, params=None,
+                 pool=None, server=None) -> ServeSystem:
+    """Build the one serving front door for any plane combination:
+    coupled/disaggregated x sim/cluster x dense/paged KV."""
+    return ServeSystem(cfg, model, params=params, pool=pool, server=server)

@@ -90,6 +90,15 @@ class Cluster:
         self.engines = [Engine(cfg, params, ecfg, pool=pool,
                                server=self.server)
                         for _ in range(ccfg.n_instances)]
+        # session state (built by open(); run() opens its own)
+        self.sched: Optional[Scheduler] = None
+        self._instances: List[InstanceState] = []
+        self._caches: Dict[int, LoRACache] = {}
+        self.tokens: Dict[int, List[int]] = {}
+        self._reqs: Dict[int, Request] = {}
+        self._pending: List[Request] = []
+        self._pi = 0
+        self.rnd = 0
 
     # ------------------------------------------------------------------ #
     def _prompt(self, req: Request) -> np.ndarray:
@@ -117,59 +126,65 @@ class Cluster:
                                    pool_tensors_from_adapter(self.pool, aid))
 
     # ------------------------------------------------------------------ #
-    def run(self, requests: Sequence[Request]) -> Dict:
-        """Serve ``requests`` to completion (or ``max_rounds``): returns
-        {"tokens": {rid: [token, ...]}, "requests": ..., "rounds": n}.
-
-        The caller's Request objects are not mutated — runtime fields
-        (first_token/finish/...) land on the copies in ``out["requests"]``,
-        so one request list can be reused across runs/modes."""
-        requests = [copy.copy(r) for r in requests]
+    # incremental session API (serving/api.py front door)                 #
+    # ------------------------------------------------------------------ #
+    def validate(self, req: Request) -> None:
+        """Admission-contract checks, raised BEFORE a request enters the
+        session (the front door turns these into REJECTED handles)."""
         ccfg = self.ccfg
-        for r in requests:
-            # engine feasibility: plen + output_len <= max_len + 1, plen >= 1
-            # (the KV-capacity bound the admission contract promises) —
-            # reject up front rather than crash mid-run at the engine guard.
-            # Caller-supplied prompts are served verbatim, so they must fit;
-            # synthetic prompts are clamped in _prompt down to one token.
-            plen = len(r.prompt) if r.prompt else 1
-            if plen + r.output_len > ccfg.max_len + 1:
+        # engine feasibility: plen + output_len <= max_len + 1, plen >= 1
+        # (the KV-capacity bound the admission contract promises) —
+        # reject up front rather than crash mid-run at the engine guard.
+        # Caller-supplied prompts are served verbatim, so they must fit;
+        # synthetic prompts are clamped in _prompt down to one token.
+        plen = len(req.prompt) if req.prompt else 1
+        if plen + req.output_len > ccfg.max_len + 1:
+            raise ValueError(
+                f"request {req.rid}: prompt_len {plen} + output_len "
+                f"{req.output_len} cannot fit a max_len={ccfg.max_len} "
+                f"slot")
+        if not 0 <= req.adapter_id < self.pool.n:
+            # out-of-range ids would be silently clamped by the gather
+            # kernels to the last adapter's weights
+            raise ValueError(
+                f"request {req.rid}: adapter_id {req.adapter_id} outside "
+                f"pool of {self.pool.n}")
+        if ccfg.paged:
+            need = pages_for(int(self._prompt(req).shape[0])
+                             + req.output_len - 1, ccfg.page_size)
+            budget = self.engines[0].total_pages
+            if need > budget:
                 raise ValueError(
-                    f"request {r.rid}: prompt_len {plen} + output_len "
-                    f"{r.output_len} cannot fit a max_len={ccfg.max_len} "
-                    f"slot")
-            if not 0 <= r.adapter_id < self.pool.n:
-                # out-of-range ids would be silently clamped by the gather
-                # kernels to the last adapter's weights
-                raise ValueError(
-                    f"request {r.rid}: adapter_id {r.adapter_id} outside "
-                    f"pool of {self.pool.n}")
-            if ccfg.paged:
-                need = pages_for(int(self._prompt(r).shape[0])
-                                 + r.output_len - 1, ccfg.page_size)
-                budget = self.engines[0].total_pages
-                if need > budget:
-                    raise ValueError(
-                        f"request {r.rid}: needs {need} KV pages but the "
-                        f"pool has {budget} — it could never be admitted")
+                    f"request {req.rid}: needs {need} KV pages but the "
+                    f"pool has {budget} — it could never be admitted")
+
+    def open(self, requests: Sequence[Request] = ()) -> None:
+        """Start a serving session: build the scheduler/cache control plane.
+        ``requests``, when known up front (the legacy batch path), seeds the
+        coupled-mode greedy adapter->instance assignment with the true
+        per-adapter load; a streaming session assigns from uniform weights
+        over the pool."""
+        ccfg = self.ccfg
         n_adapters = max(self.pool.n,
                          max((r.adapter_id for r in requests), default=0) + 1)
-        instances = [InstanceState(i, ccfg.n_slots)
-                     for i in range(ccfg.n_instances)]
+        self._instances = [InstanceState(i, ccfg.n_slots)
+                           for i in range(ccfg.n_instances)]
         adapter_bytes = self.pool.bytes_per_adapter()
         mk_cache = lambda: LoRACache(  # noqa: E731
             ccfg.adapter_cache_slots, adapter_bytes, self.cfg.n_layers,
             host_bw=ccfg.host_bw, layerwise=ccfg.layerwise_loading,
             prefetch=ccfg.layerwise_loading)
         if ccfg.disaggregated:
-            caches = {-1: mk_cache()}
+            self._caches = {-1: mk_cache()}
             owner = None
         else:
             counts = np.bincount([r.adapter_id for r in requests],
                                  minlength=n_adapters).astype(float)
+            if not len(requests):
+                counts += 1.0           # uniform expected load
             owner = assign_adapters_greedy(n_adapters, counts,
                                            ccfg.n_instances)
-            caches = {i: mk_cache() for i in range(ccfg.n_instances)}
+            self._caches = {i: mk_cache() for i in range(ccfg.n_instances)}
         kv_pages = kv_need = None
         if ccfg.paged:
             # a resident request's page footprint: prompt positions plus one
@@ -178,66 +193,171 @@ class Cluster:
             # every resident request each round
             kv_pages = {i: self.engines[i].total_pages
                         for i in range(ccfg.n_instances)}
-            need_by_rid: Dict[int, int] = {}
+            self._need_by_rid: Dict[int, int] = {}
 
             def kv_need(r: Request) -> int:
-                if r.rid not in need_by_rid:
+                if r.rid not in self._need_by_rid:
                     plen = int(self._prompt(r).shape[0])
-                    need_by_rid[r.rid] = pages_for(
+                    self._need_by_rid[r.rid] = pages_for(
                         plen + r.output_len - 1, ccfg.page_size)
-                return need_by_rid[r.rid]
-        sched = Scheduler(instances, caches, owner, policy=ccfg.policy,
-                          shared_cache=ccfg.disaggregated,
-                          kv_pages=kv_pages, kv_page_need=kv_need)
+                return self._need_by_rid[r.rid]
+        self.sched = Scheduler(self._instances, self._caches, owner,
+                               policy=ccfg.policy,
+                               shared_cache=ccfg.disaggregated,
+                               kv_pages=kv_pages, kv_page_need=kv_need)
+        self.tokens: Dict[int, List[int]] = {}
+        self._reqs: Dict[int, Request] = {}
+        self._pending: List[Request] = []
+        self._pi = 0
+        self.rnd = 0
 
-        tokens: Dict[int, List[int]] = {r.rid: [] for r in requests}
-        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
-        pi = 0
-        rnd = 0
-        while rnd < ccfg.max_rounds:
-            now = rnd * ccfg.step_time
-            while pi < len(pending) and pending[pi].arrival <= now:
-                sched.enqueue(pending[pi], now)
-                pi += 1
-            # admission at the step boundary, least-loaded instance first
-            for iid in sorted(range(ccfg.n_instances),
-                              key=lambda i: instances[i].batch):
-                admitted = sched.admit(iid, now)
-                if admitted and ccfg.disaggregated:
-                    self._sync_server(caches[-1])
-                for r in admitted:
-                    self.engines[iid].add_request(r.rid, self._prompt(r),
-                                                  r.adapter_id)
-            # one decode step per busy instance; requests admitted above are
-            # already in the running batch (continuous batching)
-            step_end = (rnd + 1) * ccfg.step_time
-            busy = False
-            for iid in range(ccfg.n_instances):
-                eng = self.engines[iid]
-                if not eng.active_rids():
-                    continue
-                busy = True
-                for rid, tok in eng.step().items():
-                    tokens[rid].append(tok)
-                for r in sched.step_complete(iid, step_end):
-                    eng.evict_request(r.rid)
-            rnd += 1
-            if not busy and pi >= len(pending) and sched.queue_len() == 0:
+    @property
+    def now(self) -> float:
+        """Virtual time of the NEXT round boundary."""
+        return self.rnd * self.ccfg.step_time
+
+    def submit(self, req: Request) -> Request:
+        """Add one request to the open session (takes ownership of ``req``;
+        the legacy ``run`` copies before submitting). May be called mid-run:
+        the request joins the queue at the next round boundary."""
+        if self.sched is None:
+            raise RuntimeError("Cluster.open() before submit()")
+        if req.rid in self._reqs:
+            raise ValueError(f"rid {req.rid} already submitted")
+        self.validate(req)
+        self._reqs[req.rid] = req
+        self.tokens[req.rid] = []
+        # keep pending sorted by (arrival, rid); mid-run submissions land
+        # after the consumed prefix so past arrivals enqueue next round
+        lo = self._pi
+        while lo < len(self._pending) and \
+                (self._pending[lo].arrival, self._pending[lo].rid) <= \
+                (req.arrival, req.rid):
+            lo += 1
+        self._pending.insert(lo, req)
+        return req
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a submitted request at a round boundary: release its
+        scheduler state (queue slot or running set + adapter pin) and its
+        engine slot AND KV pages mid-flight. Partial tokens stay in
+        ``tokens[rid]``; the request never gets a finish stamp. Returns
+        False if the rid is unknown or already terminal."""
+        req = self._reqs.get(rid)
+        if req is None or req.finish >= 0 or req.cancelled:
+            return False
+        where = self.sched.cancel(req, self.now)   # also sets req.cancelled
+        if where is None:
+            # still pending (future arrival): drop it from the arrival list,
+            # otherwise idle() waits (spinning empty rounds) until its
+            # arrival time just to skip it
+            for i in range(self._pi, len(self._pending)):
+                if self._pending[i].rid == rid:
+                    del self._pending[i]
+                    break
+        for eng in self.engines:
+            if eng.has_request(rid):
+                eng.evict_request(rid)      # slot + pages come back NOW
                 break
-        unfinished = [r.rid for r in requests if r.finish < 0]
+        return True
+
+    def step_round(self) -> Dict:
+        """Advance ONE global decode round: enqueue due arrivals, admit at
+        the step boundary (least-loaded instance first), run one engine
+        step per busy instance, retire finishers. Returns the round report:
+        {"now", "step_end", "admitted", "tokens": {rid: tok}, "finished",
+        "idle"} — the per-round token stream the front door streams from."""
+        ccfg = self.ccfg
+        now = self.now
+        enqueued: List[Request] = []
+        while self._pi < len(self._pending) and \
+                self._pending[self._pi].arrival <= now:
+            r = self._pending[self._pi]
+            self._pi += 1
+            if not r.cancelled:             # cancelled while still pending
+                self.sched.enqueue(r, now)
+                enqueued.append(r)
+        # admission at the step boundary, least-loaded instance first
+        admitted_all: List[Request] = []
+        for iid in sorted(range(ccfg.n_instances),
+                          key=lambda i: self._instances[i].batch):
+            admitted = self.sched.admit(iid, now)
+            if admitted and ccfg.disaggregated:
+                self._sync_server(self._caches[-1])
+            for r in admitted:
+                self.engines[iid].add_request(r.rid, self._prompt(r),
+                                              r.adapter_id)
+            admitted_all.extend(admitted)
+        # one decode step per busy instance; requests admitted above are
+        # already in the running batch (continuous batching)
+        step_end = (self.rnd + 1) * ccfg.step_time
+        busy = False
+        round_tokens: Dict[int, int] = {}
+        finished: List[Request] = []
+        for iid in range(ccfg.n_instances):
+            eng = self.engines[iid]
+            if not eng.active_rids():
+                continue
+            busy = True
+            for rid, tok in eng.step().items():
+                self.tokens[rid].append(tok)
+                round_tokens[rid] = tok
+            for r in self.sched.step_complete(iid, step_end):
+                eng.evict_request(r.rid)
+                finished.append(r)
+        self.rnd += 1
+        idle = (not busy and self._pi >= len(self._pending)
+                and self.sched.queue_len() == 0)
+        return {"now": now, "step_end": step_end, "enqueued": enqueued,
+                "admitted": admitted_all, "tokens": round_tokens,
+                "finished": finished, "idle": idle}
+
+    def idle(self) -> bool:
+        """No running work, no queued work, no pending arrivals."""
+        if self.sched is None:
+            return True
+        return (self._pi >= len(self._pending)
+                and self.sched.queue_len() == 0
+                and not any(eng.active_rids() for eng in self.engines))
+
+    def cache_stats(self) -> Dict:
+        return {k: {"hits": c.hits, "misses": c.misses,
+                    "evictions": c.evictions}
+                for k, c in self._caches.items()}
+
+    def kv_stats(self) -> Dict[int, Dict]:
+        return {i: self.engines[i].kv_stats()
+                for i in range(self.ccfg.n_instances)}
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: Sequence[Request]) -> Dict:
+        """Serve ``requests`` to completion (or ``max_rounds``): returns
+        {"tokens": {rid: [token, ...]}, "requests": ..., "rounds": n}.
+
+        Legacy batch entrypoint, now a thin loop over the session API
+        (``open``/``submit``/``step_round``). The caller's Request objects
+        are not mutated — runtime fields (first_token/finish/...) land on
+        the copies in ``out["requests"]``, so one request list can be
+        reused across runs/modes."""
+        requests = [copy.copy(r) for r in requests]
+        self.open(requests)
+        for r in requests:
+            self.submit(r)      # validates each; all submits precede any
+            #                     stepping, so a bad batch rejects up front
+        while self.rnd < self.ccfg.max_rounds:
+            if self.step_round()["idle"]:
+                break
+        unfinished = [r.rid for r in requests
+                      if r.finish < 0 and not r.cancelled]
         if unfinished:
             # never return silently-truncated token streams (they would make
             # cross-mode equality checks pass trivially on empty dicts)
             raise RuntimeError(
-                f"cluster run ended after {rnd} rounds with unfinished "
-                f"requests {unfinished} (queue={sched.queue_len()}) — "
+                f"cluster run ended after {self.rnd} rounds with unfinished "
+                f"requests {unfinished} (queue={self.sched.queue_len()}) — "
                 f"adapter cache too small or max_rounds exhausted?")
-        out = {"tokens": tokens, "requests": list(requests), "rounds": rnd,
-               "cache_stats": {
-                   k: {"hits": c.hits, "misses": c.misses,
-                       "evictions": c.evictions}
-                   for k, c in caches.items()}}
-        if ccfg.paged:
-            out["kv_stats"] = {i: self.engines[i].kv_stats()
-                               for i in range(ccfg.n_instances)}
+        out = {"tokens": self.tokens, "requests": list(requests),
+               "rounds": self.rnd, "cache_stats": self.cache_stats()}
+        if self.ccfg.paged:
+            out["kv_stats"] = self.kv_stats()
         return out

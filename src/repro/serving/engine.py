@@ -275,6 +275,9 @@ class Engine:
     def active_rids(self) -> List[int]:
         return [s.rid for s in self.slots if s is not None]
 
+    def has_request(self, rid: int) -> bool:
+        return rid in self._by_rid
+
     def free_pages(self) -> int:
         """Unallocated pages in the paged pool (the KV admission bound)."""
         if not self.ecfg.paged:
@@ -282,20 +285,28 @@ class Engine:
         return len(self._free)
 
     def kv_stats(self) -> Dict[str, int]:
-        """Paged-pool memory accounting vs the dense-slab equivalent."""
-        if not self.ecfg.paged:
-            raise RuntimeError("kv_stats() requires EngineConfig.paged")
+        """KV occupancy accounting for BOTH layouts: slot occupancy always;
+        page-pool occupancy vs the dense-slab equivalent when paged. This is
+        the observable the cancellation contract checks — after a cancel,
+        slots_in_use (and pages_in_use, paged) must return to their
+        pre-admission values."""
         dtype = self.ecfg.cache_dtype or cache_mod.kv_dtype(False)
-        return {
-            "page_size": self.ecfg.page_size,
-            "n_pages": self.total_pages,
-            "pages_in_use": self.total_pages - len(self._free),
-            "peak_pages": self.peak_pages,
-            "pool_bytes": cache_mod.paged_cache_bytes(
-                self.cfg, self.total_pages, self.ecfg.page_size, dtype),
+        out = {
+            "n_slots": self.n_slots,
+            "slots_in_use": self.n_slots - self.free_slots(),
             "dense_slab_bytes": cache_mod.dense_cache_bytes(
                 self.cfg, self.n_slots, self.ecfg.max_len, dtype),
         }
+        if self.ecfg.paged:
+            out.update(
+                page_size=self.ecfg.page_size,
+                n_pages=self.total_pages,
+                pages_in_use=self.total_pages - len(self._free),
+                peak_pages=self.peak_pages,
+                pool_bytes=cache_mod.paged_cache_bytes(
+                    self.cfg, self.total_pages, self.ecfg.page_size, dtype),
+            )
+        return out
 
     def _alloc_page(self) -> int:
         p = self._free.pop()

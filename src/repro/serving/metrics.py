@@ -27,6 +27,10 @@ class Summary:
     slo_attainment: float       # fraction of adapters >90% compliant
     goodput_rps: float          # finished requests meeting both SLOs / s
     per_adapter_ok: Dict[int, float] = dataclasses.field(default_factory=dict)
+    n_censored: int = 0         # in-window, never finished (incl. no first
+    #                             token): SLO violations of unbounded TTFT
+    n_cancelled: int = 0        # client-cancelled: excluded from throughput,
+    #                             goodput, and attainment (not a violation)
 
     def meets_slos(self, ttft_slo=TTFT_SLO, tpot_slo=TPOT_SLO) -> bool:
         return self.p95_ttft <= ttft_slo and self.mean_tpot <= tpot_slo
@@ -38,18 +42,31 @@ def summarize(requests: Sequence[Request], duration: float,
     """Steady-state stats (drop the first ``warmup`` fraction, paper Fig. 6
     measures 30-270 s of a 300 s run)."""
     t0 = duration * warmup
-    window = [r for r in requests if t0 <= r.arrival <= duration * 0.9]
-    done = [r for r in window if r.finish >= 0]
+    t1 = duration * 0.9
+    window = [r for r in requests if t0 <= r.arrival <= t1]
+    # client cancellations are neither completions nor SLO violations — the
+    # request left the system on purpose; drop them from every rate/SLO stat
+    # but report the count
+    cancelled = [r for r in window if r.cancelled]
+    window = [r for r in window if not r.cancelled]
+    # a finish stamp without a first-token stamp is corrupt bookkeeping (e.g.
+    # a requeued request force-finished) — censor it rather than let an inf
+    # ttft/tpot poison the means
+    done = [r for r in window if r.finish >= 0 and r.first_token >= 0]
     # censoring: requests that never finished are SLO violations with
     # unbounded TTFT (counting only survivors would hide queue collapse)
-    censored = [r for r in window if r.finish < 0]
+    censored = [r for r in window if r.finish < 0 or r.first_token < 0]
     if not done:
         return Summary(len(requests), 0, float("inf"), float("inf"),
-                       float("inf"), 0.0, 0.0, 0.0)
+                       float("inf"), 0.0, 0.0, 0.0,
+                       n_censored=len(censored), n_cancelled=len(cancelled))
     ttfts = np.array([r.ttft for r in done] +
                      [np.inf] * len(censored))
     tpots = np.array([r.tpot for r in done])
-    span = duration - t0
+    # rates divide by the ADMISSION window the numerator was filtered to,
+    # [t0, t1] — dividing by duration - t0 (the old span) understated
+    # throughput/goodput by warmup/(1-warmup) (~11% at the default 0.1)
+    span = t1 - t0
     per_adapter = defaultdict(list)
     for r in done:
         ok = (r.ttft <= ttft_slo) and (r.tpot <= tpot_slo)
@@ -60,15 +77,22 @@ def summarize(requests: Sequence[Request], duration: float,
     n_good = sum(1 for a, v in attain.items() if v > ATTAIN_THRESHOLD)
     good_reqs = sum(1 for r in done
                     if r.ttft <= ttft_slo and r.tpot <= tpot_slo)
+    # percentile interpolates linearly; between two censored (inf) samples
+    # that is inf - inf = nan, which can only mean the percentile itself is
+    # censored — report inf, not nan
+    with np.errstate(invalid="ignore"):
+        p95 = float(np.percentile(ttfts, 95))
     return Summary(
         n_requests=len(requests), n_finished=len(done),
-        p95_ttft=float(np.percentile(ttfts, 95)),
+        p95_ttft=float("inf") if np.isnan(p95) else p95,
         mean_ttft=float(np.mean([r.ttft for r in done])),
         mean_tpot=float(tpots.mean()),
         throughput_rps=len(done) / span,
         slo_attainment=n_good / max(len(attain), 1),
         goodput_rps=good_reqs / span,
         per_adapter_ok=attain,
+        n_censored=len(censored),
+        n_cancelled=len(cancelled),
     )
 
 

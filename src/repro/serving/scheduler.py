@@ -207,6 +207,33 @@ class Scheduler:
         self.retire(iid, finished, now)
         return finished
 
+    def cancel(self, req: Request, now: float) -> Optional[str]:
+        """Release ``req`` WITHOUT counting it as finished: remove it from
+        whichever queue or running set holds it and drop its adapter pin so
+        the slot becomes evictable again. Returns where it was found
+        ("running" / "queued") or None if the scheduler no longer holds it
+        (already retired, or never enqueued). ``req.finish`` stays -1 — a
+        cancelled request must never look like a completion to metrics."""
+        req.cancelled = True
+        for iid, inst in self.instances.items():
+            if req in inst.running:
+                inst.running.remove(req)
+                if req.reserved:
+                    self.cache_for(iid).unpin(req.adapter_id, now)
+                    req.reserved = False
+                return "running"
+        for key, q in self.queues.items():
+            if req in q:
+                q.remove(req)
+                if req.reserved:
+                    # queued-but-reserved: the pin taken while its adapter
+                    # was still loading must come back too (queue keys match
+                    # cache keys in both modes: -1 shared, iid otherwise)
+                    self.caches[key].unpin(req.adapter_id, now)
+                    req.reserved = False
+                return "queued"
+        return None
+
     def retire(self, iid: int, finished: List[Request], now: float):
         inst = self.instances[iid]
         cache = self.cache_for(iid)

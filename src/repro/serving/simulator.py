@@ -126,142 +126,276 @@ def disagg_stall_seconds(cfg: ModelConfig, placement: Placement, batch: int,
 
 
 # ------------------------------ simulator ------------------------------- #
-def simulate(cfg: ModelConfig, requests: Sequence[Request],
-             sim: SimConfig) -> Dict:
-    rank = sim.lora_rank or cfg.lora_rank
-    adapter_bytes = cfg.lora_adapter_bytes(rank)
-    pop = zipf_popularity(sim.n_adapters, sim.zipf_s)
+class Simulation:
+    """Steppable discrete-event simulation with a request lifecycle.
 
-    instances = [InstanceState(i, sim.max_batch)
-                 for i in range(sim.n_instances)]
-    if sim.disaggregated:
-        caches = {-1: LoRACache(sim.server_cache_slots, adapter_bytes,
-                                cfg.n_layers, sim.hw.host_bw,
-                                layerwise=sim.layerwise_loading,
-                                prefetch=sim.layerwise_loading)}
-        owner = None
-        placement = Placement.make(
-            "hybrid", max(sim.server_gpus, 1), sim.n_adapters, cfg.n_layers,
-            max(cfg.n_experts, 1), x=sim.placement_x)
-    else:
-        caches = {i: LoRACache(sim.instance_cache_slots, adapter_bytes,
-                               cfg.n_layers, sim.hw.host_bw,
-                               layerwise=sim.layerwise_loading,
-                               prefetch=sim.layerwise_loading)
-                  for i in range(sim.n_instances)}
-        owner = assign_adapters_greedy(sim.n_adapters, pop, sim.n_instances)
-        placement = None
-    sched = Scheduler(instances, caches, owner, policy=sim.policy,
-                      shared_cache=sim.disaggregated)
+    The front door (``serving/api.py``) drives this incrementally:
+    ``submit`` requests (before or during the run), ``cancel`` them
+    mid-flight, and ``step`` one event at a time — each step returns the
+    lifecycle events it produced as ``(time, rid, kind)`` tuples with kind
+    in {"queued", "prefill", "token", "finished", "cancelled"}, so both
+    execution planes (this analytic one and the real cluster driver) are
+    observationally identical to ``metrics.summarize`` and to streaming
+    consumers. ``simulate`` below is the legacy batch wrapper."""
 
-    # event queue: (time, seq, kind, payload)
-    ev: List[Tuple[float, int, str, object]] = []
-    seq = 0
+    def __init__(self, cfg: ModelConfig, sim: SimConfig):
+        self.cfg = cfg
+        self.sim = sim
+        self.rank = sim.lora_rank or cfg.lora_rank
+        adapter_bytes = cfg.lora_adapter_bytes(self.rank)
+        pop = zipf_popularity(sim.n_adapters, sim.zipf_s)
+        self.instances = [InstanceState(i, sim.max_batch)
+                          for i in range(sim.n_instances)]
+        if sim.disaggregated:
+            self.caches = {-1: LoRACache(sim.server_cache_slots,
+                                         adapter_bytes, cfg.n_layers,
+                                         sim.hw.host_bw,
+                                         layerwise=sim.layerwise_loading,
+                                         prefetch=sim.layerwise_loading)}
+            self.owner = None
+            self.placement = Placement.make(
+                "hybrid", max(sim.server_gpus, 1), sim.n_adapters,
+                cfg.n_layers, max(cfg.n_experts, 1), x=sim.placement_x)
+        else:
+            self.caches = {i: LoRACache(sim.instance_cache_slots,
+                                        adapter_bytes, cfg.n_layers,
+                                        sim.hw.host_bw,
+                                        layerwise=sim.layerwise_loading,
+                                        prefetch=sim.layerwise_loading)
+                           for i in range(sim.n_instances)}
+            self.owner = assign_adapters_greedy(sim.n_adapters, pop,
+                                                sim.n_instances)
+            self.placement = None
+        self.sched = Scheduler(self.instances, self.caches, self.owner,
+                               policy=sim.policy,
+                               shared_cache=sim.disaggregated)
+        # event queue: (time, seq, kind, payload)
+        self._ev: List[Tuple[float, int, str, object]] = []
+        self._seq = 0
+        self.now = 0.0
+        self.requests: List[Request] = []
+        self._by_rid: Dict[int, Request] = {}
+        self.batch_log: List[Tuple[float, int]] = []
+        self.active_log: List[Tuple[float, int]] = []
+        self._stepping = {i.iid: False for i in self.instances}
+        self._out: List[Tuple[float, int, str]] = []   # current-step events
+        self._retry_at: Dict[int, Optional[float]] = \
+            {i.iid: None for i in self.instances}
+        self._halted = False
+        # fault events are pushed lazily on the first step so a batch
+        # wrapper's arrivals keep their legacy heap tie-break priority
+        self._faults_pushed = False
 
-    def push(t, kind, payload=None):
-        nonlocal seq
-        heapq.heappush(ev, (t, seq, kind, payload))
-        seq += 1
+    # -------------------------- client surface ------------------------- #
+    def submit(self, req: Request) -> Request:
+        if req.rid in self._by_rid:
+            raise ValueError(f"rid {req.rid} already submitted")
+        if not 0 <= req.adapter_id < self.sim.n_adapters:
+            # coupled mode would IndexError on the owner lookup mid-run (or
+            # silently wrap a negative id); match the cluster plane's
+            # up-front rejection
+            raise ValueError(
+                f"request {req.rid}: adapter_id {req.adapter_id} outside "
+                f"{self.sim.n_adapters} adapters")
+        self.requests.append(req)
+        self._by_rid[req.rid] = req
+        # a mid-run submit with a past arrival must not rewind virtual time
+        # (events would be stamped before ones already processed); it joins
+        # NOW, keeping its arrival stamp for TTFT — same as the cluster
+        # plane, which enqueues past arrivals at the next round boundary
+        self._push(max(req.arrival, self.now), "arrive", req)
+        return req
 
-    for r in requests:
-        push(r.arrival, "arrive", r)
-    for t, iid in sim.failures:
-        push(t, "fail", iid)
-    for t, iid in sim.recoveries:
-        push(t, "recover", iid)
-    for t, iid, f in sim.stragglers:
-        push(t, "slow", (iid, f))
+    def cancel(self, rid: int, at: Optional[float] = None) -> bool:
+        """Schedule a cancellation at virtual time ``at`` (>= now). The
+        request is released when the event fires: dropped from its queue or
+        running set, its adapter pin freed, never counted finished."""
+        if rid not in self._by_rid:
+            return False
+        self._push(max(at if at is not None else self.now, self.now),
+                   "cancel", rid)
+        return True
 
-    batch_log: List[Tuple[float, int]] = []
-    active_log: List[Tuple[float, int]] = []
-    stepping = {i.iid: False for i in instances}
+    def idle(self) -> bool:
+        return self._halted or not self._ev
 
-    def distinct_adapters(inst: InstanceState) -> float:
+    def step(self) -> List[Tuple[float, int, str]]:
+        """Process ONE event; returns the lifecycle events it emitted."""
+        if not self._faults_pushed:
+            self._faults_pushed = True
+            for t, iid in self.sim.failures:
+                self._push(t, "fail", iid)
+            for t, iid in self.sim.recoveries:
+                self._push(t, "recover", iid)
+            for t, iid, f in self.sim.stragglers:
+                self._push(t, "slow", (iid, f))
+        if self.idle():
+            return []
+        self._out = []
+        now, _, kind, payload = heapq.heappop(self._ev)
+        if now > self.sim.duration * 4:
+            self._halted = True     # runaway queue: stop expanding events
+            return []
+        self.now = now
+        self._handle(kind, payload, now)
+        return self._out
+
+    def run(self) -> None:
+        while not self.idle():
+            self.step()
+
+    def result(self) -> Dict:
+        return {
+            "requests": list(self.requests),
+            "batch_log": self.batch_log,
+            "active_adapters_log": self.active_log,
+            "cache_stats": {
+                k: {"hits": c.hits, "misses": c.misses,
+                    "evictions": c.evictions}
+                for k, c in self.caches.items()},
+        }
+
+    # ----------------------------- internals --------------------------- #
+    def _push(self, t, kind, payload=None):
+        heapq.heappush(self._ev, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def _emit(self, t: float, rid: int, kind: str):
+        self._out.append((t, rid, kind))
+
+    def _distinct_adapters(self, inst: InstanceState) -> float:
         return max(len({r.adapter_id for r in inst.running}), 1)
 
-    def step_seconds(inst: InstanceState) -> float:
+    def _step_seconds(self, inst: InstanceState) -> float:
+        cfg, sim = self.cfg, self.sim
         b = inst.batch
         ctx = float(np.mean([r.prompt_len + r.tokens_done
                              for r in inst.running])) if b else 0.0
         t = base_step_seconds(cfg, b, sim.gpus_per_instance, ctx, sim.hw,
                               sim.step_overhead)
-        dist = distinct_adapters(inst)
+        dist = self._distinct_adapters(inst)
         if sim.disaggregated:
             t += disagg_stall_seconds(
-                cfg, placement, b, sim.gpus_per_instance, sim.n_instances,
-                dist, rank, sim.hw, sim.overlap, sim.fast_kernels,
-                sim.protocol)
+                cfg, self.placement, b, sim.gpus_per_instance,
+                sim.n_instances, dist, self.rank, sim.hw, sim.overlap,
+                sim.fast_kernels, sim.protocol)
         else:
             t += coupled_lora_seconds(cfg, b, sim.gpus_per_instance, dist,
-                                      rank, sim.hw, sim.fast_kernels)
+                                      self.rank, sim.hw, sim.fast_kernels)
         return t * inst.slowdown
 
-    def kick(iid: int, now: float):
-        inst = sched.instances[iid]
-        if stepping[iid] or not inst.alive:
+    def _kick(self, iid: int, now: float):
+        inst = self.sched.instances[iid]
+        if self._stepping[iid] or not inst.alive:
             return
-        sched.admit(iid, now)
+        for r in self.sched.admit(iid, now):
+            self._emit(now, r.rid, "prefill")
         if inst.batch == 0:
+            self._schedule_load_retry(iid, now)
             return
-        stepping[iid] = True
-        push(now + step_seconds(inst), "step_end", iid)
+        self._stepping[iid] = True
+        self._push(now + self._step_seconds(inst), "step_end", iid)
 
-    def pick_instance(now: float) -> Optional[int]:
+    def _schedule_load_retry(self, iid: int, now: float):
+        """An IDLE instance whose queued work is waiting only on adapter
+        loads has no future step_end to re-kick it; without a wake-up at
+        the load-completion time that work strands in QUEUED forever (only
+        visible through the per-request API — batch workloads re-kick via
+        later arrivals)."""
+        cache = self.sched.cache_for(iid)
+        q_key = -1 if self.sched.shared_cache else iid
+        times = []
+        for r in self.sched.queues[q_key]:
+            if r.arrival > now:
+                continue
+            res = cache.resident.get(r.adapter_id)
+            if res is None:
+                continue
+            t = res.first_ready if cache.layerwise else res.full_ready
+            if t > now:
+                times.append(t)
+        if not times:
+            return
+        t = min(times)
+        pend = self._retry_at.get(iid)
+        if pend is not None and pend <= t:
+            return          # an earlier wake-up is already scheduled
+        self._retry_at[iid] = t
+        self._push(t, "kick", iid)
+
+    def _pick_instance(self, now: float) -> Optional[int]:
         """Disaggregated: least-loaded alive instance (straggler-aware)."""
-        alive = [i for i in instances if i.alive]
+        alive = [i for i in self.instances if i.alive]
         if not alive:
             return None
-        if sim.straggler_mitigation:
+        if self.sim.straggler_mitigation:
             fastest = min(i.slowdown for i in alive)
             pref = [i for i in alive if i.slowdown <= 2 * fastest]
             alive = pref or alive
         return min(alive, key=lambda i: (i.batch, i.slowdown)).iid
 
-    while ev:
-        now, _, kind, payload = heapq.heappop(ev)
-        if now > sim.duration * 4:
-            break
+    def _handle(self, kind: str, payload, now: float):
+        sim, sched = self.sim, self.sched
         if kind == "arrive":
+            if payload.cancelled:       # cancelled before it ever arrived
+                return
             sched.enqueue(payload, now)
+            self._emit(now, payload.rid, "queued")
             if sim.disaggregated:
-                iid = pick_instance(now)
+                iid = self._pick_instance(now)
                 if iid is not None:
-                    kick(iid, now)
+                    self._kick(iid, now)
             else:
-                kick(int(owner[payload.adapter_id]), now)
+                self._kick(int(self.owner[payload.adapter_id]), now)
+        elif kind == "cancel":
+            req = self._by_rid[payload]
+            if req.finish >= 0 or req.cancelled:
+                return                  # finished first / double cancel
+            sched.cancel(req, now)      # also sets req.cancelled
+            self._emit(now, req.rid, "cancelled")
         elif kind == "fail":
             sched.requeue_instance(payload, now)
         elif kind == "recover":
-            inst = sched.instances[payload]
-            reload_t = 2 * cfg.param_count() / sim.hw.host_bw
-            push(now + reload_t, "recovered", payload)
+            reload_t = 2 * self.cfg.param_count() / sim.hw.host_bw
+            self._push(now + reload_t, "recovered", payload)
         elif kind == "recovered":
             sched.instances[payload].alive = True
-            kick(payload, now)
+            self._kick(payload, now)
         elif kind == "slow":
             iid, f = payload
             sched.instances[iid].slowdown = f
+        elif kind == "kick":
+            self._retry_at[payload] = None
+            self._kick(payload, now)
         elif kind == "step_end":
             iid = payload
             inst = sched.instances[iid]
-            stepping[iid] = False
+            self._stepping[iid] = False
             if not inst.alive:
-                continue
-            sched.step_complete(iid, now)
-            batch_log.append((now, inst.batch))
+                return
+            stepped = list(inst.running)    # every running row earns a token
+            finished = sched.step_complete(iid, now)
+            for r in stepped:
+                self._emit(now, r.rid, "token")
+            for r in finished:
+                self._emit(now, r.rid, "finished")
+            self.batch_log.append((now, inst.batch))
             if sim.disaggregated:
-                active_log.append((now, caches[-1].active_count()))
-            kick(iid, now)
+                self.active_log.append((now, self.caches[-1].active_count()))
+            self._kick(iid, now)
             # idle instances may now be able to pull queued work
-            for other in instances:
-                if other.iid != iid and not stepping[other.iid]:
-                    kick(other.iid, now)
+            for other in self.instances:
+                if other.iid != iid and not self._stepping[other.iid]:
+                    self._kick(other.iid, now)
 
-    return {
-        "requests": list(requests),
-        "batch_log": batch_log,
-        "active_adapters_log": active_log,
-        "cache_stats": {
-            k: {"hits": c.hits, "misses": c.misses, "evictions": c.evictions}
-            for k, c in caches.items()},
-    }
+
+def simulate(cfg: ModelConfig, requests: Sequence[Request],
+             sim: SimConfig) -> Dict:
+    """Legacy batch entrypoint: run ``requests`` through a ``Simulation``
+    to completion and return the result dict (kept for existing callers;
+    new code goes through ``serving/api.py``)."""
+    s = Simulation(cfg, sim)
+    for r in requests:
+        s.submit(r)
+    s.run()
+    return s.result()

@@ -28,17 +28,24 @@ class Request:
     finish: float = -1.0
     tokens_done: int = 0
     reserved: bool = False       # holds a pinned (possibly loading) slot
+    cancelled: bool = False      # client gave up; never counts as finished
 
     @property
     def ttft(self) -> float:
         """Paper footnote 1: queueing delay + first decode token (prefill
-        excluded under PD disaggregation)."""
+        excluded under PD disaggregation). A request that never received a
+        first token has UNBOUNDED ttft (first_token stays -1.0; subtracting
+        would yield a negative, better-than-perfect latency)."""
+        if self.first_token < 0:
+            return float("inf")
         return self.first_token - self.arrival
 
     @property
     def tpot(self) -> float:
         if self.output_len <= 1 or self.finish < 0:
             return 0.0
+        if self.first_token < 0:    # finished without a first-token stamp:
+            return float("inf")     # corrupt bookkeeping, never a real TPOT
         return (self.finish - self.first_token) / max(self.output_len - 1, 1)
 
 

@@ -1,0 +1,402 @@
+"""The serving front door (``repro.serving.api``): ServeConfig derivation,
+coupled==disaggregated token equivalence driven end-to-end through
+``ServeSystem.submit`` on BOTH backends and BOTH KV layouts, per-token
+streaming (callback + iterator), and cancellation that really frees the
+decode slot, KV pages, and adapter pin mid-flight under churn."""
+import dataclasses
+
+import pytest
+
+from repro.configs import get_config
+from repro.serving import workload
+from repro.serving.api import BATCH, INTERACTIVE, RequestState, ServeConfig, \
+    build_system
+from repro.serving.cluster import ClusterConfig
+from repro.serving.simulator import SimConfig
+
+
+# --------------------------- config derivation --------------------------- #
+def test_serve_config_derives_all_three_legacy_configs():
+    sc = ServeConfig(n_instances=3, max_batch=7, max_len=128,
+                     disaggregated=True, adapter_cache_slots=11,
+                     policy="sjf", paged=True, page_size=16, n_pages=40,
+                     prefill_chunk=32, step_time=0.5, n_adapters=64,
+                     duration=45.0)
+    ecfg = sc.engine_config()
+    assert (ecfg.n_slots, ecfg.max_len, ecfg.paged, ecfg.page_size,
+            ecfg.n_pages, ecfg.prefill_chunk) == (7, 128, True, 16, 40, 32)
+    ccfg = sc.cluster_config()
+    assert (ccfg.n_instances, ccfg.n_slots, ccfg.max_len,
+            ccfg.disaggregated, ccfg.adapter_cache_slots, ccfg.policy,
+            ccfg.step_time, ccfg.paged) == (3, 7, 128, True, 11, "sjf",
+                                            0.5, True)
+    sim = sc.sim_config()
+    assert (sim.n_instances, sim.max_batch, sim.disaggregated,
+            sim.server_cache_slots, sim.instance_cache_slots, sim.policy,
+            sim.n_adapters, sim.duration) == (3, 7, True, 11, 11, "sjf",
+                                              64, 45.0)
+
+
+def test_serve_config_from_legacy_round_trips():
+    sim = SimConfig(n_instances=5, max_batch=96, disaggregated=True,
+                    server_cache_slots=33, duration=77.0, policy="sjf",
+                    n_adapters=128, fast_kernels=False)
+    lifted = ServeConfig.from_sim(sim)
+    assert lifted.backend == "sim"
+    got, want = (dataclasses.asdict(lifted.sim_config()),
+                 dataclasses.asdict(sim))
+    # ServeConfig unifies the two cache-slot knobs; the knob the selected
+    # mode never reads (here: coupled per-instance slots) does not round-trip
+    got.pop("instance_cache_slots"), want.pop("instance_cache_slots")
+    assert got == want
+    ccfg = ClusterConfig(n_instances=2, n_slots=3, max_len=48, paged=True,
+                         page_size=4, n_pages=12, step_time=2.0,
+                         adapter_cache_slots=5)
+    lifted = ServeConfig.from_cluster(ccfg)
+    assert lifted.backend == "cluster"
+    assert dataclasses.asdict(lifted.cluster_config()) == \
+        dataclasses.asdict(ccfg)
+
+
+# --------------------- cluster backend (real JAX plane) ------------------ #
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.adapter import init_mixed_rank_pool
+    from repro.models import model as model_mod
+    cfg = dataclasses.replace(get_config("qwen3-moe-235b-a22b").reduced(),
+                              lora_targets=("gate", "up", "down"),
+                              lora_rank=8)
+    key = jax.random.PRNGKey(0)
+    params = model_mod.init_params(cfg, key, dtype="float32")
+    pool = init_mixed_rank_pool(cfg, [2, 8, 4, 8], jax.random.fold_in(key, 1),
+                                dtype=jnp.float32)
+    return cfg, params, pool
+
+
+# same churn workload as test_serving.CLUSTER_REQS: rid 2 joins mid-decode,
+# rid 3 needs an eviction to get a slot
+SPECS = [(0, 0.0, 5, 6), (1, 0.0, 4, 4), (2, 2.0, 6, 5), (3, 5.0, 3, 4)]
+
+
+def _system(setup, disagg, paged=False, **kw):
+    cfg, params, pool = setup
+    kw.setdefault("n_pages", 8)
+    sc = ServeConfig(backend="cluster", disaggregated=disagg, n_instances=1,
+                     max_batch=2, max_len=32, adapter_cache_slots=4,
+                     paged=paged, page_size=4, prefill_chunk=8, **kw)
+    return build_system(sc, cfg, params=params, pool=pool)
+
+
+def _submit_specs(system):
+    return [system.submit(adapter_id=a, arrival=t, prompt_len=p,
+                          max_new_tokens=o)
+            for a, t, p, o in SPECS]
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_front_door_coupled_equals_disagg_under_churn(setup, paged):
+    """Acceptance: the PR-1/PR-2 equivalence claim driven end-to-end through
+    ServeConfig/Backend.submit — identical per-request tokens across
+    architectures, on both KV layouts, with mid-stream admission+eviction."""
+    out = {}
+    for disagg in (False, True):
+        system = _system(setup, disagg, paged=paged)
+        handles = _submit_specs(system)
+        system.drain()
+        assert all(h.state == RequestState.FINISHED for h in handles)
+        for h in handles:
+            assert len(h.tokens) == h.request.output_len
+        # churn really happened: rid 2 joined a running batch; rid 3 only
+        # after an eviction freed a slot
+        reqs = {h.rid: h.request for h in handles}
+        assert reqs[2].decode_start >= 2.0
+        assert reqs[3].decode_start >= min(reqs[0].finish, reqs[1].finish)
+        out[disagg] = {h.rid: h.tokens for h in handles}
+    assert out[False] == out[True]
+
+
+def test_front_door_paged_equals_dense(setup):
+    dense = _system(setup, False)
+    hd = _submit_specs(dense)
+    dense.drain()
+    paged = _system(setup, False, paged=True)
+    hp = _submit_specs(paged)
+    paged.drain()
+    assert {h.rid: h.tokens for h in hd} == {h.rid: h.tokens for h in hp}
+
+
+@pytest.mark.parametrize("disagg", [False, True], ids=["coupled", "disagg"])
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_cancel_mid_decode_frees_slot_and_pages_under_churn(
+        setup, disagg, paged):
+    """Acceptance: cancelling an in-flight request mid-decode frees its slot
+    AND its KV pages (kv_stats returns to pre-admission values), never
+    counts as finished, and the freed capacity is reused by later
+    admissions — in both adapter modes and both KV layouts."""
+    system = _system(setup, disagg, paged=paged)
+    handles = _submit_specs(system)
+    h0 = handles[0]
+    while h0.n_tokens < 2:              # genuinely mid-decode
+        system.step()
+    before = system.kv_stats()[0]
+    assert before["slots_in_use"] == 2  # rid 0 + rid 1 both resident
+    assert h0.cancel()
+    after = system.kv_stats()[0]
+    assert after["slots_in_use"] == before["slots_in_use"] - 1
+    if paged:
+        assert after["pages_in_use"] < before["pages_in_use"]
+    assert h0.state == RequestState.CANCELLED
+    assert not h0.cancel()              # idempotent: already terminal
+    system.drain()
+    # churn continued: everyone else finished, reusing the freed capacity
+    for h in handles[1:]:
+        assert h.state == RequestState.FINISHED
+        assert len(h.tokens) == h.request.output_len
+    final = system.kv_stats()[0]
+    assert final["slots_in_use"] == 0
+    if paged:
+        assert final["pages_in_use"] == 0
+        assert system.backend.cluster.engines[0].free_pages() == 8
+    # the cancelled request NEVER looks like a completion
+    assert h0.request.finish < 0 and h0.request.cancelled
+    s = system.summary(duration=10.0, warmup=0.0)
+    assert s.n_finished == len(SPECS) - 1
+    assert s.n_cancelled == 1
+
+
+def test_cancel_while_queued_never_occupies_a_slot(setup):
+    system = _system(setup, False)
+    handles = _submit_specs(system)
+    h3 = handles[3]                     # arrival 5.0: still pending
+    assert h3.cancel()
+    system.drain()
+    assert h3.state == RequestState.CANCELLED and h3.n_tokens == 0
+    for h in handles[:3]:
+        assert h.state == RequestState.FINISHED
+
+
+def test_streaming_callback_and_iterator(setup):
+    system = _system(setup, False)
+    seen = []
+    handles = _submit_specs(system)
+    handles[0].on_token(lambda h, tok: seen.append(tok))
+    # iterator pumps the system while OTHER requests churn around rid 0
+    streamed = list(handles[0])
+    assert streamed == handles[0].tokens
+    assert seen == handles[0].tokens
+    assert len(streamed) == handles[0].request.output_len
+    system.drain()                      # rid 1..3 still finish afterwards
+    assert all(h.state == RequestState.FINISHED for h in handles)
+
+
+def test_scheduled_cancel_outliving_its_request_is_dropped(setup):
+    """Regression: a cancel scheduled for after the request finishes must
+    not keep the backend awake spinning empty rounds (or spuriously hit
+    max_rounds) — it just expires."""
+    system = _system(setup, False)
+    h = system.submit(adapter_id=0, prompt_len=4, max_new_tokens=4)
+    h.cancel(at=500.0)                  # far beyond its natural finish
+    system.drain()
+    assert h.state == RequestState.FINISHED
+    assert system.backend.cluster.rnd < 50
+
+
+def test_submit_accepts_array_prompts_and_rejects_empty(setup):
+    """Regression: `if prompt` crashed on numpy array prompts (ambiguous
+    truth value) before the REJECTED conversion could run, and silently
+    dropped an explicit empty prompt."""
+    import numpy as np
+    system = _system(setup, False)
+    h = system.submit(np.asarray([1, 2, 3], np.int32), adapter_id=0,
+                      max_new_tokens=4)
+    assert h.state == RequestState.QUEUED
+    empty = system.submit([], adapter_id=0, max_new_tokens=4)
+    assert empty.state == RequestState.REJECTED
+    assert "empty prompt" in empty.error
+    system.drain()
+    assert h.state == RequestState.FINISHED and len(h.tokens) == 4
+
+
+def test_cancel_pending_future_arrival_does_not_spin_rounds(setup):
+    """Regression: cancelling a not-yet-arrived request left it in the
+    pending list, so drain() spun empty rounds until its arrival time —
+    and spuriously hit max_rounds when arrival/step_time exceeded it."""
+    system = _system(setup, False, max_rounds=20)
+    live = system.submit(adapter_id=0, prompt_len=4, max_new_tokens=4)
+    ghost = system.submit(adapter_id=1, prompt_len=4, max_new_tokens=4,
+                          arrival=50.0)     # arrives after max_rounds
+    assert ghost.cancel()
+    system.drain()                          # pre-fix: RuntimeError
+    assert live.state == RequestState.FINISHED
+    assert ghost.state == RequestState.CANCELLED and ghost.n_tokens == 0
+    assert system.backend.cluster.rnd < 20
+
+
+def test_rejected_submit_never_raises_and_serves_the_rest(setup):
+    system = _system(setup, False)
+    ok = system.submit(adapter_id=0, prompt_len=4, max_new_tokens=4)
+    too_long = system.submit(adapter_id=0,
+                             prompt=list(range(30)), max_new_tokens=30)
+    bad_adapter = system.submit(adapter_id=99, prompt_len=4,
+                                max_new_tokens=4)
+    assert too_long.state == RequestState.REJECTED
+    assert "max_len" in too_long.error
+    assert bad_adapter.state == RequestState.REJECTED
+    assert "adapter_id" in bad_adapter.error
+    system.drain()
+    assert ok.state == RequestState.FINISHED
+
+
+def test_front_door_matches_legacy_cluster_run(setup):
+    """Deprecation-shim contract: the legacy Cluster.run batch path and the
+    front door produce identical tokens for the same workload."""
+    from repro.serving.cluster import Cluster
+    from repro.serving.workload import Request
+    cfg, params, pool = setup
+    reqs = [Request(i, a, arrival=t, prompt_len=p, output_len=o)
+            for i, (a, t, p, o) in enumerate(SPECS)]
+    legacy = Cluster(cfg, params, ClusterConfig(
+        n_instances=1, n_slots=2, max_len=32, adapter_cache_slots=4),
+        pool).run(reqs)
+    system = _system(setup, False)
+    handles = system.submit_workload(reqs)
+    system.drain()
+    assert {h.rid: h.tokens for h in handles} == legacy["tokens"]
+
+
+# ----------------------- sim backend (analytic plane) -------------------- #
+MX = get_config("mixtral-8x7b")
+
+
+def _sim_system(disagg, **kw):
+    sc = ServeConfig(backend="sim", disaggregated=disagg,
+                     n_instances=3 if disagg else 4, max_batch=128,
+                     adapter_cache_slots=64, n_adapters=64, duration=60.0,
+                     server_gpus=8, **kw)
+    return build_system(sc, MX)
+
+
+@pytest.mark.parametrize("disagg", [False, True], ids=["coupled", "disagg"])
+def test_sim_backend_full_lifecycle(disagg):
+    """Both architectures through the same front door on the analytic
+    plane: every request walks QUEUED -> PREFILLING -> DECODING ->
+    FINISHED and earns exactly output_len token events — the observational
+    contract that makes the two backends interchangeable to summarize."""
+    system = _sim_system(disagg)
+    reqs = workload.generate(64, rate=10, duration=60, seed=2)
+    handles = system.submit_workload(reqs)
+    system.drain()
+    for h in handles:
+        assert h.state == RequestState.FINISHED
+        assert h.n_tokens == h.request.output_len
+        kinds = [ev.kind for ev in h.events]
+        assert kinds[0] == "queued" and kinds[-1] == "finished"
+        assert "prefill" in kinds
+    s = system.summary()
+    assert s.n_finished > 0 and s.n_censored == 0
+
+
+def test_sim_backend_cancellation_mid_flight():
+    system = _sim_system(True)
+    reqs = workload.generate(64, rate=10, duration=60, seed=2)
+    handles = system.submit_workload(reqs)
+    victim = handles[10]
+    # cancel mid-decode: well after arrival, well before it could finish
+    victim.cancel(at=victim.request.arrival + 0.05)
+    system.drain()
+    assert victim.state == RequestState.CANCELLED
+    assert victim.n_tokens < victim.request.output_len
+    assert victim.request.finish < 0
+    others = [h for h in handles if h is not victim]
+    assert all(h.state == RequestState.FINISHED for h in others)
+    # the adapter pin came back: nothing left pinned after the run
+    assert all(c.active_count() == 0
+               for c in system.backend.sim.caches.values())
+    # window [0, 0.9*70 = 63] covers every arrival of the 60 s workload
+    s = system.summary(duration=70.0, warmup=0.0)
+    assert s.n_finished == len(handles) - 1
+    assert s.n_cancelled == 1
+
+
+def test_sim_lone_cold_adapter_request_still_finishes():
+    """Regression: a single request whose adapter was mid-load at admission
+    stranded in QUEUED forever — the idle instance had no future event to
+    re-kick it (invisible to batch workloads, where later arrivals
+    re-kick; fatal to the per-request API)."""
+    sc = ServeConfig(backend="sim", n_instances=1, max_batch=8,
+                     adapter_cache_slots=4, n_adapters=4, duration=30.0)
+    system = build_system(sc, MX)
+    h = system.submit(prompt_len=64, adapter_id=1, max_new_tokens=8,
+                      arrival=0.0)
+    system.drain()
+    assert h.state == RequestState.FINISHED
+    assert h.n_tokens == 8
+    assert h.request.ttft > 0    # it really waited on the adapter load
+
+
+def test_sim_mid_run_submit_does_not_rewind_time():
+    """Regression: submitting mid-run with a past arrival rewound virtual
+    time, stamping events before ones already processed."""
+    system = _sim_system(False)
+    h1 = system.submit(prompt_len=32, adapter_id=0, max_new_tokens=8,
+                       arrival=0.0)
+    while system.now < 0.01 and not system.backend.idle():
+        system.step()
+    t = system.now
+    assert t > 0
+    h2 = system.submit(prompt_len=32, adapter_id=1, max_new_tokens=8,
+                       arrival=0.0)       # in the past
+    system.drain()
+    assert h1.state == h2.state == RequestState.FINISHED
+    assert h2.request.decode_start >= t   # joined NOW, not retroactively
+    assert h2.request.arrival == 0.0      # arrival stamp kept for TTFT
+
+
+def test_sim_submit_out_of_range_adapter_is_rejected_not_crashed():
+    """Regression: the sim plane accepted any adapter_id and IndexError'd
+    mid-drain on the owner lookup (or silently wrapped negative ids) —
+    breaking the 'submit never raises' contract the cluster plane keeps."""
+    system = _sim_system(False)
+    bad = system.submit(prompt_len=8, adapter_id=6400, max_new_tokens=4)
+    assert bad.state == RequestState.REJECTED
+    assert "adapter_id" in bad.error
+    neg = system.submit(prompt_len=8, adapter_id=-1, max_new_tokens=4)
+    assert neg.state == RequestState.REJECTED
+    ok = system.submit(prompt_len=8, adapter_id=0, max_new_tokens=4)
+    system.drain()
+    assert ok.state == RequestState.FINISHED
+
+
+def test_submit_workload_never_rewinds_the_rid_counter():
+    """Regression: submit_workload reset the auto-rid counter to
+    max(workload rid)+1 even when plain submit() had already issued higher
+    rids, making later submits collide and silently reject."""
+    system = _sim_system(False)
+    first = [system.submit(prompt_len=8, max_new_tokens=4)
+             for _ in range(5)]             # auto-rids 0..4
+    wl = [workload.Request(1, 0, arrival=0.0, prompt_len=8, output_len=4)]
+    clash = system.submit_workload(wl)      # rid 1 collides with first[1]
+    assert clash[0].state == RequestState.REJECTED
+    nxt = system.submit(prompt_len=8, max_new_tokens=4)
+    assert nxt.state == RequestState.QUEUED
+    assert nxt.rid >= 5                     # counter never went backwards
+    system.drain()
+    assert all(h.state == RequestState.FINISHED for h in first + [nxt])
+
+
+def test_slo_class_summary_filters_and_rethresholds():
+    system = _sim_system(False)
+    reqs = workload.generate(64, rate=10, duration=60, seed=3)
+    half = len(reqs) // 2
+    system.submit_workload(reqs[:half], slo_class=INTERACTIVE)
+    system.submit_workload(reqs[half:], slo_class=BATCH)
+    system.drain()
+    si = system.summary(slo_class=INTERACTIVE, warmup=0.0)
+    sb = system.summary(slo_class=BATCH, warmup=0.0)
+    assert si.n_requests == half
+    assert si.n_requests + sb.n_requests == len(reqs)
+    # the batch class gets 4x looser thresholds, so attainment can only be
+    # >= the same requests judged interactively
+    assert sb.slo_attainment >= 0.0

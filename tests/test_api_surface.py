@@ -1,0 +1,54 @@
+"""Snapshot of the serving front door's public surface: accidental export
+breaks (renames, deletions, signature drift on the core entrypoints) must
+fail CI, not downstream users."""
+import inspect
+
+import repro.serving.api as api
+
+EXPECTED_EXPORTS = sorted([
+    "ServeConfig", "Backend", "SimBackend", "ClusterBackend",
+    "ServeSystem", "RequestHandle", "RequestState", "Event",
+    "SLOClass", "INTERACTIVE", "BATCH", "TERMINAL_STATES",
+    "build_system", "Request", "Summary",
+])
+
+EXPECTED_STATES = ["QUEUED", "PREFILLING", "DECODING", "FINISHED",
+                   "CANCELLED", "REJECTED"]
+
+
+def test_public_exports_snapshot():
+    assert sorted(api.__all__) == EXPECTED_EXPORTS
+    for name in api.__all__:
+        assert getattr(api, name, None) is not None, f"missing export {name}"
+
+
+def test_request_lifecycle_states_snapshot():
+    assert [s.name for s in api.RequestState] == EXPECTED_STATES
+    assert api.TERMINAL_STATES == {api.RequestState.FINISHED,
+                                   api.RequestState.CANCELLED,
+                                   api.RequestState.REJECTED}
+
+
+def test_core_entrypoint_signatures():
+    """The signatures downstream code keys on (benchmarks, examples,
+    launchers). Additions must be keyword-only-compatible; removals fail."""
+    submit = inspect.signature(api.ServeSystem.submit)
+    for param in ("prompt", "adapter_id", "max_new_tokens", "prompt_len",
+                  "arrival", "slo_class", "on_token"):
+        assert param in submit.parameters, f"ServeSystem.submit lost {param}"
+    build = inspect.signature(api.build_system)
+    for param in ("cfg", "model", "params", "pool", "server"):
+        assert param in build.parameters
+    cancel = inspect.signature(api.RequestHandle.cancel)
+    assert "at" in cancel.parameters
+    cfg_fields = {f.name for f in api.ServeConfig.__dataclass_fields__.values()}
+    for knob in ("backend", "disaggregated", "n_instances", "max_batch",
+                 "max_len", "adapter_cache_slots", "policy", "paged",
+                 "page_size", "n_pages", "prefill_chunk", "step_time"):
+        assert knob in cfg_fields, f"ServeConfig lost knob {knob}"
+
+
+def test_serve_config_derivers_exist():
+    for method in ("engine_config", "cluster_config", "sim_config",
+                   "from_sim", "from_cluster"):
+        assert callable(getattr(api.ServeConfig, method))

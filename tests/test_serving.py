@@ -410,3 +410,99 @@ def test_slora_preset_cache_slots_sane():
     slots_50 = presets.instance_cache_slots(CFG, gpus=8, lora_frac=0.5)
     slots_40 = presets.instance_cache_slots(CFG, gpus=8, lora_frac=0.4)
     assert slots_40 < slots_50
+
+
+# ------------------- metrics / workload regressions ---------------------- #
+def test_throughput_window_matches_admission_window():
+    """Regression: requests are filtered to arrivals in [0.1d, 0.9d] (an
+    0.8d-wide window) but the rate denominator was 0.9d — understating
+    throughput/goodput by ~11%. The denominator must match the window."""
+    duration = 100.0
+    reqs = [Request(i, 0, arrival=10.0 + i, prompt_len=4, output_len=2)
+            for i in range(81)]          # exactly fills the [10, 90] window
+    for r in reqs:
+        r.first_token = r.arrival + 0.01
+        r.finish = r.arrival + 0.05
+    s = metrics.summarize(reqs, duration)
+    assert s.n_finished == 81
+    assert s.throughput_rps == pytest.approx(81 / 80.0)
+    assert s.goodput_rps == pytest.approx(81 / 80.0)
+
+
+def test_never_first_token_is_censored_not_negative():
+    """Regression: first_token = -1.0 made ttft NEGATIVE (better than
+    perfect). It must be inf, and such requests must be censored."""
+    duration = 100.0
+    ok = Request(0, 0, arrival=20.0, prompt_len=4, output_len=4)
+    ok.first_token, ok.finish = 20.1, 20.4
+    ghost = Request(1, 1, arrival=30.0, prompt_len=4, output_len=4)
+    assert ghost.ttft == float("inf")    # pre-fix: -31.0
+    corrupt = Request(2, 2, arrival=40.0, prompt_len=4, output_len=4)
+    corrupt.finish = 41.0                # finish stamped, first token never
+    assert corrupt.ttft == float("inf")
+    assert corrupt.tpot == float("inf")
+    s = metrics.summarize([ok, ghost, corrupt], duration)
+    assert s.n_finished == 1             # the corrupt one is NOT a finish
+    assert s.n_censored == 2
+    assert s.mean_ttft == pytest.approx(0.1)     # uncontaminated by infs
+    assert s.p95_ttft == float("inf")    # censored still count toward tails
+
+
+def test_cancelled_requests_are_not_finishes_nor_violations():
+    duration = 100.0
+    fin = Request(0, 0, arrival=20.0, prompt_len=4, output_len=4)
+    fin.first_token, fin.finish = 20.1, 20.4
+    can = Request(1, 0, arrival=30.0, prompt_len=4, output_len=4)
+    can.first_token, can.tokens_done = 30.1, 2
+    can.cancelled = True                 # gave up mid-decode
+    s = metrics.summarize([fin, can], duration)
+    assert s.n_finished == 1
+    assert s.n_cancelled == 1
+    assert s.n_censored == 0             # a cancel is not an SLO violation
+    assert s.slo_attainment == 1.0
+    assert s.throughput_rps == pytest.approx(1 / 80.0)
+
+
+def test_workload_generation_is_deterministic():
+    """Pinned digest of (adapter_id, arrival, prompt_len, output_len): API
+    refactors must not silently change benchmark workloads."""
+    import hashlib
+    digests = {
+        0: "587c79ac8a5931f328616bb10e8d5041432ad9971f0cdf7c4562b630161e377d",
+        7: "a98a69c8960a047dafb2ddfef2a90fe3b7ad2d45b121ff8a50dd97b4352b1441",
+    }
+    for seed, expect in digests.items():
+        reqs = workload.generate(16, rate=5.0, duration=30.0, seed=seed)
+        blob = ";".join(
+            f"{r.adapter_id},{r.arrival:.9e},{r.prompt_len},{r.output_len}"
+            for r in reqs)
+        assert hashlib.sha256(blob.encode()).hexdigest() == expect, \
+            f"workload.generate(seed={seed}) changed"
+
+
+def test_scheduler_cancel_releases_pin_without_finish():
+    """Scheduler-level cancellation: the request leaves the running set /
+    queue, its adapter pin is dropped (so the slot is evictable again), and
+    it never gets a finish stamp."""
+    cache = LoRACache(capacity=1, adapter_bytes=0.0, n_layers=2,
+                      layerwise=False, prefetch=False)
+    inst = InstanceState(0, max_batch=4)
+    sched = Scheduler([inst], {0: cache}, owner=np.zeros(4, int))
+    r1 = Request(0, 1, arrival=0.0, prompt_len=2, output_len=4)
+    r2 = Request(1, 2, arrival=0.0, prompt_len=2, output_len=4)
+    for r in (r1, r2):
+        sched.enqueue(r, 0.0)
+    # capacity-1 cache: r1's adapter is resident+pinned, r2 has to queue
+    assert [r.rid for r in sched.admit(0, 0.0)] == [0]
+    sched.step_complete(0, 1.0)          # r1 is genuinely mid-decode
+    assert sched.cancel(r1, 1.5) == "running"
+    assert r1.cancelled and not r1.reserved and r1.finish < 0
+    assert inst.batch == 0
+    # the pin is gone: r2 can now evict adapter 1 and admit
+    assert [r.rid for r in sched.admit(0, 2.0)] == [1]
+    # cancelling a QUEUED request removes it from the queue too
+    r3 = Request(2, 3, arrival=2.0, prompt_len=2, output_len=4)
+    sched.enqueue(r3, 2.0)
+    assert sched.cancel(r3, 2.5) == "queued"
+    assert sched.queue_len() == 0
+    assert sched.cancel(r3, 3.0) is None     # already released
