@@ -1,0 +1,141 @@
+"""Elastic provisioning under a load shift: the online Algorithm-1 control
+loop (serving/autoscaler.py) vs the static single-instance baseline.
+
+Scenario (analytic plane): traffic steps from 4 to 22 req/s at t=40 of a
+120 s run over 96 adapters. The static system is provisioned for the quiet
+phase and collapses after the shift; the elastic system estimates the
+arrival rate online, re-solves Eqs. 1-6 each control interval, and adds
+instances / cache slots / server replicas until the SLOs recover. Emits
+full-run and post-shift steady-state SLO attainment for both, plus the
+scaling trajectory (instances / cache / replicas per control tick) so the
+attainment-vs-capacity story can be plotted from BENCH_provisioning.json.
+
+A tiny real-plane (JAX cluster) run re-checks the safety invariant end to
+end: token streams with the autoscaler on equal the static run's, while
+scale events actually fire.
+"""
+import copy
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.serving import workload
+from repro.serving.api import AutoscalePolicy, ServeConfig, build_system
+
+STEADY_WARMUP = 70 / 120.0      # post-shift window [70, 108] of the 120 s run
+
+# THE load-shift scenario — the bench, the example's elastic_demo, and
+# tests/test_autoscaler.py all import these, so the numbers CI publishes,
+# the demo prints, and the tests assert can never silently diverge.
+LOAD_SHIFT = dict(n_adapters=96, lo_rate=4, hi_rate=22, t_shift=40.0,
+                  duration=120.0)
+
+
+def load_shift_policy() -> AutoscalePolicy:
+    return AutoscalePolicy(control_interval=5.0, window=15.0,
+                           min_instances=1, max_instances=4,
+                           max_cache_slots=104, max_replicas=2,
+                           target_utilization=0.6)
+
+
+def load_shift_config(autoscale) -> ServeConfig:
+    return ServeConfig(backend="sim", disaggregated=True, n_instances=1,
+                       max_batch=128, adapter_cache_slots=24,
+                       n_adapters=LOAD_SHIFT["n_adapters"], duration=120.0,
+                       server_gpus=8, placement_x=4, autoscale=autoscale)
+
+
+def _load_shift():
+    return workload.generate_load_shift(**LOAD_SHIFT)
+
+
+def sim_main():
+    cfg = get_config("mixtral-8x7b")
+    results = {}
+    for name, auto in (("static", None), ("elastic", load_shift_policy())):
+        system = build_system(load_shift_config(auto), cfg)
+        system.submit_workload([copy.copy(r) for r in _load_shift()])
+        system.drain()
+        full = system.summary(duration=120.0)
+        steady = system.summary(duration=120.0, warmup=STEADY_WARMUP)
+        results[name] = (full, steady, system.scale_history())
+        emit(f"autoscale.{name}.attain", round(full.slo_attainment, 3),
+             "full 120s run")
+        emit(f"autoscale.{name}.steady_attain",
+             round(steady.slo_attainment, 3), "post-shift [70,108]s")
+        emit(f"autoscale.{name}.steady_p95_ttft_s",
+             round(steady.p95_ttft, 3))
+        emit(f"autoscale.{name}.goodput_rps", round(full.goodput_rps, 2))
+    hist = results["elastic"][2]
+    peak = {k: max(h["targets"][k] for h in hist)
+            for k in ("instances", "cache_slots", "replicas")}
+    emit("autoscale.elastic.peak_instances", peak["instances"])
+    emit("autoscale.elastic.peak_cache_slots", peak["cache_slots"])
+    emit("autoscale.elastic.peak_replicas", peak["replicas"])
+    emit("autoscale.elastic.control_ticks", len(hist))
+    emit("autoscale.elastic.n_actions",
+         sum(len(h["actions"]) for h in hist))
+    # the attainment-vs-capacity trajectory, one row per control tick
+    for h in hist:
+        emit(f"autoscale.trajectory.t{h['now']:.0f}",
+             h["targets"]["instances"],
+             f"rate={h['rate']:.1f},lb={h['lb']},"
+             f"cache={h['targets']['cache_slots']},"
+             f"replicas={h['targets']['replicas']}")
+    gain = (results["elastic"][1].slo_attainment
+            - results["static"][1].slo_attainment)
+    emit("autoscale.steady_attain_gain", round(gain, 3),
+         "elastic - static, post-shift")
+    assert gain > 0.3, "autoscaler failed to raise SLO attainment"
+
+
+def cluster_invariance_main():
+    """Real-plane safety check: tokens with autoscaling on == off."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.adapter import init_adapter_pool
+    from repro.models import model as model_mod
+
+    cfg = dataclasses.replace(get_config("qwen3-moe-235b-a22b").reduced(),
+                              lora_targets=("gate", "up", "down"),
+                              lora_rank=4)
+    key = jax.random.PRNGKey(0)
+    params = model_mod.init_params(cfg, key, dtype="float32")
+    pool = init_adapter_pool(cfg, 4, jax.random.fold_in(key, 1), rank=4,
+                             dtype=jnp.float32)
+    policy = AutoscalePolicy(control_interval=2.0, window=10.0,
+                             min_instances=1, max_instances=3,
+                             min_cache_slots=2, max_cache_slots=4,
+                             max_replicas=2, scale_down_patience=1,
+                             resize_deadband=0.0)
+    tokens = {}
+    n_scale = 0
+    for name, auto in (("static", None), ("elastic", policy)):
+        sc = ServeConfig(backend="cluster", disaggregated=True,
+                         n_instances=1, max_batch=2, max_len=32,
+                         adapter_cache_slots=4, autoscale=auto)
+        system = build_system(sc, cfg, params=params, pool=pool)
+        handles = [system.submit(adapter_id=i % 4, arrival=float(i // 2),
+                                 prompt_len=4 + i % 3, max_new_tokens=4,
+                                 rid=i)
+                   for i in range(4)]
+        system.drain()
+        assert all(h.state.name == "FINISHED" for h in handles)
+        tokens[name] = {h.rid: h.tokens for h in handles}
+        if auto is not None:
+            n_scale = len(system.scale_events)
+    identical = int(tokens["static"] == tokens["elastic"])
+    emit("autoscale.cluster.tokens_identical", identical,
+         f"scale_events={n_scale}")
+    assert identical, "autoscaling changed a token stream"
+
+
+def main():
+    sim_main()
+    cluster_invariance_main()
+
+
+if __name__ == "__main__":
+    main()

@@ -17,15 +17,17 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)
 
 from benchmarks import (bench_ablation, bench_adapter_memory,  # noqa: E402
-                        bench_batch_sweep, bench_cache_ratio,
-                        bench_e2e_serving, bench_kernels, bench_parallelism,
-                        bench_provisioning, bench_roofline,
-                        bench_scale_instances, bench_scale_server, common)
+                        bench_autoscaler, bench_batch_sweep,
+                        bench_cache_ratio, bench_e2e_serving, bench_kernels,
+                        bench_parallelism, bench_provisioning,
+                        bench_roofline, bench_scale_instances,
+                        bench_scale_server, common)
 
 ALL = [
     ("fig1a_adapter_memory", bench_adapter_memory.main),
     ("table1_table4_parallelism", bench_parallelism.main),
     ("alg1_provisioning", bench_provisioning.main),
+    ("autoscaler_load_shift", bench_autoscaler.main),
     ("fig16_batch_sweep", bench_batch_sweep.main),
     ("fig19_kernels", bench_kernels.main),
     ("fig5_fig6_cache_ratio", bench_cache_ratio.main),
@@ -45,20 +47,35 @@ SMOKE = [
         smoke=True)),
 ]
 
+# CI provisioning lane: the offline Algorithm-1 numbers plus the online
+# autoscaler load-shift scenario (static vs elastic SLO attainment and the
+# scaling trajectory) — writes BENCH_provisioning.json as an artifact so the
+# provisioning trajectory accumulates per commit.
+PROVISIONING = [
+    ("alg1_provisioning", bench_provisioning.main),
+    ("autoscaler_load_shift", bench_autoscaler.main),
+]
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("only", nargs="?", default=None,
                     help="substring filter on benchmark names")
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny-shape subset (<= 60 s) + JSON artifact")
+    lane = ap.add_mutually_exclusive_group()
+    lane.add_argument("--smoke", action="store_true",
+                      help="tiny-shape subset (<= 60 s) + JSON artifact")
+    lane.add_argument("--provisioning", action="store_true",
+                      help="Algorithm-1 + autoscaler load-shift lane, "
+                           "writes BENCH_provisioning.json")
     ap.add_argument("--out", default=None,
                     help="write captured rows as JSON (default "
                          "BENCH_smoke.json in --smoke mode)")
     args = ap.parse_args(argv)
 
+    suite = SMOKE if args.smoke else \
+        PROVISIONING if args.provisioning else ALL
     timings = {}
-    for name, fn in (SMOKE if args.smoke else ALL):
+    for name, fn in suite:
         if args.only and args.only not in name:
             continue
         t0 = time.time()
@@ -67,7 +84,9 @@ def main(argv=None) -> None:
         timings[name] = round(time.time() - t0, 2)
         print(f"# {name} done in {timings[name]:.1f}s", flush=True)
 
-    out_path = args.out or ("BENCH_smoke.json" if args.smoke else None)
+    out_path = args.out or ("BENCH_smoke.json" if args.smoke else
+                            "BENCH_provisioning.json" if args.provisioning
+                            else None)
     if out_path:
         with open(out_path, "w") as f:
             json.dump({"results": common.RESULTS, "timings": timings}, f,

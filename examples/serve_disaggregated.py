@@ -10,11 +10,15 @@ cluster plane in both architectures —
 
 Then the cluster-scale view: the SAME control-plane code inside the
 discrete-event simulator (``backend="sim"``), comparing S-LoRA vs
-InfiniLoRA under load with the paper's SLOs, plus SLO-driven provisioning
-(Algorithm 1) choosing the server size.
+InfiniLoRA under load with the paper's SLOs, SLO-driven provisioning
+(Algorithm 1) choosing the server size — and Algorithm 1 run ONLINE: a
+load-shift scenario where the autoscaler provisions instances, cache
+slots, and LoRA-Server replicas at runtime while the static baseline
+collapses.
 
     PYTHONPATH=src python examples/serve_disaggregated.py
 """
+import copy
 import dataclasses
 
 import jax
@@ -24,10 +28,9 @@ from repro.baselines import slora as presets
 from repro.configs import get_config
 from repro.core import provisioning as P
 from repro.core.adapter import init_mixed_rank_pool
-from repro.core.lora_server import LoRAServer, ServerConfig
 from repro.models import model as model_mod
 from repro.serving import workload
-from repro.serving.api import ServeConfig, build_system
+from repro.serving.api import AutoscalePolicy, ServeConfig, build_system
 
 REQS = [
     # (adapter, arrival, prompt_len, output_len): rid 2/3 join while 0/1
@@ -39,15 +42,14 @@ REQS = [
 
 
 def serve(cfg, params, pool, disaggregated, cancel_rid=None):
-    server = None
-    if disaggregated:
-        server = LoRAServer(cfg, ServerConfig(m=1, x=1, y=1, cache_slots=6,
-                                              rank=8), dtype=jnp.float32)
+    # disaggregated mode: the front door builds an elastic ServerPool of
+    # LoRA-Server replicas (here 2, adapter-affinity-partitioned) — the
+    # pre-pool `server=LoRAServer(...)` argument still works as a shim
     system = build_system(
         ServeConfig(backend="cluster", disaggregated=disaggregated,
                     n_instances=2, max_batch=2, max_len=32,
-                    adapter_cache_slots=6),
-        cfg, params=params, pool=pool, server=server)
+                    adapter_cache_slots=6, server_replicas=2),
+        cfg, params=params, pool=pool)
     handles = [system.submit(adapter_id=a, arrival=t, prompt_len=p,
                              max_new_tokens=o)
                for a, t, p, o in REQS]
@@ -78,7 +80,7 @@ def functional_demo():
               f"arrival={h.request.arrival:.0f}: {h.tokens}")
     same = all(c.tokens == d.tokens for c, d in zip(hs_c, hs_d))
     print(f"mid-decode admission on both paths; tokens identical across "
-          f"architectures: {same}")
+          f"architectures (2-replica elastic server pool): {same}")
     assert same
 
     print("\n=== cancellation under churn (both planes share the path) ===")
@@ -103,6 +105,33 @@ def provisioning_demo():
           f"{rep.gpus_for_tpot} -> provision {rep.gpus} "
           f"({rep.placement.describe()})")
     return rep
+
+
+def elastic_demo():
+    print("\n=== Algorithm 1 ONLINE: autoscaler vs static under a load "
+          "shift ===")
+    # the one scenario definition benchmarks/bench_autoscaler.py measures
+    # in CI — imported, not copied, so this demo always prints the numbers
+    # the README cites
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.bench_autoscaler import LOAD_SHIFT, load_shift_config, \
+        load_shift_policy
+    cfg = get_config("mixtral-8x7b")
+    reqs = workload.generate_load_shift(**LOAD_SHIFT)
+    for name, auto in (("static ", None), ("elastic", load_shift_policy())):
+        system = build_system(load_shift_config(auto), cfg)
+        system.submit_workload([copy.copy(r) for r in reqs])
+        system.drain()
+        steady = system.summary(duration=120.0, warmup=70 / 120.0)
+        hist = system.scale_history()
+        peak = max((h["targets"]["instances"] for h in hist), default=1)
+        print(f"  {name}: post-shift attain={steady.slo_attainment:.0%} "
+              f"p95ttft={steady.p95_ttft:8.3f}s  "
+              f"peak instances={peak}  scale events="
+              f"{len(system.scale_events)}")
 
 
 def cluster_demo(rep):
@@ -134,3 +163,4 @@ if __name__ == "__main__":
     functional_demo()
     rep = provisioning_demo()
     cluster_demo(rep)
+    elastic_demo()

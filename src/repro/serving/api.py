@@ -50,9 +50,11 @@ from typing import Callable, Dict, Iterator, List, Optional, Protocol, \
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import Hardware, V5E
 from repro.serving import metrics
+from repro.serving.autoscaler import Autoscaler, AutoscalePolicy, ScaleAction
 from repro.serving.cluster import Cluster, ClusterConfig
 from repro.serving.engine import EngineConfig
 from repro.serving.metrics import Summary
+from repro.serving.server_pool import ServerPool
 from repro.serving.simulator import SimConfig, Simulation
 from repro.serving.workload import Request
 
@@ -61,6 +63,7 @@ __all__ = [
     "ServeSystem", "RequestHandle", "RequestState", "Event",
     "SLOClass", "INTERACTIVE", "BATCH", "TERMINAL_STATES",
     "build_system", "Request", "Summary",
+    "AutoscalePolicy", "Autoscaler", "ScaleAction", "ServerPool",
 ]
 
 
@@ -80,11 +83,15 @@ TERMINAL_STATES = frozenset({RequestState.FINISHED, RequestState.CANCELLED,
 
 @dataclasses.dataclass(frozen=True)
 class Event:
-    """One observable lifecycle step, identical across backends."""
+    """One observable lifecycle step, identical across backends. Scaling
+    events use ``rid=-1`` and ``kind="scale:<action>"`` so benchmarks can
+    plot SLO attainment against replica/instance count over time."""
     time: float
     rid: int
     kind: str                    # queued|prefill|token|finished|cancelled
+    #                              |scale:<action> (autoscaler, rid=-1)
     token: Optional[int] = None  # real token id (cluster) / None (sim)
+    detail: Optional[str] = None  # scale events: the autoscaler's reason
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +131,11 @@ class ServeConfig:
     host_bw: float = float("inf")   # cluster: adapter load bandwidth
     layerwise_loading: bool = True
     max_rounds: int = 100_000
+    # elastic provisioning (both planes): LoRA-Server replica count at
+    # start, plus the online Algorithm-1 control loop when ``autoscale``
+    # carries an AutoscalePolicy (None = static provisioning)
+    server_replicas: int = 1
+    autoscale: Optional[AutoscalePolicy] = None
     # analytic plane (sim backend) only
     gpus_per_instance: int = 8
     server_gpus: int = 8
@@ -131,6 +143,7 @@ class ServeConfig:
     duration: float = 300.0
     overlap: bool = True
     fast_kernels: bool = True
+    slow_kernel_eff_scale: float = 2.8  # generic-kernel penalty (ablations)
     protocol: str = "push"
     hw: Hardware = V5E
     lora_rank: Optional[int] = None
@@ -158,7 +171,7 @@ class ServeConfig:
             layerwise_loading=self.layerwise_loading,
             max_rounds=self.max_rounds, paged=self.paged,
             page_size=self.page_size, n_pages=self.n_pages,
-            prefill_chunk=self.prefill_chunk)
+            prefill_chunk=self.prefill_chunk, autoscale=self.autoscale)
 
     def sim_config(self) -> SimConfig:
         return SimConfig(
@@ -167,16 +180,20 @@ class ServeConfig:
             max_batch=self.max_batch, duration=self.duration,
             disaggregated=self.disaggregated, server_gpus=self.server_gpus,
             server_cache_slots=self.adapter_cache_slots,
+            server_replicas=self.server_replicas,
             placement_x=self.placement_x,
             instance_cache_slots=self.adapter_cache_slots,
             overlap=self.overlap,
             layerwise_loading=self.layerwise_loading,
-            fast_kernels=self.fast_kernels, protocol=self.protocol,
+            fast_kernels=self.fast_kernels,
+            slow_kernel_eff_scale=self.slow_kernel_eff_scale,
+            protocol=self.protocol,
             policy=self.policy, hw=self.hw, lora_rank=self.lora_rank,
             zipf_s=self.zipf_s, n_adapters=self.n_adapters,
             step_overhead=self.step_overhead, failures=self.failures,
             recoveries=self.recoveries, stragglers=self.stragglers,
-            straggler_mitigation=self.straggler_mitigation)
+            straggler_mitigation=self.straggler_mitigation,
+            autoscale=self.autoscale)
 
     # ------------------------ migration shims ------------------------ #
     @classmethod
@@ -190,15 +207,20 @@ class ServeConfig:
             n_instances=sim.n_instances, max_batch=sim.max_batch,
             adapter_cache_slots=slots, policy=sim.policy,
             gpus_per_instance=sim.gpus_per_instance,
-            server_gpus=sim.server_gpus, placement_x=sim.placement_x,
+            server_gpus=sim.server_gpus,
+            server_replicas=sim.server_replicas,
+            placement_x=sim.placement_x,
             duration=sim.duration, overlap=sim.overlap,
             layerwise_loading=sim.layerwise_loading,
-            fast_kernels=sim.fast_kernels, protocol=sim.protocol,
+            fast_kernels=sim.fast_kernels,
+            slow_kernel_eff_scale=sim.slow_kernel_eff_scale,
+            protocol=sim.protocol,
             hw=sim.hw, lora_rank=sim.lora_rank, zipf_s=sim.zipf_s,
             n_adapters=sim.n_adapters, step_overhead=sim.step_overhead,
             failures=sim.failures, recoveries=sim.recoveries,
             stragglers=sim.stragglers,
-            straggler_mitigation=sim.straggler_mitigation)
+            straggler_mitigation=sim.straggler_mitigation,
+            autoscale=sim.autoscale)
         kw.update(overrides)
         return cls(**kw)
 
@@ -214,7 +236,7 @@ class ServeConfig:
             host_bw=ccfg.host_bw, layerwise_loading=ccfg.layerwise_loading,
             max_rounds=ccfg.max_rounds, paged=ccfg.paged,
             page_size=ccfg.page_size, n_pages=ccfg.n_pages,
-            prefill_chunk=ccfg.prefill_chunk)
+            prefill_chunk=ccfg.prefill_chunk, autoscale=ccfg.autoscale)
         kw.update(overrides)
         return cls(**kw)
 
@@ -241,6 +263,8 @@ class Backend(Protocol):
     def kv_stats(self) -> Dict: ...
 
     def default_duration(self) -> float: ...
+
+    def scale_history(self) -> List[Dict]: ...
 
 
 class SimBackend:
@@ -279,15 +303,19 @@ class SimBackend:
     def default_duration(self) -> float:
         return self._duration
 
+    def scale_history(self) -> List[Dict]:
+        sc = self.sim._scaler
+        return list(sc.history) if sc is not None else []
+
 
 class ClusterBackend:
     """The real JAX plane (wraps the slot-engine ``Cluster`` session):
     actual decode steps, real token ids, paged or dense KV."""
 
     def __init__(self, model: ModelConfig, params, cfg: ServeConfig, pool,
-                 server=None):
+                 server=None, server_pool=None):
         self.cluster = Cluster(model, params, cfg.cluster_config(), pool,
-                               server=server)
+                               server_pool=server_pool, server=server)
         self.cluster.open()
         self.max_rounds = cfg.max_rounds
         self.step_time = cfg.step_time
@@ -330,6 +358,8 @@ class ClusterBackend:
         for t, rid in due:
             evs.extend(self.cancel(rid))
         rep = self.cluster.step_round()
+        evs.extend(Event(rep["now"], -1, f"scale:{a.kind}", detail=a.reason)
+                   for a in rep["scale"])
         evs.extend(Event(rep["now"], r.rid, "queued")
                    for r in rep["enqueued"])
         evs.extend(Event(rep["now"], r.rid, "prefill")
@@ -355,6 +385,9 @@ class ClusterBackend:
 
     def default_duration(self) -> float:
         return max(self.cluster.rnd, 1) * self.step_time
+
+    def scale_history(self) -> List[Dict]:
+        return self.cluster.scale_history()
 
 
 # ---------------------------- request handle ----------------------------- #
@@ -463,7 +496,7 @@ class ServeSystem:
     lifecycle events out to handles, and summarizes SLO metrics."""
 
     def __init__(self, cfg: ServeConfig, model: ModelConfig, params=None,
-                 pool=None, server=None):
+                 pool=None, server=None, server_pool=None):
         self.cfg = cfg
         self.model = model
         if cfg.backend == "sim":
@@ -474,25 +507,28 @@ class ServeSystem:
                     "backend='cluster' runs the real model: pass params= "
                     "and pool= (or use backend='sim' for the analytic "
                     "plane)")
-            if cfg.disaggregated and server is None:
-                server = self._make_server(model, cfg, pool)
+            if cfg.disaggregated and server is None and server_pool is None:
+                server_pool = self._make_server_pool(model, cfg, pool)
             self.backend = ClusterBackend(model, params, cfg, pool,
-                                          server=server)
+                                          server=server,
+                                          server_pool=server_pool)
         else:
             raise ValueError(f"unknown backend {cfg.backend!r} "
                              f"(expected 'sim' or 'cluster')")
         self.handles: Dict[int, RequestHandle] = {}
+        self.scale_events: List[Event] = []
         self._rid = itertools.count()
 
     @staticmethod
-    def _make_server(model: ModelConfig, cfg: ServeConfig, pool):
-        """Default single-device LoRA Server sized to the shared cache."""
-        from repro.core.lora_server import LoRAServer, ServerConfig
-        dtype = next(iter(pool.tensors.values()))["A"].dtype
-        scfg = ServerConfig(m=1, x=1, y=1,
-                            cache_slots=cfg.adapter_cache_slots,
-                            rank=pool.rank)
-        return LoRAServer(model, scfg, dtype=dtype)
+    def _make_server_pool(model: ModelConfig, cfg: ServeConfig, pool):
+        """Default elastic pool of single-device LoRA-Server replicas.
+        Replica slot tables are sized so the autoscaler's cache-resize
+        ceiling always physically fits."""
+        slots = cfg.adapter_cache_slots
+        if cfg.autoscale is not None:
+            slots = max(slots, min(cfg.autoscale.max_cache_slots, pool.n))
+        return ServerPool.build(model, pool, cache_slots=slots,
+                                n_replicas=max(cfg.server_replicas, 1))
 
     # --------------------------- submission -------------------------- #
     def submit(self, prompt: Optional[Sequence[int]] = None,
@@ -553,9 +589,13 @@ class ServeSystem:
 
     # ---------------------------- pumping ----------------------------- #
     def step(self) -> List[Event]:
-        """Advance the backend one quantum; route events to handles."""
+        """Advance the backend one quantum; route events to handles
+        (scaling events, rid=-1, accumulate on ``scale_events``)."""
         evs = self.backend.step()
         for ev in evs:
+            if ev.kind.startswith("scale"):
+                self.scale_events.append(ev)
+                continue
             h = self.handles.get(ev.rid)
             if h is not None:
                 h._apply(ev)
@@ -583,6 +623,11 @@ class ServeSystem:
     def kv_stats(self) -> Dict:
         return self.backend.kv_stats()
 
+    def scale_history(self) -> List[Dict]:
+        """Autoscaler control-tick record (rate, LB, targets, actions) —
+        what the provisioning benchmarks plot; empty when static."""
+        return self.backend.scale_history()
+
     def summary(self, duration: Optional[float] = None,
                 slo_class: Optional[SLOClass] = None,
                 warmup: float = 0.1) -> Summary:
@@ -602,7 +647,10 @@ class ServeSystem:
 
 
 def build_system(cfg: ServeConfig, model: ModelConfig, *, params=None,
-                 pool=None, server=None) -> ServeSystem:
+                 pool=None, server=None, server_pool=None) -> ServeSystem:
     """Build the one serving front door for any plane combination:
-    coupled/disaggregated x sim/cluster x dense/paged KV."""
-    return ServeSystem(cfg, model, params=params, pool=pool, server=server)
+    coupled/disaggregated x sim/cluster x dense/paged KV x static/elastic.
+    ``server=`` (single LoRAServer) remains as a migration shim; new code
+    passes ``server_pool=`` (or lets the system build one)."""
+    return ServeSystem(cfg, model, params=params, pool=pool, server=server,
+                       server_pool=server_pool)

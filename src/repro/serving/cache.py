@@ -42,6 +42,11 @@ class LoRACache:
         self.prefetch = prefetch
         self.resident: Dict[int, ResidentAdapter] = {}
         self.loads_in_flight = 0
+        # residency delta since the last drain_dirty(): adapter ids inserted
+        # or evicted. Consumed by ServerPool.sync so replica slot tables are
+        # reconciled against only what CHANGED, not rescanned every round.
+        # Bounded by the number of distinct adapters (it is a set).
+        self.dirty: set = set()
         # stats
         self.hits = 0
         self.misses = 0
@@ -80,13 +85,46 @@ class LoRACache:
             victim = self._evictable()
             if victim is None:
                 return None
-            del self.resident[victim]
-            self.evictions += 1
+            # evict down BELOW capacity, not just one-for-one: after a
+            # shrink left pinned residents above capacity, one-in-one-out
+            # would hold the count above the target forever even once
+            # every pin has released
+            while victim is not None and len(self.resident) >= self.capacity:
+                del self.resident[victim]
+                self.evictions += 1
+                self.dirty.add(victim)
+                victim = self._evictable()
         t_full = self.adapter_bytes / self.host_bw
         t_first = t_full / self.n_layers if self.layerwise else t_full
         r = ResidentAdapter(adapter_id, now, now + t_first, now + t_full, now)
         self.resident[adapter_id] = r
+        self.dirty.add(adapter_id)
         return r.first_ready if self.layerwise else r.full_ready
+
+    def drain_dirty(self) -> set:
+        """Hand back (and clear) the residency delta since the last drain."""
+        d, self.dirty = self.dirty, set()
+        return d
+
+    def resize(self, capacity: int, now: float) -> list:
+        """Online capacity change (autoscaler ``resize_cache`` action).
+        Growing is free; shrinking evicts LRU unpinned residents down to
+        the new capacity. Pinned adapters (in-flight requests) are never
+        evicted, so residency may transiently exceed a shrunken capacity —
+        ``admit`` stops inserting past capacity, so it drains as pins
+        release. Returns the evicted adapter ids."""
+        capacity = max(int(capacity), 1)
+        evicted = []
+        while len(self.resident) > capacity:
+            victim = self._evictable()
+            if victim is None:
+                break
+            del self.resident[victim]
+            self.evictions += 1
+            self.dirty.add(victim)
+            evicted.append(victim)
+        self.capacity = capacity
+        return evicted
 
     def prefetch_hint(self, adapter_id: int, now: float) -> None:
         """Scheduler-driven prefetch (§5.3): start loading at arrival."""

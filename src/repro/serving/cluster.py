@@ -14,15 +14,25 @@ Both systems run end to end:
                            the instance owning their adapter (greedy
                            pre-assignment, paper §6.1), adapters applied
                            in-model
-  disaggregated          : one shared LoRA cache; any instance serves any
-  (InfiniLoRA)             request (least-loaded first); the shared
-                           ``LoRAServer``'s resident slots mirror the cache
+  disaggregated          : one shared LoRA cache mirrored into an elastic
+  (InfiniLoRA)             ``ServerPool`` of LoRA-Server replicas
+                           (adapter-affinity routing, delta-based residency
+                           sync); any instance serves any request
+
+Elastic provisioning: ``ClusterConfig.autoscale`` attaches an
+``Autoscaler`` (paper §4.2 / Algorithm 1 run online). At each round
+boundary it may resize the adapter caches, add/remove server replicas, or
+add/drain LLM instances — the instance set is DYNAMIC (dict keyed by iid;
+drained instances finish their in-flight work, then retire and release
+their KV). Scaling must never change a request's token stream: greedy
+decoding depends only on the request's own prompt, so coupled ==
+disaggregated == elastic-disaggregated, enforced by test.
 
 Requests are admitted at decode-step boundaries into a RUNNING batch
 (continuous batching) and evicted the step they finish; greedy decoding is
-deterministic, so for the same workload the two modes must produce
-identical tokens per request — the architectural equivalence claim,
-now measurable under churn rather than on a static batch.
+deterministic, so for the same workload the modes must produce identical
+tokens per request — the architectural equivalence claim, now measurable
+under churn AND under scaling events.
 """
 from __future__ import annotations
 
@@ -36,10 +46,13 @@ from repro.configs.base import ModelConfig
 from repro.core.adapter import AdapterPool
 from repro.core.lora_server import LoRAServer, pool_tensors_from_adapter
 from repro.models.cache import pages_for
+from repro.serving.autoscaler import Autoscaler, AutoscalePolicy, \
+    ScaleAction, converge_replicas, pick_drain_candidate
 from repro.serving.cache import LoRACache
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.scheduler import InstanceState, Scheduler, \
     assign_adapters_greedy
+from repro.serving.server_pool import ServerPool
 from repro.serving.workload import Request
 
 
@@ -64,41 +77,67 @@ class ClusterConfig:
     page_size: int = 8
     n_pages: Optional[int] = None
     prefill_chunk: int = 16
+    # elastic provisioning: run Algorithm 1 online at round boundaries
+    autoscale: Optional[AutoscalePolicy] = None
 
 
 class Cluster:
-    """N client instances against one adapter plane (pool or shared server)."""
+    """N client instances against one adapter plane (pool of replicas or
+    per-instance caches); the instance set is elastic when autoscaling."""
 
     def __init__(self, cfg: ModelConfig, params, ccfg: ClusterConfig,
-                 pool: AdapterPool, server: Optional[LoRAServer] = None):
-        if ccfg.disaggregated and server is None:
-            raise ValueError("disaggregated mode needs a LoRAServer")
-        if ccfg.disaggregated and server.M < ccfg.adapter_cache_slots:
-            # the shared LoRACache mirrors into the server's slot pool, so a
-            # smaller server would hit "cache full" mid-run during sync
-            raise ValueError(
-                f"LoRAServer has {server.M} slots < adapter_cache_slots="
-                f"{ccfg.adapter_cache_slots}")
+                 pool: AdapterPool,
+                 server_pool: Optional[ServerPool] = None,
+                 server: Optional[LoRAServer] = None):
+        if ccfg.disaggregated:
+            if server_pool is None and server is not None:
+                # legacy single-server callers: wrap into a 1-replica pool,
+                # cloning the server's config as the replica factory so the
+                # autoscaler's add_replica still works against the shim
+                scfg = server.scfg
+                dtype = next(iter(server.pool.values())).dtype
+                server_pool = ServerPool(
+                    [server],
+                    factory=lambda: LoRAServer(cfg, scfg, dtype=dtype))
+            if server_pool is None:
+                raise ValueError(
+                    "disaggregated mode needs a ServerPool (server_pool=) "
+                    "or a legacy LoRAServer (server=)")
+            if server_pool.min_slots < ccfg.adapter_cache_slots:
+                # the shared LoRACache mirrors into each replica's slot
+                # pool, so a smaller replica could hit "cache full" mid-run
+                raise ValueError(
+                    f"ServerPool replica has {server_pool.min_slots} slots "
+                    f"< adapter_cache_slots={ccfg.adapter_cache_slots}")
         self.cfg = cfg
         self.ccfg = ccfg
         self.pool = pool
-        self.server = server if ccfg.disaggregated else None
-        ecfg = EngineConfig(max_len=ccfg.max_len, n_slots=ccfg.n_slots,
-                            paged=ccfg.paged, page_size=ccfg.page_size,
-                            n_pages=ccfg.n_pages,
-                            prefill_chunk=ccfg.prefill_chunk)
-        self.engines = [Engine(cfg, params, ecfg, pool=pool,
-                               server=self.server)
-                        for _ in range(ccfg.n_instances)]
+        self.params = params
+        self.server_pool = server_pool if ccfg.disaggregated else None
+        self._ecfg = EngineConfig(max_len=ccfg.max_len, n_slots=ccfg.n_slots,
+                                  paged=ccfg.paged, page_size=ccfg.page_size,
+                                  n_pages=ccfg.n_pages,
+                                  prefill_chunk=ccfg.prefill_chunk)
+        # engines are built by open() — every entrypoint (run(), the front
+        # door's ClusterBackend) opens before touching them, so an eager
+        # build here would just be thrown away
+        self.engines: Dict[int, Engine] = {}
         # session state (built by open(); run() opens its own)
         self.sched: Optional[Scheduler] = None
-        self._instances: List[InstanceState] = []
+        self._instances: Dict[int, InstanceState] = {}
         self._caches: Dict[int, LoRACache] = {}
+        self._cache_slots = ccfg.adapter_cache_slots
+        self._scaler: Optional[Autoscaler] = None
+        self._next_iid = ccfg.n_instances
         self.tokens: Dict[int, List[int]] = {}
         self._reqs: Dict[int, Request] = {}
         self._pending: List[Request] = []
         self._pi = 0
         self.rnd = 0
+
+    def _new_engine(self) -> Engine:
+        return Engine(self.cfg, self.params, self._ecfg, pool=self.pool,
+                      server=self.server_pool)
 
     # ------------------------------------------------------------------ #
     def _prompt(self, req: Request) -> np.ndarray:
@@ -114,16 +153,14 @@ class Cluster:
         rng = np.random.default_rng(7919 + req.rid)
         return rng.integers(0, self.cfg.vocab_size, plen).astype(np.int32)
 
-    def _sync_server(self, cache: LoRACache) -> None:
-        """Mirror the shared cache's residency set into the LoRAServer's
-        slot pool (evictions first so slots free up for the inserts)."""
-        for aid in list(self.server.slot_of):
-            if aid not in cache.resident:
-                self.server.evict(aid)
-        for aid in cache.resident:
-            if not self.server.is_resident(aid):
-                self.server.insert(aid,
-                                   pool_tensors_from_adapter(self.pool, aid))
+    def _sync_pool(self) -> None:
+        """Delta-based residency mirror: reconcile the replicas' slot
+        tables against only the adapter ids the shared cache mutated since
+        the last sync (``LoRACache.dirty``), instead of the pre-pool full
+        rescan of every resident adapter every round."""
+        self.server_pool.sync(
+            self._caches[-1],
+            tensors_fn=lambda aid: pool_tensors_from_adapter(self.pool, aid))
 
     # ------------------------------------------------------------------ #
     # incremental session API (serving/api.py front door)                 #
@@ -152,7 +189,7 @@ class Cluster:
         if ccfg.paged:
             need = pages_for(int(self._prompt(req).shape[0])
                              + req.output_len - 1, ccfg.page_size)
-            budget = self.engines[0].total_pages
+            budget = next(iter(self.engines.values())).total_pages
             if need > budget:
                 raise ValueError(
                     f"request {req.rid}: needs {need} KV pages but the "
@@ -167,15 +204,14 @@ class Cluster:
         ccfg = self.ccfg
         n_adapters = max(self.pool.n,
                          max((r.adapter_id for r in requests), default=0) + 1)
-        self._instances = [InstanceState(i, ccfg.n_slots)
-                           for i in range(ccfg.n_instances)]
-        adapter_bytes = self.pool.bytes_per_adapter()
-        mk_cache = lambda: LoRACache(  # noqa: E731
-            ccfg.adapter_cache_slots, adapter_bytes, self.cfg.n_layers,
-            host_bw=ccfg.host_bw, layerwise=ccfg.layerwise_loading,
-            prefetch=ccfg.layerwise_loading)
+        self._instances = {i: InstanceState(i, ccfg.n_slots)
+                           for i in range(ccfg.n_instances)}
+        self.engines = {i: self._new_engine()
+                        for i in range(ccfg.n_instances)}
+        self._next_iid = ccfg.n_instances
+        self._cache_slots = ccfg.adapter_cache_slots
         if ccfg.disaggregated:
-            self._caches = {-1: mk_cache()}
+            self._caches = {-1: self._mk_cache()}
             owner = None
         else:
             counts = np.bincount([r.adapter_id for r in requests],
@@ -184,7 +220,8 @@ class Cluster:
                 counts += 1.0           # uniform expected load
             owner = assign_adapters_greedy(n_adapters, counts,
                                            ccfg.n_instances)
-            self._caches = {i: mk_cache() for i in range(ccfg.n_instances)}
+            self._caches = {i: self._mk_cache()
+                            for i in range(ccfg.n_instances)}
         kv_pages = kv_need = None
         if ccfg.paged:
             # a resident request's page footprint: prompt positions plus one
@@ -201,15 +238,33 @@ class Cluster:
                     self._need_by_rid[r.rid] = pages_for(
                         plen + r.output_len - 1, ccfg.page_size)
                 return self._need_by_rid[r.rid]
-        self.sched = Scheduler(self._instances, self._caches, owner,
-                               policy=ccfg.policy,
+        self.sched = Scheduler(list(self._instances.values()), self._caches,
+                               owner, policy=ccfg.policy,
                                shared_cache=ccfg.disaggregated,
                                kv_pages=kv_pages, kv_page_need=kv_need)
+        self._scaler = None
+        if ccfg.autoscale is not None:
+            pol = ccfg.autoscale
+            if self.server_pool is not None and \
+                    pol.max_cache_slots > self.server_pool.min_slots:
+                # cap the policy at the replicas' physical slot capacity —
+                # otherwise the control loop would chase an unreachable
+                # cache target, re-emitting the same resize action forever
+                pol = dataclasses.replace(
+                    pol, max_cache_slots=self.server_pool.min_slots)
+            self._scaler = Autoscaler(pol, self.cfg, max_batch=ccfg.n_slots,
+                                      has_server=self.server_pool is not None)
         self.tokens: Dict[int, List[int]] = {}
         self._reqs: Dict[int, Request] = {}
         self._pending: List[Request] = []
         self._pi = 0
         self.rnd = 0
+
+    def _mk_cache(self) -> LoRACache:
+        return LoRACache(self._cache_slots, self.pool.bytes_per_adapter(),
+                         self.cfg.n_layers, host_bw=self.ccfg.host_bw,
+                         layerwise=self.ccfg.layerwise_loading,
+                         prefetch=self.ccfg.layerwise_loading)
 
     @property
     def now(self) -> float:
@@ -255,20 +310,116 @@ class Cluster:
                 if self._pending[i].rid == rid:
                     del self._pending[i]
                     break
-        for eng in self.engines:
+        for eng in self.engines.values():
             if eng.has_request(rid):
                 eng.evict_request(rid)      # slot + pages come back NOW
                 break
         return True
 
+    # ------------------------- elastic control ------------------------- #
+    def _n_admitting(self) -> int:
+        return sum(1 for i in self._instances.values()
+                   if i.alive and not i.draining)
+
+    def _run_control(self, now: float) -> List[ScaleAction]:
+        if self._scaler is None or not self._scaler.due(now):
+            return []
+        in_flight = sum(i.batch for i in self._instances.values()
+                        if i.alive)
+        actions = self._scaler.control(
+            now, in_flight=in_flight, queued=self.sched.queue_len(),
+            cache_slots=self._cache_slots,
+            n_instances=self._n_admitting(),
+            n_replicas=self.server_pool.n_replicas
+            if self.server_pool else 1)
+        for act in actions:
+            self._apply_action(act, now)
+        return actions
+
+    def _apply_action(self, act: ScaleAction, now: float) -> None:
+        pol = self._scaler.policy if self._scaler else AutoscalePolicy()
+        if act.kind == "resize_cache":
+            target = act.target
+            if self.server_pool is not None:
+                # physical slot tables bound the policy knob (defensive:
+                # open() already caps the autoscaler's max at min_slots)
+                target = min(target, self.server_pool.min_slots)
+            self._cache_slots = max(target, 1)
+            for c in self._caches.values():
+                c.resize(self._cache_slots, now)
+            if self.server_pool is not None:
+                # flush the shrink's evictions into the replica slot pools
+                # NOW — waiting for the next admission-triggered sync would
+                # leave freed adapters' weights resident indefinitely on a
+                # quiet (or all-hit) stream
+                self._sync_pool()
+        elif act.kind == "add_instance":
+            while self._n_admitting() < min(act.target, pol.max_instances):
+                self._add_instance(now)
+        elif act.kind == "drain_instance":
+            floor = max(act.target, pol.min_instances, 1)
+            while self._n_admitting() > floor:
+                cand = pick_drain_candidate(self._instances.values(),
+                                            self.sched.queues)
+                self.sched.drain_instance(cand.iid, now)
+        elif act.kind in ("add_replica", "remove_replica"):
+            if self.server_pool is None:
+                return              # coupled plane has no server replicas
+            if converge_replicas(self.server_pool, act.target):
+                # re-route NOW: running requests' adapters must sit on
+                # their (new) affinity replicas before the next decode step
+                self._sync_pool()
+
+    def _add_instance(self, now: float) -> int:
+        iid = self._next_iid
+        self._next_iid += 1
+        inst = InstanceState(iid, self.ccfg.n_slots)
+        self._instances[iid] = inst
+        eng = self._new_engine()
+        self.engines[iid] = eng
+        cache = None if self.ccfg.disaggregated else self._mk_cache()
+        pop = None
+        if not self.ccfg.disaggregated and self._scaler is not None:
+            pop = self._scaler.popularity(self.pool.n)
+        self.sched.add_instance(
+            inst, cache=cache, popularity=pop,
+            kv_budget=eng.total_pages if self.ccfg.paged else None, now=now)
+        return iid
+
+    def _retire_drained(self) -> List[int]:
+        """Fully remove drained-dry instances: a long-lived elastic session
+        cycles scale-out/scale-in many times, and keeping dead engines and
+        instance records around would leak memory AND per-round scan work
+        (iids are never reused, so removal is unambiguous)."""
+        retired = []
+        for iid, inst in self._instances.items():
+            if (inst.draining and inst.alive and inst.batch == 0
+                    and not self.engines[iid].active_rids()):
+                inst.alive = False
+                self.engines[iid].release_kv()
+                retired.append(iid)
+        for iid in retired:
+            del self.engines[iid]
+            del self._instances[iid]
+            self.sched.instances.pop(iid, None)
+            self.sched.queues.pop(iid, None)
+            if self.sched.kv_pages is not None:
+                self.sched.kv_pages.pop(iid, None)
+            self._caches.pop(iid, None)
+        return retired
+
+    # ------------------------------------------------------------------ #
     def step_round(self) -> Dict:
-        """Advance ONE global decode round: enqueue due arrivals, admit at
-        the step boundary (least-loaded instance first), run one engine
-        step per busy instance, retire finishers. Returns the round report:
-        {"now", "step_end", "admitted", "tokens": {rid: tok}, "finished",
-        "idle"} — the per-round token stream the front door streams from."""
+        """Advance ONE global decode round: run the autoscaler control loop
+        (if attached), enqueue due arrivals, admit at the step boundary
+        (least-loaded instance first), run one engine step per busy
+        instance, retire finishers and fully-drained instances. Returns the
+        round report: {"now", "step_end", "enqueued", "admitted", "tokens":
+        {rid: tok}, "finished", "scale", "idle"} — the per-round token
+        stream the front door streams from."""
         ccfg = self.ccfg
         now = self.now
+        scale_actions = self._run_control(now)
         enqueued: List[Request] = []
         while self._pi < len(self._pending) and \
                 self._pending[self._pi].arrival <= now:
@@ -276,14 +427,16 @@ class Cluster:
             self._pi += 1
             if not r.cancelled:             # cancelled while still pending
                 self.sched.enqueue(r, now)
+                if self._scaler is not None:
+                    self._scaler.observe_arrival(now, r.adapter_id)
                 enqueued.append(r)
         # admission at the step boundary, least-loaded instance first
         admitted_all: List[Request] = []
-        for iid in sorted(range(ccfg.n_instances),
-                          key=lambda i: self._instances[i].batch):
+        for iid in sorted(self.engines,
+                          key=lambda i: (self._instances[i].batch, i)):
             admitted = self.sched.admit(iid, now)
             if admitted and ccfg.disaggregated:
-                self._sync_server(self._caches[-1])
+                self._sync_pool()
             for r in admitted:
                 self.engines[iid].add_request(r.rid, self._prompt(r),
                                               r.adapter_id)
@@ -294,7 +447,7 @@ class Cluster:
         busy = False
         round_tokens: Dict[int, int] = {}
         finished: List[Request] = []
-        for iid in range(ccfg.n_instances):
+        for iid in sorted(self.engines):
             eng = self.engines[iid]
             if not eng.active_rids():
                 continue
@@ -305,12 +458,16 @@ class Cluster:
             for r in self.sched.step_complete(iid, step_end):
                 eng.evict_request(r.rid)
                 finished.append(r)
+                if self._scaler is not None:
+                    self._scaler.observe_finish(step_end,
+                                                r.finish - r.arrival)
+        self._retire_drained()
         self.rnd += 1
         idle = (not busy and self._pi >= len(self._pending)
                 and self.sched.queue_len() == 0)
         return {"now": now, "step_end": step_end, "enqueued": enqueued,
                 "admitted": admitted_all, "tokens": round_tokens,
-                "finished": finished, "idle": idle}
+                "finished": finished, "scale": scale_actions, "idle": idle}
 
     def idle(self) -> bool:
         """No running work, no queued work, no pending arrivals."""
@@ -318,7 +475,8 @@ class Cluster:
             return True
         return (self._pi >= len(self._pending)
                 and self.sched.queue_len() == 0
-                and not any(eng.active_rids() for eng in self.engines))
+                and not any(eng.active_rids()
+                            for eng in self.engines.values()))
 
     def cache_stats(self) -> Dict:
         return {k: {"hits": c.hits, "misses": c.misses,
@@ -326,8 +484,11 @@ class Cluster:
                 for k, c in self._caches.items()}
 
     def kv_stats(self) -> Dict[int, Dict]:
-        return {i: self.engines[i].kv_stats()
-                for i in range(self.ccfg.n_instances)}
+        return {i: eng.kv_stats() for i, eng in self.engines.items()}
+
+    def scale_history(self) -> List[Dict]:
+        """The autoscaler's per-control-tick record (empty when static)."""
+        return list(self._scaler.history) if self._scaler else []
 
     # ------------------------------------------------------------------ #
     def run(self, requests: Sequence[Request]) -> Dict:
@@ -360,4 +521,6 @@ class Cluster:
                "rounds": self.rnd, "cache_stats": self.cache_stats()}
         if self.ccfg.paged:
             out["kv_stats"] = self.kv_stats()
+        if self._scaler is not None:
+            out["scale_history"] = self.scale_history()
         return out

@@ -59,7 +59,6 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import disagg as disagg_mod
 from repro.core.adapter import AdapterPool
-from repro.core.lora_server import LoRAServer
 from repro.models import cache as cache_mod
 from repro.models import transformer
 
@@ -232,7 +231,11 @@ class SlotState:
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  pool: Optional[AdapterPool] = None,
-                 server: Optional[LoRAServer] = None):
+                 server=None):
+        # ``server`` is anything satisfying LoRAServer's ``compute``
+        # contract: a single LoRAServer or an elastic ``ServerPool`` of
+        # replicas (serving/server_pool.py) — the engine only dispatches
+        # hook computations to it.
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
@@ -427,6 +430,19 @@ class Engine:
         if self.ecfg.paged:
             self._free.extend(int(p) for p in self._bt[slot] if p >= 0)
             self._bt[slot, :] = -1
+
+    def release_kv(self) -> None:
+        """Drop the KV slab/pool of an EMPTY engine (autoscaler scale-in:
+        a drained instance's memory actually comes back). The lazy
+        ``_ensure_slot_cache`` re-allocates if the instance is ever
+        revived."""
+        if self._by_rid:
+            raise RuntimeError(
+                f"release_kv with {len(self._by_rid)} requests resident")
+        self._k = self._v = None
+        if self.ecfg.paged:
+            self._bt[:] = -1
+            self._free = list(range(self.total_pages - 1, -1, -1))
 
     # ------------------------------------------------------------------ #
     # continuous-batching decode step                                     #

@@ -36,6 +36,7 @@ class InstanceState:
     next_free: float = 0.0          # time the current step ends
     slowdown: float = 1.0           # straggler factor (fault-tolerance tests)
     alive: bool = True
+    draining: bool = False          # scale-in: finish running, admit nothing
 
     @property
     def batch(self) -> int:
@@ -89,6 +90,26 @@ class Scheduler:
             self.queues[iid].append(req)
             self.caches[iid].prefetch_hint(req.adapter_id, now)
 
+    def _reassign_owned(self, iid: int, weight: Dict[int, int]) -> None:
+        """Coupled mode: hand instance ``iid``'s owned adapters to the
+        least-loaded admitting instances (heaviest affected adapter first).
+        Shared-cache mode routes through one global queue, so ownership
+        does not exist and this is a no-op."""
+        if self.shared_cache or self.owner is None:
+            return
+        survivors = [i for i in self.instances.values()
+                     if i.alive and not i.draining and i.iid != iid]
+        if not survivors:
+            return
+        load = {i.iid: i.batch + len(self.queues[i.iid])
+                for i in survivors}
+        orphan_adapters = [a for a in range(len(self.owner))
+                           if int(self.owner[a]) == iid]
+        for a in sorted(orphan_adapters, key=lambda a: -weight.get(a, 0)):
+            tgt = min(load, key=lambda j: load[j])
+            self.owner[a] = tgt
+            load[tgt] += weight.get(a, 0)
+
     def requeue_instance(self, iid: int, now: float):
         """Fault handling: move a dead instance's work back to the queues.
 
@@ -117,23 +138,105 @@ class Scheduler:
             if r.reserved:
                 cache.unpin(r.adapter_id, now)
                 r.reserved = False
-        if not self.shared_cache:
-            survivors = [i for i in self.instances.values() if i.alive]
-            if survivors:
-                weight: Dict[int, int] = {}
-                for r in orphans + stranded:
-                    weight[r.adapter_id] = weight.get(r.adapter_id, 0) + 1
-                load = {i.iid: i.batch + len(self.queues[i.iid])
-                        for i in survivors}
-                orphan_adapters = [a for a in range(len(self.owner))
-                                   if int(self.owner[a]) == iid]
-                for a in sorted(orphan_adapters,
-                                key=lambda a: -weight.get(a, 0)):
-                    tgt = min(load, key=lambda j: load[j])
-                    self.owner[a] = tgt
-                    load[tgt] += weight.get(a, 0)
+        weight: Dict[int, int] = {}
+        for r in orphans + stranded:
+            weight[r.adapter_id] = weight.get(r.adapter_id, 0) + 1
+        self._reassign_owned(iid, weight)
         for r in orphans + stranded:
             self.enqueue(r, now)
+
+    # ----------------------- elastic provisioning ---------------------- #
+    def add_instance(self, inst: InstanceState,
+                     cache: Optional[LoRACache] = None,
+                     popularity: Optional[np.ndarray] = None,
+                     kv_budget: Optional[int] = None,
+                     now: float = 0.0) -> None:
+        """Scale-out primitive: register a new instance mid-run. Coupled
+        mode needs its adapter cache and (optionally) a popularity estimate
+        to rebalance adapter ownership onto the newcomer; paged engines
+        register their page budget so admission stays KV-bounded."""
+        if inst.iid in self.instances:
+            raise ValueError(f"instance {inst.iid} already registered")
+        self.instances[inst.iid] = inst
+        self.queues.setdefault(inst.iid, [])
+        if not self.shared_cache:
+            if cache is None:
+                raise ValueError("coupled add_instance needs a LoRACache")
+            self.caches[inst.iid] = cache
+            if popularity is not None:
+                self.rebalance_owners(popularity, now)
+        if self.kv_pages is not None and kv_budget is not None:
+            self.kv_pages[inst.iid] = kv_budget
+
+    def drain_instance(self, iid: int, now: float) -> int:
+        """Scale-in primitive (graceful ``requeue_instance``): stop
+        admitting to ``iid``, reroute its queued work to the survivors
+        (coupled: reassigning its owned adapters first, exactly like the
+        fault path), but let in-flight requests finish in place — their
+        token streams must not restart. Returns the in-flight count; the
+        caller retires the instance once it reaches zero."""
+        inst = self.instances[iid]
+        inst.draining = True
+        stranded: List[Request] = []
+        if not self.shared_cache:
+            stranded = self.queues[iid]
+            self.queues[iid] = []
+        for r in stranded:
+            if r.reserved:
+                self.cache_for(iid).unpin(r.adapter_id, now)
+                r.reserved = False
+        weight: Dict[int, int] = {}
+        for r in stranded:
+            weight[r.adapter_id] = weight.get(r.adapter_id, 0) + 1
+        self._reassign_owned(iid, weight)
+        tgts = set()
+        for r in stranded:
+            self.enqueue(r, now)
+            tgts.add(-1 if self.shared_cache
+                     else int(self.owner[r.adapter_id]))
+        for t in tgts:
+            # rerouted work must not fall behind later arrivals (FCFS)
+            self.queues[t].sort(key=lambda r: (r.arrival, r.rid))
+        return inst.batch
+
+    def rebalance_owners(self, popularity: np.ndarray,
+                         now: float = 0.0) -> None:
+        """Coupled mode: recompute the greedy adapter->instance assignment
+        over the currently admitting instances (paper §6.1, online) and
+        reroute queued-but-unadmitted requests to their new owners. Running
+        requests stay where they are — rebalancing must never perturb an
+        in-flight token stream."""
+        if self.shared_cache or self.owner is None:
+            return
+        targets = [i.iid for i in self.instances.values()
+                   if i.alive and not i.draining]
+        if not targets:
+            return
+        load = {iid: float(self.instances[iid].batch) for iid in targets}
+        for a in np.argsort(-np.asarray(popularity)):
+            tgt = min(load, key=lambda j: (load[j], j))
+            self.owner[a] = tgt
+            load[tgt] += float(popularity[a])
+        moved_into = set()
+        for iid in [i for i in self.queues if i != -1]:
+            keep = []
+            for r in self.queues[iid]:
+                tgt = int(self.owner[r.adapter_id])
+                if tgt != iid and tgt in self.queues:
+                    if r.reserved:
+                        # the pin lives on the OLD instance's cache; the new
+                        # owner re-pins at its own admit
+                        self.caches[iid].unpin(r.adapter_id, now)
+                        r.reserved = False
+                    self.queues[tgt].append(r)
+                    moved_into.add(tgt)
+                else:
+                    keep.append(r)
+            self.queues[iid] = keep
+        for iid in moved_into:
+            # appending rerouted requests behind later arrivals would invert
+            # FCFS priority; restore arrival order on receiving queues
+            self.queues[iid].sort(key=lambda r: (r.arrival, r.rid))
 
     def _sorted_queue(self, q: List[Request]) -> List[Request]:
         if self.policy == "sjf":  # oracle output lengths (paper baseline)
@@ -144,7 +247,7 @@ class Scheduler:
     def admit(self, iid: int, now: float) -> List[Request]:
         """Admit queued requests into instance ``iid`` at a step boundary."""
         inst = self.instances[iid]
-        if not inst.alive:
+        if not inst.alive or inst.draining:
             return []
         cache = self.cache_for(iid)
         q_key = -1 if self.shared_cache else iid

@@ -1,0 +1,267 @@
+"""Elastic LoRA-Server pool: N server replicas behind one interface.
+
+Pre-pool, the disaggregated plane hard-coded exactly one ``LoRAServer``
+whose slot table mirrored the shared ``LoRACache`` via a full rescan every
+round. The ``ServerPool`` generalizes that in three ways:
+
+  adapter-affinity routing   : adapter ``a`` lives on (and is computed by)
+                               replica ``a % n_replicas`` only, so replicas
+                               partition the adapter set and the per-layer
+                               hook traffic instead of duplicating it
+  per-replica residency sync : the shared cache's residency set is mirrored
+                               into each replica's slot table DELTA-based —
+                               ``LoRACache`` marks mutated adapter ids dirty
+                               and ``sync`` touches only those, so a quiet
+                               round costs one empty-set check instead of a
+                               full rescan
+  online resize              : ``add_replica``/``remove_replica`` re-route
+                               the affinity map at a round boundary; the
+                               next ``sync`` is forced FULL so every
+                               resident adapter lands on its new home
+                               before the next decode step
+
+Replicas are real ``LoRAServer`` objects on the cluster plane (built by a
+factory so the autoscaler can add them at runtime) or lightweight slot
+tables on the analytic plane (``ServerPool.analytic``) — residency sync,
+routing, and the consistency invariant are exercised identically by both,
+which is what lets one ``Autoscaler`` drive both execution planes.
+
+The compute contract is bit-compatibility: ``compute`` returns exactly what
+a single server holding every adapter would return. Each active row's delta
+comes from exactly one replica (its affinity home); the other replicas
+contribute exact ``0.0`` rows that are skipped entirely when a replica owns
+no active row in the batch. With one replica the call is a passthrough, so
+the coupled == disaggregated token-equality claim extends unchanged to
+coupled == disaggregated == elastic-disaggregated.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.cache import LoRACache
+
+
+class AnalyticReplica:
+    """Slot table of a simulated server replica (no weights, no compute):
+    the analytic plane's stand-in so residency sync and the consistency
+    invariant run the same code path as the real ``LoRAServer``. Capacity
+    (``M``) is advisory — the replica mirrors whatever the shared cache
+    actually holds, which can transiently exceed a shrunken autoscaler
+    target while pinned (in-flight) adapters drain; the ``LoRACache`` is
+    the enforcement point, exactly as on the real plane."""
+
+    def __init__(self, cache_slots: int):
+        self.M = cache_slots
+        self.slot_of: Dict[int, int] = {}
+        self._next_slot = 0
+
+    def is_resident(self, adapter_id: int) -> bool:
+        return adapter_id in self.slot_of
+
+    def insert(self, adapter_id: int, tensors=None) -> int:
+        if adapter_id not in self.slot_of:
+            self.slot_of[adapter_id] = self._next_slot
+            self._next_slot += 1
+        return self.slot_of[adapter_id]
+
+    def evict(self, adapter_id: int) -> None:
+        del self.slot_of[adapter_id]
+
+    def resize(self, cache_slots: int) -> None:
+        """Track the autoscaler's cache target (slot tables carry no
+        weights, so this is free; the real plane clamps the policy to its
+        preallocated pools instead)."""
+        self.M = cache_slots
+
+
+class ServerPool:
+    """N LoRA-Server replicas with adapter-affinity routing + delta sync."""
+
+    def __init__(self, replicas: Sequence, factory: Optional[Callable] = None):
+        if not replicas:
+            raise ValueError("ServerPool needs at least one replica")
+        self.replicas: List = list(replicas)
+        self._factory = factory
+        self._full_sync = True      # first sync (and any resize) is full
+        # observability (the delta-sync satellite's test hooks)
+        self.sync_rounds = 0
+        self.sync_noops = 0
+        self.sync_inserts = 0
+        self.sync_evictions = 0
+
+    # ------------------------------------------------------------------ #
+    # construction                                                        #
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def build(cls, model_cfg, adapter_pool, cache_slots: int,
+              n_replicas: int = 1, dtype=None) -> "ServerPool":
+        """Real-plane pool: ``n_replicas`` single-device ``LoRAServer``s,
+        each sized to the FULL cache capacity (affinity routing partitions
+        load, not worst-case residency), plus a factory so the autoscaler
+        can add replicas online."""
+        from repro.core.lora_server import LoRAServer, ServerConfig
+        if dtype is None:
+            dtype = next(iter(adapter_pool.tensors.values()))["A"].dtype
+
+        def factory():
+            scfg = ServerConfig(m=1, x=1, y=1, cache_slots=cache_slots,
+                                rank=adapter_pool.rank)
+            return LoRAServer(model_cfg, scfg, dtype=dtype)
+
+        return cls([factory() for _ in range(n_replicas)], factory=factory)
+
+    @classmethod
+    def analytic(cls, n_replicas: int, cache_slots: int) -> "ServerPool":
+        """Sim-plane pool: slot tables only (the step-time model prices the
+        replicas' capacity; see ``simulator.disagg_stall_seconds``)."""
+        return cls([AnalyticReplica(cache_slots) for _ in range(n_replicas)],
+                   factory=lambda: AnalyticReplica(cache_slots))
+
+    # ------------------------------------------------------------------ #
+    # shape                                                               #
+    # ------------------------------------------------------------------ #
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def min_slots(self) -> int:
+        """Smallest per-replica slot capacity — the cache-size bound the
+        cluster enforces (worst case routes every resident adapter to one
+        replica)."""
+        return min(r.M for r in self.replicas)
+
+    def replica_for(self, adapter_id: int) -> int:
+        """Affinity home of ``adapter_id`` (stable between resizes)."""
+        return int(adapter_id) % len(self.replicas)
+
+    def is_resident(self, adapter_id: int) -> bool:
+        return self.replicas[self.replica_for(adapter_id)].is_resident(
+            adapter_id)
+
+    # ------------------------------------------------------------------ #
+    # elasticity                                                          #
+    # ------------------------------------------------------------------ #
+    def add_replica(self):
+        """Scale out by one replica; affinity re-routes, so the next sync
+        is forced full."""
+        if self._factory is None:
+            raise RuntimeError("ServerPool built without a replica factory")
+        rep = self._factory()
+        self.replicas.append(rep)
+        self._full_sync = True
+        return rep
+
+    def remove_replica(self):
+        """Scale in by one replica (never below one). Its residents are
+        re-homed by the forced full sync that follows."""
+        if len(self.replicas) <= 1:
+            raise RuntimeError("ServerPool cannot drop below one replica")
+        rep = self.replicas.pop()
+        self._full_sync = True
+        return rep
+
+    def resize_slots(self, cache_slots: int) -> None:
+        """Follow an adapter-cache resize on replicas that support it
+        (analytic slot tables); preallocated real pools keep their size and
+        the executor clamps the cache policy to ``min_slots`` instead."""
+        for rep in self.replicas:
+            if hasattr(rep, "resize"):
+                rep.resize(cache_slots)
+
+    # ------------------------------------------------------------------ #
+    # residency sync (delta-based)                                        #
+    # ------------------------------------------------------------------ #
+    def sync(self, cache: LoRACache,
+             tensors_fn: Optional[Callable[[int], object]] = None) -> int:
+        """Mirror ``cache``'s residency set into the replica slot tables.
+
+        Normally touches only the adapter ids the cache marked dirty since
+        the last sync (insertions and evictions); after a replica resize it
+        reconciles every id the cache or any replica still holds. Returns
+        the number of ids reconciled (0 == no-op round)."""
+        self.sync_rounds += 1
+        if self._full_sync:
+            changed = set(cache.resident)
+            for rep in self.replicas:
+                changed |= set(rep.slot_of)
+            cache.drain_dirty()          # superseded by the full pass
+            self._full_sync = False
+            full = True
+        else:
+            full = False
+            changed = cache.drain_dirty()
+            if not changed:
+                self.sync_noops += 1
+                return 0
+        # evictions first so slots free up for the inserts
+        for aid in changed:
+            home = self.replica_for(aid)
+            want = aid in cache.resident
+            for i, rep in enumerate(self.replicas):
+                if rep.is_resident(aid) and (not want or i != home):
+                    rep.evict(aid)
+                    self.sync_evictions += 1
+        for aid in changed:
+            if aid not in cache.resident:
+                continue
+            rep = self.replicas[self.replica_for(aid)]
+            if not rep.is_resident(aid):
+                rep.insert(aid, tensors_fn(aid) if tensors_fn else None)
+                self.sync_inserts += 1
+        if full:
+            # re-home passes are rare (resize only): assert the invariant
+            # inline rather than trusting the re-route arithmetic
+            self.check_consistent(cache)
+        return len(changed)
+
+    def check_consistent(self, cache: Optional[LoRACache] = None) -> None:
+        """Invariant (asserted by tests after every sync): each resident
+        adapter sits on exactly its affinity replica, no replica holds a
+        foreign or stale id, and — given the mirrored cache — the union of
+        replica residents equals the cache's residency set."""
+        seen: Dict[int, int] = {}
+        for i, rep in enumerate(self.replicas):
+            for aid in rep.slot_of:
+                if aid in seen:
+                    raise AssertionError(
+                        f"adapter {aid} resident on replicas {seen[aid]} "
+                        f"and {i}")
+                if self.replica_for(aid) != i:
+                    raise AssertionError(
+                        f"adapter {aid} on replica {i}, affinity says "
+                        f"{self.replica_for(aid)}")
+                seen[aid] = i
+        if cache is not None and not self._full_sync and not cache.dirty:
+            if set(seen) != set(cache.resident):
+                raise AssertionError(
+                    f"replica residency {sorted(seen)} != cache residency "
+                    f"{sorted(cache.resident)}")
+
+    # ------------------------------------------------------------------ #
+    # compute routing (real plane)                                        #
+    # ------------------------------------------------------------------ #
+    def compute(self, hook: str, layer: int, rows, adapter_ids, expert_ids):
+        """Drop-in for ``LoRAServer.compute``: every active row's delta
+        comes from its affinity replica; replicas owning no active row in
+        this batch are skipped. Single replica == passthrough, so the
+        elastic pool cannot perturb the token-equality invariant."""
+        if len(self.replicas) == 1:
+            return self.replicas[0].compute(hook, layer, rows, adapter_ids,
+                                            expert_ids)
+        ids = np.asarray(adapter_ids)
+        homes = np.where(ids >= 0, ids % len(self.replicas), -1)
+        out = None
+        for i, rep in enumerate(self.replicas):
+            mine = homes == i
+            if not mine.any():
+                continue
+            masked = np.where(mine, ids, -1).astype(ids.dtype)
+            delta = rep.compute(hook, layer, rows, masked, expert_ids)
+            out = delta if out is None else out + delta
+        if out is None:     # no active adapters anywhere: exact zero delta
+            out = self.replicas[0].compute(hook, layer, rows,
+                                           np.full_like(ids, -1), expert_ids)
+        return out

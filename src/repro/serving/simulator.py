@@ -31,9 +31,12 @@ from repro.configs.base import ModelConfig
 from repro.core import cost_model
 from repro.core.cost_model import Hardware, V5E
 from repro.core.placement import Placement
+from repro.serving.autoscaler import Autoscaler, AutoscalePolicy, \
+    ScaleAction, converge_replicas, pick_drain_candidate
 from repro.serving.cache import LoRACache
 from repro.serving.scheduler import InstanceState, Scheduler, \
     assign_adapters_greedy
+from repro.serving.server_pool import ServerPool
 from repro.serving.workload import Request, zipf_popularity
 
 
@@ -47,12 +50,20 @@ class SimConfig:
     disaggregated: bool = False
     server_gpus: int = 0
     server_cache_slots: int = 64
+    server_replicas: int = 1            # LoRA-Server replicas (ServerPool)
     placement_x: Optional[int] = None   # EP degree (default intra-node = 4)
     instance_cache_slots: int = 16      # coupled: per-instance slots
     # critical-path optimizations (paper Fig. 14 ablation)
     overlap: bool = True
     layerwise_loading: bool = True
     fast_kernels: bool = True
+    # analytic efficiency penalty of generic (non-hardware-specialized) LoRA
+    # kernels: without ``fast_kernels`` the server-side compute term is
+    # stretched by this factor, calibrated so the "+kernel" ablation step
+    # reproduces the Fig. 14 gap between cuBLAS-style batched GEMMs and the
+    # paper's specialized kernels at the evaluation shapes. Promoted from a
+    # hard-coded constant so ablations can sweep it.
+    slow_kernel_eff_scale: float = 2.8
     protocol: str = "push"
     policy: str = "fcfs"                # or "sjf" (oracle)
     # environment
@@ -66,6 +77,8 @@ class SimConfig:
     recoveries: Tuple[Tuple[float, int], ...] = ()    # (time, iid)
     stragglers: Tuple[Tuple[float, int, float], ...] = ()  # (t, iid, factor)
     straggler_mitigation: bool = True
+    # elastic provisioning: run Algorithm 1 online at event boundaries
+    autoscale: Optional[AutoscalePolicy] = None
 
 
 # ----------------------------- step model ------------------------------- #
@@ -105,9 +118,16 @@ def coupled_lora_seconds(cfg: ModelConfig, batch: int, p: int,
 def disagg_stall_seconds(cfg: ModelConfig, placement: Placement, batch: int,
                          p: int, n_instances: int, distinct: float,
                          rank: int, hw: Hardware, overlap: bool,
-                         fast_kernels: bool, protocol: str) -> float:
-    """Non-hidden LoRA time per step under disaggregation."""
-    eff_scale = 1.0 if fast_kernels else 2.8
+                         fast_kernels: bool, protocol: str,
+                         eff_scale_slow: float = 2.8,
+                         n_server_replicas: int = 1) -> float:
+    """Non-hidden LoRA time per step under disaggregation.
+
+    ``eff_scale_slow`` is ``SimConfig.slow_kernel_eff_scale`` (generic-
+    kernel penalty); ``n_server_replicas`` divides the shared-server
+    capacity term — replicas partition the adapter set by affinity
+    (``ServerPool``), so each serves 1/R of the hook traffic."""
+    eff_scale = 1.0 if fast_kernels else eff_scale_slow
     lat = cost_model.latency_breakdown(cfg, placement, batch, p, distinct,
                                        rank=rank, hw=hw, protocol=protocol)
     roundtrip = lat["recv"] + lat["comp"] * eff_scale + lat["send"]
@@ -120,8 +140,9 @@ def disagg_stall_seconds(cfg: ModelConfig, placement: Placement, batch: int,
     bottleneck = max(lat["recv"], lat["comp"] * eff_scale, lat["send"])
     layer_base = base_step_seconds(cfg, batch, p, 0, hw, 0) / max(
         cfg.n_layers, 1)
+    capacity = max(placement.y, 1) * max(n_server_replicas, 1)
     layer_eff = max(layer_base + stall,
-                    n_instances * bottleneck / max(placement.y, 1))
+                    n_instances * bottleneck / capacity)
     return (layer_eff - layer_base) * cfg.n_layers
 
 
@@ -138,37 +159,44 @@ class Simulation:
     observationally identical to ``metrics.summarize`` and to streaming
     consumers. ``simulate`` below is the legacy batch wrapper."""
 
-    def __init__(self, cfg: ModelConfig, sim: SimConfig):
+    def __init__(self, cfg: ModelConfig, sim: SimConfig,
+                 server_pool: Optional[ServerPool] = None):
         self.cfg = cfg
         self.sim = sim
         self.rank = sim.lora_rank or cfg.lora_rank
-        adapter_bytes = cfg.lora_adapter_bytes(self.rank)
+        self._adapter_bytes = cfg.lora_adapter_bytes(self.rank)
         pop = zipf_popularity(sim.n_adapters, sim.zipf_s)
         self.instances = [InstanceState(i, sim.max_batch)
                           for i in range(sim.n_instances)]
+        self._cache_slots = sim.server_cache_slots if sim.disaggregated \
+            else sim.instance_cache_slots
         if sim.disaggregated:
-            self.caches = {-1: LoRACache(sim.server_cache_slots,
-                                         adapter_bytes, cfg.n_layers,
-                                         sim.hw.host_bw,
-                                         layerwise=sim.layerwise_loading,
-                                         prefetch=sim.layerwise_loading)}
+            self.caches = {-1: self._mk_cache()}
             self.owner = None
             self.placement = Placement.make(
                 "hybrid", max(sim.server_gpus, 1), sim.n_adapters,
                 cfg.n_layers, max(cfg.n_experts, 1), x=sim.placement_x)
+            # the analytic replica pool: slot tables only; the step model
+            # prices its capacity via n_server_replicas in the stall term
+            self.server_pool = server_pool or ServerPool.analytic(
+                max(sim.server_replicas, 1), sim.server_cache_slots)
         else:
-            self.caches = {i: LoRACache(sim.instance_cache_slots,
-                                        adapter_bytes, cfg.n_layers,
-                                        sim.hw.host_bw,
-                                        layerwise=sim.layerwise_loading,
-                                        prefetch=sim.layerwise_loading)
+            self.caches = {i: self._mk_cache()
                            for i in range(sim.n_instances)}
             self.owner = assign_adapters_greedy(sim.n_adapters, pop,
                                                 sim.n_instances)
             self.placement = None
+            self.server_pool = None
         self.sched = Scheduler(self.instances, self.caches, self.owner,
                                policy=sim.policy,
                                shared_cache=sim.disaggregated)
+        self._scaler: Optional[Autoscaler] = None
+        if sim.autoscale is not None:
+            self._scaler = Autoscaler(
+                sim.autoscale, cfg, max_batch=sim.max_batch,
+                gpus_per_instance=sim.gpus_per_instance, hw=sim.hw,
+                has_server=sim.disaggregated)
+        self._control_pending = False
         # event queue: (time, seq, kind, payload)
         self._ev: List[Tuple[float, int, str, object]] = []
         self._seq = 0
@@ -177,6 +205,7 @@ class Simulation:
         self._by_rid: Dict[int, Request] = {}
         self.batch_log: List[Tuple[float, int]] = []
         self.active_log: List[Tuple[float, int]] = []
+        self.scale_log: List[Tuple[float, str, int]] = []
         self._stepping = {i.iid: False for i in self.instances}
         self._out: List[Tuple[float, int, str]] = []   # current-step events
         self._retry_at: Dict[int, Optional[float]] = \
@@ -185,6 +214,12 @@ class Simulation:
         # fault events are pushed lazily on the first step so a batch
         # wrapper's arrivals keep their legacy heap tie-break priority
         self._faults_pushed = False
+
+    def _mk_cache(self) -> LoRACache:
+        return LoRACache(self._cache_slots, self._adapter_bytes,
+                         self.cfg.n_layers, self.sim.hw.host_bw,
+                         layerwise=self.sim.layerwise_loading,
+                         prefetch=self.sim.layerwise_loading)
 
     # -------------------------- client surface ------------------------- #
     def submit(self, req: Request) -> Request:
@@ -229,6 +264,7 @@ class Simulation:
                 self._push(t, "recover", iid)
             for t, iid, f in self.sim.stragglers:
                 self._push(t, "slow", (iid, f))
+            self._arm_control(self.now)
         if self.idle():
             return []
         self._out = []
@@ -249,6 +285,7 @@ class Simulation:
             "requests": list(self.requests),
             "batch_log": self.batch_log,
             "active_adapters_log": self.active_log,
+            "scale_log": list(self.scale_log),
             "cache_stats": {
                 k: {"hits": c.hits, "misses": c.misses,
                     "evictions": c.evictions}
@@ -275,22 +312,35 @@ class Simulation:
                               sim.step_overhead)
         dist = self._distinct_adapters(inst)
         if sim.disaggregated:
+            live = sum(1 for i in self.instances if i.alive)
             t += disagg_stall_seconds(
                 cfg, self.placement, b, sim.gpus_per_instance,
-                sim.n_instances, dist, self.rank, sim.hw, sim.overlap,
-                sim.fast_kernels, sim.protocol)
+                max(live, 1), dist, self.rank, sim.hw, sim.overlap,
+                sim.fast_kernels, sim.protocol,
+                eff_scale_slow=sim.slow_kernel_eff_scale,
+                n_server_replicas=self.server_pool.n_replicas)
         else:
             t += coupled_lora_seconds(cfg, b, sim.gpus_per_instance, dist,
                                       self.rank, sim.hw, sim.fast_kernels)
         return t * inst.slowdown
 
     def _kick(self, iid: int, now: float):
-        inst = self.sched.instances[iid]
+        inst = self.sched.instances.get(iid)
+        if inst is None:            # retired: a stale kick event fired
+            return
         if self._stepping[iid] or not inst.alive:
             return
-        for r in self.sched.admit(iid, now):
+        admitted = self.sched.admit(iid, now)
+        if admitted and self.server_pool is not None:
+            # delta-based per-replica residency sync (same invariant as the
+            # cluster plane: an admitted adapter sits on its home replica)
+            self.server_pool.sync(self.caches[-1])
+        for r in admitted:
             self._emit(now, r.rid, "prefill")
         if inst.batch == 0:
+            if inst.draining:
+                self._retire(inst)      # drained dry
+                return
             self._schedule_load_retry(iid, now)
             return
         self._stepping[iid] = True
@@ -324,8 +374,9 @@ class Simulation:
         self._push(t, "kick", iid)
 
     def _pick_instance(self, now: float) -> Optional[int]:
-        """Disaggregated: least-loaded alive instance (straggler-aware)."""
-        alive = [i for i in self.instances if i.alive]
+        """Disaggregated: least-loaded admitting instance (straggler- and
+        drain-aware)."""
+        alive = [i for i in self.instances if i.alive and not i.draining]
         if not alive:
             return None
         if self.sim.straggler_mitigation:
@@ -334,12 +385,92 @@ class Simulation:
             alive = pref or alive
         return min(alive, key=lambda i: (i.batch, i.slowdown)).iid
 
+    # ------------------------- elastic control ------------------------- #
+    def _arm_control(self, now: float):
+        """Schedule the next autoscaler tick (idempotent)."""
+        if self._scaler is None or self._control_pending:
+            return
+        self._control_pending = True
+        self._push(now + self._scaler.policy.control_interval,
+                   "control", None)
+
+    def _admitting(self) -> List[InstanceState]:
+        return [i for i in self.instances if i.alive and not i.draining]
+
+    def _retire(self, inst: InstanceState):
+        """Remove a drained-dry instance entirely (see Cluster's twin):
+        elastic sessions cycle capacity, and dead entries would leak scan
+        work in every step_end kick loop. ``_stepping``/``_retry_at`` keep
+        tombstones — they mint the next fresh iid."""
+        inst.alive = False
+        if inst in self.instances:
+            self.instances.remove(inst)
+        self.sched.instances.pop(inst.iid, None)
+        self.sched.queues.pop(inst.iid, None)
+        self.caches.pop(inst.iid, None)
+
+    def _do_control(self, now: float):
+        in_flight = sum(i.batch for i in self.instances if i.alive)
+        actions = self._scaler.control(
+            now, in_flight=in_flight, queued=self.sched.queue_len(),
+            cache_slots=self._cache_slots,
+            n_instances=len(self._admitting()),
+            n_replicas=self.server_pool.n_replicas
+            if self.server_pool else 1)
+        for act in actions:
+            self._apply_action(act, now)
+            self.scale_log.append((now, act.kind, act.target))
+            self._emit(now, -1, f"scale:{act.kind}")
+
+    def _apply_action(self, act: ScaleAction, now: float):
+        sim, pol = self.sim, self._scaler.policy
+        if act.kind == "resize_cache":
+            self._cache_slots = max(act.target, 1)
+            for c in self.caches.values():
+                c.resize(self._cache_slots, now)
+            if self.server_pool is not None:
+                self.server_pool.resize_slots(self._cache_slots)
+                self.server_pool.sync(self.caches[-1])  # flush evictions
+        elif act.kind == "add_instance":
+            while len(self._admitting()) < min(act.target,
+                                               pol.max_instances):
+                iid = max(self._stepping) + 1
+                inst = InstanceState(iid, sim.max_batch)
+                self.instances.append(inst)
+                self._stepping[iid] = False
+                self._retry_at[iid] = None
+                cache = pop = None
+                if not sim.disaggregated:
+                    cache = self._mk_cache()
+                    pop = self._scaler.popularity(sim.n_adapters)
+                self.sched.add_instance(inst, cache=cache, popularity=pop,
+                                        now=now)
+                self._kick(iid, now)
+        elif act.kind == "drain_instance":
+            floor = max(act.target, pol.min_instances, 1)
+            while len(self._admitting()) > floor:
+                cand = pick_drain_candidate(self.instances,
+                                            self.sched.queues)
+                self.sched.drain_instance(cand.iid, now)
+                if cand.batch == 0:
+                    self._retire(cand)      # nothing in flight
+                elif not self._stepping[cand.iid]:
+                    self._kick(cand.iid, now)   # finish the in-flight work
+        elif act.kind in ("add_replica", "remove_replica"):
+            if self.server_pool is None:
+                return                      # coupled plane has no replicas
+            if converge_replicas(self.server_pool, act.target):
+                self.server_pool.sync(self.caches[-1])  # full re-route
+
     def _handle(self, kind: str, payload, now: float):
         sim, sched = self.sim, self.sched
         if kind == "arrive":
             if payload.cancelled:       # cancelled before it ever arrived
                 return
             sched.enqueue(payload, now)
+            if self._scaler is not None:
+                self._scaler.observe_arrival(now, payload.adapter_id)
+                self._arm_control(now)
             self._emit(now, payload.rid, "queued")
             if sim.disaggregated:
                 iid = self._pick_instance(now)
@@ -347,6 +478,15 @@ class Simulation:
                     self._kick(iid, now)
             else:
                 self._kick(int(self.owner[payload.adapter_id]), now)
+        elif kind == "control":
+            self._control_pending = False
+            self._do_control(now)
+            if any(r.finish < 0 and not r.cancelled for r in self.requests):
+                self._arm_control(now)
+            # freshly added instances may be able to pull queued work
+            for inst in self._admitting():
+                if not self._stepping[inst.iid]:
+                    self._kick(inst.iid, now)
         elif kind == "cancel":
             req = self._by_rid[payload]
             if req.finish >= 0 or req.cancelled:
@@ -354,23 +494,28 @@ class Simulation:
             sched.cancel(req, now)      # also sets req.cancelled
             self._emit(now, req.rid, "cancelled")
         elif kind == "fail":
-            sched.requeue_instance(payload, now)
+            if payload in sched.instances:      # retired: nothing to fail
+                sched.requeue_instance(payload, now)
         elif kind == "recover":
             reload_t = 2 * self.cfg.param_count() / sim.hw.host_bw
             self._push(now + reload_t, "recovered", payload)
         elif kind == "recovered":
-            sched.instances[payload].alive = True
-            self._kick(payload, now)
+            if payload in sched.instances:
+                sched.instances[payload].alive = True
+                self._kick(payload, now)
         elif kind == "slow":
             iid, f = payload
-            sched.instances[iid].slowdown = f
+            if iid in sched.instances:
+                sched.instances[iid].slowdown = f
         elif kind == "kick":
             self._retry_at[payload] = None
             self._kick(payload, now)
         elif kind == "step_end":
             iid = payload
-            inst = sched.instances[iid]
+            inst = sched.instances.get(iid)
             self._stepping[iid] = False
+            if inst is None:                    # retired mid-event
+                return
             if not inst.alive:
                 return
             stepped = list(inst.running)    # every running row earns a token
@@ -379,12 +524,15 @@ class Simulation:
                 self._emit(now, r.rid, "token")
             for r in finished:
                 self._emit(now, r.rid, "finished")
+                if self._scaler is not None:
+                    self._scaler.observe_finish(now, r.finish - r.arrival)
             self.batch_log.append((now, inst.batch))
             if sim.disaggregated:
                 self.active_log.append((now, self.caches[-1].active_count()))
             self._kick(iid, now)
-            # idle instances may now be able to pull queued work
-            for other in self.instances:
+            # idle instances may now be able to pull queued work (iterate a
+            # copy: a kick can retire a drained-dry instance mid-loop)
+            for other in list(self.instances):
                 if other.iid != iid and not self._stepping[other.iid]:
                     self._kick(other.iid, now)
 

@@ -54,6 +54,22 @@ def zipf_popularity(n_adapters: int, s: float = 1.2) -> np.ndarray:
     return w / w.sum()
 
 
+def generate_load_shift(n_adapters: int, lo_rate: float, hi_rate: float,
+                        t_shift: float, duration: float,
+                        seed_lo: int = 1, seed_hi: int = 2) -> List[Request]:
+    """Two-phase Poisson workload: ``lo_rate`` until ``t_shift``, then
+    ``hi_rate`` until ``duration`` — the traffic step the elastic-
+    provisioning benchmark, example, and tests all share (one definition,
+    so the scenario they cite cannot silently diverge)."""
+    lo = generate(n_adapters, rate=lo_rate, duration=t_shift, seed=seed_lo)
+    hi = generate(n_adapters, rate=hi_rate, duration=duration - t_shift,
+                  seed=seed_hi)
+    for r in hi:
+        r.rid += 10_000
+        r.arrival += t_shift
+    return lo + hi
+
+
 def generate(n_adapters: int, rate: float, duration: float,
              zipf_s: float = 1.2, seed: int = 0,
              mean_prompt: int = 512, mean_output: int = 192,

@@ -10,6 +10,7 @@ EXPECTED_EXPORTS = sorted([
     "ServeSystem", "RequestHandle", "RequestState", "Event",
     "SLOClass", "INTERACTIVE", "BATCH", "TERMINAL_STATES",
     "build_system", "Request", "Summary",
+    "AutoscalePolicy", "Autoscaler", "ScaleAction", "ServerPool",
 ])
 
 EXPECTED_STATES = ["QUEUED", "PREFILLING", "DECODING", "FINISHED",

@@ -1,0 +1,447 @@
+"""Elastic LoRA-Server pool + online SLO-driven provisioning (paper §4.2 /
+Algorithm 1 as a runtime control loop): ServerPool affinity routing and
+delta-based residency sync, Autoscaler targets and hysteresis, elastic
+scheduler primitives, and the two acceptance claims — (a) scaling events
+never change any request's token stream (coupled == disagg ==
+elastic-disagg, dense + paged, real JAX plane) and (b) a load-shift
+scenario where the autoscaler raises SLO attainment over the static
+single-instance baseline (analytic plane)."""
+import copy
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import workload
+from repro.serving.autoscaler import Autoscaler, AutoscalePolicy, ScaleAction
+from repro.serving.cache import LoRACache
+from repro.serving.server_pool import ServerPool
+
+
+# --------------------------- ServerPool ---------------------------------- #
+def _mk_cache(slots=8):
+    return LoRACache(slots, adapter_bytes=0.0, n_layers=4,
+                     layerwise=False, prefetch=False)
+
+
+def test_server_pool_delta_sync_and_noop_rounds():
+    """Satellite: residency sync must be DELTA-based — a round with no
+    cache mutation reconciles nothing, and only mutated ids are touched."""
+    cache = _mk_cache(4)
+    pool = ServerPool.analytic(2, 4)
+    cache.admit(0, 0.0)
+    cache.admit(1, 0.0)
+    assert pool.sync(cache) == 2            # both dirty ids reconciled
+    pool.check_consistent(cache)
+    assert pool.sync(cache) == 0            # nothing changed: no-op
+    assert pool.sync_noops == 1
+    cache.admit(5, 1.0)                     # one insertion
+    assert pool.sync(cache) == 1
+    pool.check_consistent(cache)
+    # eviction propagates: fill the cache, evict LRU, delta carries both
+    cache.admit(2, 2.0)
+    cache.admit(3, 3.0)
+    cache.admit(9, 4.0)                     # evicts adapter 0 (LRU)
+    assert not cache.is_resident(0)
+    n = pool.sync(cache)
+    assert n >= 2                           # the insert + the eviction
+    assert not pool.is_resident(0) and pool.is_resident(9)
+    pool.check_consistent(cache)
+
+
+def test_server_pool_affinity_partitions_adapters():
+    cache = _mk_cache(8)
+    pool = ServerPool.analytic(3, 8)
+    for aid in (0, 1, 2, 3, 4, 5):
+        cache.admit(aid, 0.0)
+    pool.sync(cache)
+    for aid in (0, 1, 2, 3, 4, 5):
+        home = aid % 3
+        for i, rep in enumerate(pool.replicas):
+            assert rep.is_resident(aid) == (i == home)
+    pool.check_consistent(cache)
+
+
+def test_server_pool_resize_forces_full_rehome():
+    """add/remove_replica re-routes the affinity map; the forced full sync
+    must move every resident adapter to its new home replica."""
+    cache = _mk_cache(8)
+    pool = ServerPool.analytic(1, 8)
+    for aid in range(5):
+        cache.admit(aid, 0.0)
+    pool.sync(cache)
+    assert all(pool.replicas[0].is_resident(a) for a in range(5))
+    pool.add_replica()
+    pool.sync(cache)                        # full re-home
+    pool.check_consistent(cache)
+    assert pool.replicas[1].is_resident(1) and pool.replicas[1].is_resident(3)
+    assert not pool.replicas[0].is_resident(1)
+    pool.remove_replica()
+    pool.sync(cache)
+    pool.check_consistent(cache)
+    assert all(pool.replicas[0].is_resident(a) for a in range(5))
+    with pytest.raises(RuntimeError):
+        pool.remove_replica()               # never below one replica
+
+
+def test_rebalance_preserves_fcfs_arrival_order():
+    """Regression: rerouted queued requests were APPENDED to the new
+    owner's queue, behind later arrivals — an FCFS priority inversion on
+    every rebalance/drain."""
+    from repro.serving.scheduler import InstanceState, Scheduler
+    from repro.serving.workload import Request
+    insts = [InstanceState(0, max_batch=4), InstanceState(1, max_batch=1)]
+    caches = {i: _mk_cache(4) for i in (0, 1)}
+    owner = np.array([0, 1])
+    sched = Scheduler(insts, caches, owner)
+    early = Request(0, 0, arrival=1.0, prompt_len=2, output_len=2)
+    late = Request(1, 1, arrival=9.0, prompt_len=2, output_len=2)
+    sched.enqueue(early, 1.0)               # queued on instance 0
+    sched.enqueue(late, 9.0)                # queued on instance 1
+    # rebalance hands adapter 0 to instance 1 (it is idle, 0 never was)
+    insts[0].running = [Request(9, 0, 0.0, 2, 2)] * 3
+    sched.rebalance_owners(np.array([1.0, 0.5]), 9.0)
+    assert int(owner[0]) == 1
+    # with one slot, the EARLIER arrival must be admitted first
+    got = sched.admit(1, 10.0)
+    assert [r.rid for r in got] == [0]
+
+
+def test_cache_resize_shrink_converges_after_pins_release():
+    """Regression: with every resident pinned, resize() rightly evicts
+    nothing — but admit()'s old one-in-one-out eviction then held the
+    count above the shrunken capacity FOREVER, even after all pins
+    released. The first post-release insert must drain below capacity."""
+    c = _mk_cache(8)
+    for a in range(8):
+        c.admit(a, 0.0)
+        c.pin(a)
+    assert c.resize(3, 1.0) == []           # pins block every eviction
+    assert len(c.resident) == 8             # transient over-capacity: ok
+    for a in range(8):
+        c.unpin(a, 2.0)
+    assert c.admit(100, 3.0) is not None    # pre-fix: len stayed 8
+    assert len(c.resident) == 3
+
+
+# ---------------------------- Autoscaler ---------------------------------- #
+MX = get_config("mixtral-8x7b")
+
+
+def test_scale_action_validates_kind():
+    with pytest.raises(ValueError):
+        ScaleAction("explode", 3)
+    assert ScaleAction("add_instance", 3).target == 3
+
+
+def test_autoscaler_scales_up_immediately_and_down_with_patience():
+    pol = AutoscalePolicy(control_interval=5.0, window=30.0,
+                          max_instances=8, scale_down_patience=2,
+                          target_utilization=1.0)
+    sc = Autoscaler(pol, MX, max_batch=8)
+    for i in range(40):                     # burst: 40 arrivals by t=10
+        sc.observe_arrival(10.0 * i / 40, i % 16)
+    acts = sc.control(10.0, in_flight=30, queued=10, cache_slots=16,
+                      n_instances=1, n_replicas=1)
+    kinds = {a.kind: a for a in acts}
+    assert "add_instance" in kinds          # LB=40 over 8 slots -> 5 insts
+    assert kinds["add_instance"].target == 5
+    # load vanishes: first low reading must NOT scale down (patience=2) ...
+    acts = sc.control(15.0, in_flight=2, queued=0, cache_slots=16,
+                      n_instances=5, n_replicas=1)
+    assert not any(a.kind == "drain_instance" for a in acts)
+    # ... the second one does
+    acts = sc.control(20.0, in_flight=2, queued=0, cache_slots=16,
+                      n_instances=5, n_replicas=1)
+    drains = [a for a in acts if a.kind == "drain_instance"]
+    assert drains and drains[0].target < 5
+    assert len(sc.history) == 3
+    # rate-limited: a call before the next interval is a no-op
+    assert sc.control(21.0, in_flight=2, queued=0, cache_slots=16,
+                      n_instances=5, n_replicas=1) == []
+
+
+def test_autoscaler_cache_target_covers_pinned_distinct():
+    """The cache floor must cover the expected DISTINCT in-flight adapters
+    (each pins an unevictable slot), not just the Poisson residency M*."""
+    pol = AutoscalePolicy(control_interval=1.0, window=30.0,
+                          max_cache_slots=512, resize_deadband=0.0)
+    sc = Autoscaler(pol, MX, max_batch=128)
+    rng = np.random.default_rng(0)
+    for i in range(300):                    # uniform over 64 adapters
+        sc.observe_arrival(i * 0.1, int(rng.integers(0, 64)))
+    acts = sc.control(30.0, in_flight=100, queued=0, cache_slots=4,
+                      n_instances=1, n_replicas=1)
+    resize = [a for a in acts if a.kind == "resize_cache"]
+    assert resize
+    # ~uniform 64-adapter load at LB>=100 concurrency pins most adapters
+    assert resize[0].target >= 50
+
+
+# ------------------- sim plane: load shift end to end --------------------- #
+def _shift_system(autoscale):
+    """The SAME scenario CI's provisioning lane measures — imported from
+    the bench so this test asserts on the published numbers' setup."""
+    from benchmarks.bench_autoscaler import LOAD_SHIFT, load_shift_config
+    from repro.serving.api import build_system
+    system = build_system(load_shift_config(autoscale), MX)
+    system.submit_workload(
+        [copy.copy(r)
+         for r in workload.generate_load_shift(**LOAD_SHIFT)])
+    system.drain()
+    return system
+
+
+def test_sim_load_shift_autoscaler_raises_slo_attainment():
+    """Acceptance: traffic steps 4 -> 22 req/s at t=40; the static
+    single-instance system collapses while the elastic one provisions
+    instances + cache online and recovers the SLOs. Scaling must not
+    change any request's token-event stream (sim tokens = one event per
+    decoded token)."""
+    from benchmarks.bench_autoscaler import load_shift_policy
+    static = _shift_system(None)
+    elastic = _shift_system(load_shift_policy())
+    s_static = static.summary(duration=120.0)
+    s_elastic = elastic.summary(duration=120.0)
+    # token-stream invariance on the analytic plane: every request finishes
+    # with exactly output_len token events under BOTH provisioning modes
+    for system in (static, elastic):
+        for h in system.handles.values():
+            assert h.state.name == "FINISHED"
+            assert h.n_tokens == h.request.output_len
+    # the autoscaler actually scaled...
+    hist = elastic.scale_history()
+    assert hist and max(h["targets"]["instances"] for h in hist) >= 2
+    assert max(h["targets"]["cache_slots"] for h in hist) > 24
+    assert elastic.scale_events and all(
+        ev.kind.startswith("scale:") and ev.rid == -1
+        for ev in elastic.scale_events)
+    # ... and it paid off: higher attainment over the full run, and a
+    # decisively recovered steady state after the shift
+    assert s_elastic.slo_attainment > s_static.slo_attainment + 0.3
+    st_steady = static.summary(duration=120.0, warmup=70 / 120.0)
+    el_steady = elastic.summary(duration=120.0, warmup=70 / 120.0)
+    assert el_steady.slo_attainment > st_steady.slo_attainment + 0.5
+    assert el_steady.p95_ttft < st_steady.p95_ttft / 10
+    # the analytic replica pool stayed consistent throughout
+    sim = elastic.backend.sim
+    sim.server_pool.check_consistent(sim.caches[-1])
+    assert sim.server_pool.sync_noops > 0   # delta sync skipped quiet rounds
+
+
+def test_sim_scale_down_drains_instances_without_losing_requests():
+    """Start over-provisioned at trickle load: the autoscaler must drain
+    surplus instances (graceful: in-flight work finishes in place) and
+    every request still completes."""
+    from repro.serving.api import ServeConfig, build_system
+    pol = AutoscalePolicy(control_interval=5.0, window=20.0,
+                          min_instances=1, max_instances=4,
+                          scale_down_patience=1, max_cache_slots=64)
+    sc = ServeConfig(backend="sim", disaggregated=True, n_instances=4,
+                     max_batch=64, adapter_cache_slots=32, n_adapters=32,
+                     duration=60.0, server_gpus=8, autoscale=pol)
+    system = build_system(sc, MX)
+    system.submit_workload([copy.copy(r) for r in
+                            workload.generate(32, rate=2, duration=60,
+                                              seed=3)])
+    system.drain()
+    for h in system.handles.values():
+        assert h.state.name == "FINISHED"
+        assert h.n_tokens == h.request.output_len
+    sim = system.backend.sim
+    assert len(sim._admitting()) < 4        # surplus instances retired
+    assert any(k == "drain_instance" for _, k, _ in sim.scale_log)
+
+
+# ------------- cluster plane: real JAX, tokens are the contract ----------- #
+@pytest.fixture(scope="module")
+def cluster_setup():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.adapter import init_mixed_rank_pool
+    from repro.models import model as model_mod
+    cfg = dataclasses.replace(get_config("qwen3-moe-235b-a22b").reduced(),
+                              lora_targets=("gate", "up", "down"),
+                              lora_rank=8)
+    key = jax.random.PRNGKey(0)
+    params = model_mod.init_params(cfg, key, dtype="float32")
+    pool = init_mixed_rank_pool(cfg, [2, 8, 4, 8], jax.random.fold_in(key, 1),
+                                dtype=jnp.float32)
+    return cfg, params, pool
+
+
+SPECS = [(0, 0.0, 5, 6), (1, 0.0, 4, 4), (2, 2.0, 6, 5), (3, 5.0, 3, 4)]
+
+AGGRESSIVE = AutoscalePolicy(control_interval=2.0, window=10.0,
+                             min_instances=1, max_instances=3,
+                             min_cache_slots=2, max_cache_slots=4,
+                             max_replicas=2, scale_down_patience=1,
+                             resize_deadband=0.0)
+
+
+def _run_cluster(setup, disagg, paged=False, autoscale=None,
+                 server_replicas=1):
+    from repro.serving.api import ServeConfig, build_system
+    cfg, params, pool = setup
+    sc = ServeConfig(backend="cluster", disaggregated=disagg, n_instances=1,
+                     max_batch=2, max_len=32, adapter_cache_slots=4,
+                     paged=paged, page_size=4, n_pages=8, prefill_chunk=8,
+                     autoscale=autoscale, server_replicas=server_replicas)
+    system = build_system(sc, cfg, params=params, pool=pool)
+    handles = [system.submit(adapter_id=a, arrival=t, prompt_len=p,
+                             max_new_tokens=o) for a, t, p, o in SPECS]
+    system.drain()
+    assert all(h.state.name == "FINISHED" for h in handles)
+    return {h.rid: h.tokens for h in handles}, system
+
+
+@pytest.fixture(scope="module")
+def baseline_tokens(cluster_setup):
+    tokens, _ = _run_cluster(cluster_setup, disagg=False)
+    return tokens
+
+
+@pytest.mark.parametrize("disagg,paged", [(False, False), (True, True)],
+                         ids=["coupled_dense", "disagg_paged"])
+def test_cluster_tokens_invariant_under_autoscaling(cluster_setup,
+                                                    baseline_tokens,
+                                                    disagg, paged):
+    """THE tentpole invariant: an aggressive autoscaler (2-round control
+    interval, tiny bounds, zero deadband — it resizes caches and scales
+    while requests are mid-decode) must not change a single token relative
+    to the static run, in either adapter mode or KV layout."""
+    tokens, system = _run_cluster(cluster_setup, disagg, paged=paged,
+                                  autoscale=AGGRESSIVE)
+    assert tokens == baseline_tokens
+    assert system.scale_history()           # the control loop really ran
+    assert system.scale_events              # ... and surfaced as events
+
+
+def test_cluster_multi_replica_pool_tokens_identical(cluster_setup,
+                                                     baseline_tokens):
+    """coupled == disagg == elastic-disagg: a 2-replica ServerPool
+    (affinity-partitioned adapters, per-replica residency sync) emits
+    bit-identical tokens to the single-server and coupled paths."""
+    tokens, system = _run_cluster(cluster_setup, disagg=True,
+                                  server_replicas=2)
+    assert tokens == baseline_tokens
+    cluster = system.backend.cluster
+    pool = cluster.server_pool
+    assert pool.n_replicas == 2
+    pool.check_consistent(cluster._caches[-1])
+    assert pool.sync_inserts >= 2           # adapters really spread out
+
+
+def test_cluster_drain_while_requests_in_flight(cluster_setup,
+                                                baseline_tokens):
+    """Satellite: draining an instance with requests mid-decode must let
+    them finish in place (identical tokens), reroute its queue, and retire
+    the instance (KV released) once empty."""
+    from repro.serving.cluster import Cluster, ClusterConfig
+    from repro.serving.server_pool import ServerPool
+    from repro.serving.workload import Request
+    cfg, params, pool = cluster_setup
+    sp = ServerPool.build(cfg, pool, cache_slots=4, n_replicas=1)
+    ccfg = ClusterConfig(n_instances=2, n_slots=2, max_len=32,
+                         disaggregated=True, adapter_cache_slots=4)
+    cluster = Cluster(cfg, params, ccfg, pool, server_pool=sp)
+    reqs = [Request(i, a, arrival=t, prompt_len=p, output_len=o)
+            for i, (a, t, p, o) in enumerate(SPECS)]
+    cluster.open(reqs)
+    for r in reqs:
+        cluster.submit(r)
+    for _ in range(2):                      # rids 0/1 are mid-decode
+        cluster.step_round()
+    busy = max(cluster._instances.values(), key=lambda i: i.batch)
+    assert busy.batch > 0                   # genuinely in flight
+    n_before = {rid: len(t) for rid, t in cluster.tokens.items()}
+    cluster.sched.drain_instance(busy.iid, cluster.now)
+    while not cluster.step_round()["idle"]:
+        pass
+    assert cluster.tokens == baseline_tokens
+    for r in reqs:
+        assert r.finish >= 0
+    # the in-flight requests kept decoding in place (no restart)
+    for rid, n in n_before.items():
+        assert len(cluster.tokens[rid]) >= n
+    # the drained instance retired COMPLETELY: engine, instance record,
+    # and scheduler entries are gone (elastic sessions must not leak a
+    # dead engine per scale-in cycle)
+    assert not busy.alive
+    assert busy.iid not in cluster.engines
+    assert busy.iid not in cluster._instances
+    assert busy.iid not in cluster.sched.instances
+
+
+def test_legacy_server_shim_supports_add_replica(cluster_setup):
+    """Regression: wrapping a legacy ``server=LoRAServer(...)`` into a
+    1-replica pool without a factory made the autoscaler's first
+    add_replica action raise mid-serve. The shim must clone the server's
+    config as the factory."""
+    import jax.numpy as jnp
+    from repro.core.lora_server import LoRAServer, ServerConfig
+    from repro.serving.cluster import Cluster, ClusterConfig
+    cfg, params, pool = cluster_setup
+    server = LoRAServer(cfg, ServerConfig(m=1, x=1, y=1, cache_slots=4,
+                                          rank=8), dtype=jnp.float32)
+    cluster = Cluster(cfg, params,
+                      ClusterConfig(disaggregated=True,
+                                    adapter_cache_slots=4),
+                      pool, server=server)
+    rep = cluster.server_pool.add_replica()     # pre-fix: RuntimeError
+    assert cluster.server_pool.n_replicas == 2
+    assert rep.M == server.M
+
+
+def test_cluster_resize_action_flushes_pool_evictions(cluster_setup):
+    """Regression: a resize_cache shrink evicted from the LoRACache but
+    left the weights resident in the replica slot pools until the next
+    admission happened to sync — on a quiet stream, indefinitely."""
+    from repro.serving.autoscaler import ScaleAction
+    from repro.serving.cluster import Cluster, ClusterConfig
+    from repro.serving.server_pool import ServerPool
+    cfg, params, pool = cluster_setup
+    sp = ServerPool.build(cfg, pool, cache_slots=4, n_replicas=1)
+    cluster = Cluster(cfg, params,
+                      ClusterConfig(n_instances=1, n_slots=2, max_len=32,
+                                    disaggregated=True,
+                                    adapter_cache_slots=4),
+                      pool, server_pool=sp)
+    cluster.open()
+    cache = cluster._caches[-1]
+    cache.admit(0, 0.0)
+    cache.admit(1, 0.0)
+    cluster._sync_pool()
+    assert sp.is_resident(0) and sp.is_resident(1)
+    cluster._apply_action(ScaleAction("resize_cache", 1), 1.0)
+    sp.check_consistent(cache)                  # pre-fix: stale residents
+    assert sum(len(r.slot_of) for r in sp.replicas) == 1
+
+
+def test_open_caps_autoscaler_cache_target_at_replica_slots(cluster_setup):
+    """Regression: an autoscale max_cache_slots above the replicas'
+    physical slot capacity made the control loop chase an unreachable
+    target, re-emitting the same resize action every tick."""
+    from repro.serving.cluster import Cluster, ClusterConfig
+    from repro.serving.server_pool import ServerPool
+    cfg, params, pool = cluster_setup
+    sp = ServerPool.build(cfg, pool, cache_slots=4, n_replicas=1)
+    ccfg = ClusterConfig(n_instances=1, n_slots=2, max_len=32,
+                         disaggregated=True, adapter_cache_slots=4,
+                         autoscale=AutoscalePolicy(max_cache_slots=512))
+    cluster = Cluster(cfg, params, ccfg, pool, server_pool=sp)
+    cluster.open()
+    assert cluster._scaler.policy.max_cache_slots == 4
+
+
+def test_cluster_rejects_undersized_replica():
+    """A pool whose smallest replica cannot hold the shared cache must be
+    rejected up front (it would die mid-run during residency sync)."""
+    from repro.serving.cluster import Cluster, ClusterConfig
+    from repro.serving.server_pool import AnalyticReplica, ServerPool
+    sp = ServerPool([AnalyticReplica(2)])
+    with pytest.raises(ValueError, match="slots"):
+        Cluster(MX, None, ClusterConfig(disaggregated=True,
+                                        adapter_cache_slots=8),
+                pool=None, server_pool=sp)

@@ -179,6 +179,88 @@ def test_requeue_also_drains_dead_instance_queue():
     assert sorted(r.rid for r in got) == [0, 1, 2]
 
 
+def test_requeue_dead_instance_disaggregated_shared_queue():
+    """Satellite: requeue_instance under DISAGGREGATED (shared-cache) mode
+    — the running set must land back on the one global queue and be picked
+    up by a survivor; the dead instance's pins come back so the shared
+    cache stays evictable. (The existing regression tests cover coupled
+    mode only.)"""
+    insts = [InstanceState(0, max_batch=4), InstanceState(1, max_batch=4)]
+    shared = LoRACache(4, 0.0, 2, layerwise=False, prefetch=False)
+    sched = Scheduler(insts, {-1: shared}, owner=None, shared_cache=True)
+    reqs = [Request(i, i % 2, arrival=0.0, prompt_len=2, output_len=2)
+            for i in range(3)]
+    for r in reqs:
+        sched.enqueue(r, 0.0)
+    assert len(sched.admit(0, 0.0)) == 3    # all running on instance 0
+    assert shared.active_count() == 2       # adapters 0 and 1 pinned
+    sched.requeue_instance(0, 0.5)          # kill it
+    assert shared.active_count() == 0       # pins released with the requeue
+    assert len(sched.queues[-1]) == 3       # back on the GLOBAL queue
+    got = sched.admit(1, 1.0)               # survivor picks everything up
+    assert sorted(r.rid for r in got) == [0, 1, 2]
+    for t in (2.0, 3.0):
+        sched.step_complete(1, t)
+    assert all(r.finish >= 0 for r in reqs)
+    assert sched.admit(0, 2.0) == []        # the dead instance stays dead
+
+
+def test_drain_instance_keeps_running_reroutes_queued():
+    """Satellite: drain-while-requests-in-flight at the scheduler level —
+    queued work is rerouted (coupled: ownership reassigned exactly like
+    the fault path), the running set keeps decoding in place, and the
+    draining instance admits nothing new."""
+    insts = [InstanceState(0, max_batch=1), InstanceState(1, max_batch=4)]
+    caches = {i: LoRACache(4, 0.0, 2, layerwise=False, prefetch=False)
+              for i in (0, 1)}
+    owner = np.array([0, 1])
+    sched = Scheduler(insts, caches, owner)
+    reqs = [Request(i, 0, arrival=0.0, prompt_len=2, output_len=2)
+            for i in range(3)]
+    for r in reqs:
+        sched.enqueue(r, 0.0)
+    assert len(sched.admit(0, 0.0)) == 1    # rid 0 runs; rids 1,2 queue
+    in_flight = sched.drain_instance(0, 0.5)
+    assert in_flight == 1                   # rid 0 still decoding in place
+    assert insts[0].draining and insts[0].alive
+    assert int(owner[0]) == 1               # adapter 0 handed to survivor
+    assert len(sched.queues[0]) == 0
+    got = sched.admit(1, 1.0)               # survivor takes the queue
+    assert sorted(r.rid for r in got) == [1, 2]
+    assert sched.admit(0, 1.0) == []        # draining: admits nothing
+    fin = sched.step_complete(0, 1.0)       # rid 0 finishes where it ran
+    assert fin == []
+    fin = sched.step_complete(0, 2.0)
+    assert [r.rid for r in fin] == [0]
+    assert reqs[0].tokens_done == 2         # never restarted
+    for t in (2.0, 3.0):
+        sched.step_complete(1, t)
+    assert all(r.finish >= 0 for r in reqs)
+
+
+def test_slow_kernel_eff_scale_is_a_swept_knob():
+    """Satellite: the eff_scale=2.8 constant is now SimConfig's
+    ``slow_kernel_eff_scale`` — sweeping it changes the slow-kernel stall,
+    and with ``fast_kernels=True`` it is inert."""
+    from repro.core.placement import Placement
+    from repro.core.cost_model import V5E
+    pl = Placement.make("hybrid", 8, 64, CFG.n_layers,
+                        max(CFG.n_experts, 1), x=4)
+    kw = dict(p=8, n_instances=4, distinct=16.0, rank=16, hw=V5E,
+              overlap=True, protocol="push")
+    mild = S.disagg_stall_seconds(CFG, pl, 64, fast_kernels=False,
+                                  eff_scale_slow=1.0, **kw)
+    harsh = S.disagg_stall_seconds(CFG, pl, 64, fast_kernels=False,
+                                   eff_scale_slow=6.0, **kw)
+    assert harsh > mild
+    fast1 = S.disagg_stall_seconds(CFG, pl, 64, fast_kernels=True,
+                                   eff_scale_slow=1.0, **kw)
+    fast6 = S.disagg_stall_seconds(CFG, pl, 64, fast_kernels=True,
+                                   eff_scale_slow=6.0, **kw)
+    assert fast1 == fast6
+    assert S.SimConfig().slow_kernel_eff_scale == pytest.approx(2.8)
+
+
 def test_coupled_sim_failure_reassigns_to_survivors():
     """Simulator-level: a PERMANENT coupled-mode instance failure must not
     strand the adapters it owned (pre-fix, every request for those adapters
