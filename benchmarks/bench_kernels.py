@@ -1,12 +1,19 @@
 """Fig 19: LoRA kernel characterization across shrink (d->r) and expand
-(r->d) phases — BGMV vs SGMV.
+(r->d) phases — BGMV vs SGMV vs the fused shrink-expand kernel.
 
-Two views:
+Three views:
   (a) modeled v5e latency + HBM utilization from the kernels' exact byte/flop
       traffic (the quantity Fig 19 plots; wall-clock needs a TPU)
   (b) measured CPU wall time of the jitted ref path (relative ordering
       sanity: SGMV's aggregation must beat BGMV's per-token gather when
       tokens-per-adapter is high)
+  (c) the REAL Pallas kernels in interpret mode on tiny shapes (the body
+      runs per grid step in Python — correctness-bearing wall time, not a
+      perf number) with per-call host-dispatch counts: every Pallas kernel
+      here is already one launch per call; the 2-launch baseline they all
+      beat is the UNFUSED two-phase path (a shrink GEMM call, an HBM round
+      trip of the intermediate, then an expand GEMM call — the cuBLAS-style
+      batched-GEMM pair of Fig 19's generic baseline)
 """
 import time
 
@@ -16,7 +23,10 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
+from repro.kernels import bgmv as bgmv_mod
+from repro.kernels import fused as fused_mod
 from repro.kernels import ops, ref
+from repro.kernels import sgmv as sgmv_mod
 from repro.serving.workload import zipf_popularity
 
 
@@ -69,6 +79,58 @@ def main():
         t_sgmv = (time.perf_counter() - t0) / 3 * 1e6
         emit(f"fig19.{phase}.bgmv.cpu_us", round(t_bgmv, 0))
         emit(f"fig19.{phase}.sgmv.cpu_us", round(t_sgmv, 0))
+
+    pallas_interpret()
+
+
+def _timed(fn, reps=2):
+    fn().block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn().block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def pallas_interpret():
+    """The real Pallas kernels (interpret-safe on CPU: same blocking, body
+    executed per grid step) on tiny shapes, vs their refs, with the
+    host-dispatch count each path costs per hook invocation."""
+    Np, T, r, d = 8, 16, 64, 128
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (T, d), jnp.float32)
+    A = jax.random.normal(jax.random.fold_in(key, 1), (Np, d, r)) * .02
+    B = jax.random.normal(jax.random.fold_in(key, 2), (Np, r, d)) * .02
+    ids = jax.random.randint(jax.random.fold_in(key, 3), (T,), -1, Np)
+
+    us = _timed(lambda: bgmv_mod.bgmv(x, A, B, ids, interpret=True))
+    err = float(jnp.max(jnp.abs(bgmv_mod.bgmv(x, A, B, ids, interpret=True)
+                                - ref.bgmv_ref(x, A, B, ids))))
+    emit("fig19.pallas.bgmv.interpret_us", round(us, 0),
+         f"max_err={err:.1e},dispatches_per_call=1 (per-token gather)")
+
+    segs, seg_ad, _ = ops.build_segments(x, ids, Np, cap=8)
+    us = _timed(lambda: sgmv_mod.sgmv(segs, seg_ad, A, B, interpret=True))
+    err = float(jnp.max(jnp.abs(
+        sgmv_mod.sgmv(segs, seg_ad, A, B, interpret=True)
+        - ref.sgmv_ref(segs, seg_ad, A, B))))
+    emit("fig19.pallas.sgmv.interpret_us", round(us, 0),
+         f"max_err={err:.1e},dispatches_per_call=1")
+
+    eids = jnp.zeros((segs.shape[0],), jnp.int32)
+    us = _timed(lambda: fused_mod.fused_sgmv(segs, seg_ad, eids, A[:, None],
+                                             B[:, None], interpret=True))
+    err = float(jnp.max(jnp.abs(
+        fused_mod.fused_sgmv(segs, seg_ad, eids, A[:, None], B[:, None],
+                             interpret=True)
+        - ref.fused_sgmv_ref(segs, seg_ad, eids, A[:, None], B[:, None]))))
+    emit("fig19.pallas.fused.interpret_us", round(us, 0),
+         f"max_err={err:.1e},dispatches_per_call=1 (A-then-B, VMEM "
+         f"intermediate)")
+    # per-decode-step hook dispatch budget the serving transports pay
+    emit("fig19.dispatch.host_per_step", "2L+replicas",
+         "per-hook host round trips (transport='host')")
+    emit("fig19.dispatch.fused_per_step", 1,
+         "one jitted program (transport='fused')")
 
 
 if __name__ == "__main__":

@@ -21,7 +21,7 @@ from benchmarks import (bench_ablation, bench_adapter_memory,  # noqa: E402
                         bench_cache_ratio, bench_e2e_serving, bench_kernels,
                         bench_parallelism, bench_provisioning,
                         bench_roofline, bench_scale_instances,
-                        bench_scale_server, common)
+                        bench_scale_server, bench_transport, common)
 
 ALL = [
     ("fig1a_adapter_memory", bench_adapter_memory.main),
@@ -35,6 +35,7 @@ ALL = [
     ("fig12_scale_instances", bench_scale_instances.main),
     ("fig13_scale_server", bench_scale_server.main),
     ("fig11_e2e_serving", bench_e2e_serving.main),
+    ("transport_planes", bench_transport.main),
     ("roofline_table", bench_roofline.main),
 ]
 
@@ -56,6 +57,14 @@ PROVISIONING = [
     ("autoscaler_load_shift", bench_autoscaler.main),
 ]
 
+# CI transport lane: host-mediated vs GPU-initiated hook transport on the
+# real smoke cluster (per-step latency + measured dispatch counts + token
+# equality), the fused Pallas kernel's interpret check, and the analytic
+# launch-tail pricing — writes BENCH_transport.json as an artifact.
+TRANSPORT = [
+    ("transport_planes", bench_transport.main),
+]
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -67,13 +76,17 @@ def main(argv=None) -> None:
     lane.add_argument("--provisioning", action="store_true",
                       help="Algorithm-1 + autoscaler load-shift lane, "
                            "writes BENCH_provisioning.json")
+    lane.add_argument("--transport", action="store_true",
+                      help="host vs fused hook-transport lane, writes "
+                           "BENCH_transport.json")
     ap.add_argument("--out", default=None,
                     help="write captured rows as JSON (default "
                          "BENCH_smoke.json in --smoke mode)")
     args = ap.parse_args(argv)
 
     suite = SMOKE if args.smoke else \
-        PROVISIONING if args.provisioning else ALL
+        PROVISIONING if args.provisioning else \
+        TRANSPORT if args.transport else ALL
     timings = {}
     for name, fn in suite:
         if args.only and args.only not in name:
@@ -86,6 +99,7 @@ def main(argv=None) -> None:
 
     out_path = args.out or ("BENCH_smoke.json" if args.smoke else
                             "BENCH_provisioning.json" if args.provisioning
+                            else "BENCH_transport.json" if args.transport
                             else None)
     if out_path:
         with open(out_path, "w") as f:

@@ -117,6 +117,29 @@ def latency_breakdown(cfg: ModelConfig, placement: Placement, b: int, p: int,
             **{f"m_{k_}": v for k_, v in met.items()}}
 
 
+def transport_dispatch_seconds(n_layers: int, n_replicas: int,
+                               transport: str = "host",
+                               hook_launch_us: float = 0.0) -> float:
+    """Per-decode-step host launch tail of the hook transport plane.
+
+    Host-mediated dispatch pays 2 x n_layers hook calls per step, each
+    engaging (launching on) up to every server replica, plus the
+    gather/scatter/select overhead launches — matching the upper bound of
+    the REAL plane's measured ledger (``HostTransport`` bills one launch
+    per engaged replica per hook; see ``ServerPool.replica_launches``).
+    This is the CaraServe-style coordination overhead that stays on the
+    critical path however fast the kernels are. The GPU-initiated
+    ("fused") plane launches ONE program per step regardless of depth or
+    replica count. ``hook_launch_us`` is the per-launch cost; the default
+    0 keeps the legacy calibration (the baseline sims folded launch cost
+    into ``step_overhead``) — benches and ablations sweep it explicitly."""
+    if hook_launch_us <= 0:
+        return 0.0
+    if transport == "fused":
+        return hook_launch_us * 1e-6
+    return (2 * n_layers * max(n_replicas, 1) + 3) * hook_launch_us * 1e-6
+
+
 def base_moe_gemm_seconds(cfg: ModelConfig, b: int, p: int,
                           hw: Hardware = V5E, eff: float = 0.5) -> float:
     """Base model's grouped-GEMM time per MoE layer per instance (the budget

@@ -12,9 +12,17 @@ are added to the locally computed base GEMM outputs:
 This module is the *functional* data path (used by the CPU demo and the
 equivalence tests: disaggregated == coupled bit-for-bit). Wall-clock behavior
 under load (overlap, queueing, SLOs) is the simulator's job — the paper's own
-evaluation quantity. The per-layer Python loop here is the honest structure
-of the per-layer round trip; on real hardware each call is an async DMA +
-remote dispatch that overlaps the client's next GEMM.
+evaluation quantity.
+
+``server`` only needs the ``compute(hook, layer, rows, adapter_ids,
+expert_ids)`` contract, which is how ONE hook body serves BOTH transport
+planes (src/repro/transport/): under ``HostTransport`` it is a real
+``LoRAServer``/``ServerPool`` and the per-layer Python loop is the honest
+structure of the host-mediated round trip (each call an async DMA + remote
+dispatch on real hardware); under ``FusedTransport`` it is a traced
+``DeviceLoraView`` and the same loop unrolls into one jitted program with
+zero host round trips — sharing the body is what guarantees the two planes
+cannot diverge by a token.
 
 Two decode steps share one per-layer MoE hook body (``_moe_hooks_layer``):
 ``disagg_decode_step`` (static batch, scalar position — the legacy engine

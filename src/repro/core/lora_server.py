@@ -101,6 +101,10 @@ class LoRAServer:
         self.free_slots = list(range(M))
         self._steps = {}
         self._lut = None  # cached id->slot array, invalidated on insert/evict
+        # monotone residency/weight mutation counter: the fused transport
+        # fingerprints it to re-upload its device-resident LUT + stacked
+        # pools ONLY when something actually changed (never per token)
+        self.mutations = 0
 
     # ------------------------------------------------------------------ #
     # residency management (driven by serving.cache's policy)             #
@@ -119,6 +123,7 @@ class LoRAServer:
         slot = self.free_slots.pop(0)
         self.slot_of[adapter_id] = slot
         self._lut = None
+        self.mutations += 1
         if tensors is not None:
             self._write_slot(slot, tensors, layers)
         return slot
@@ -127,6 +132,7 @@ class LoRAServer:
         slot = self.slot_of.pop(adapter_id)
         self.free_slots.append(slot)
         self._lut = None
+        self.mutations += 1
 
     def _write_slot(self, slot: int, tensors, layers=None):
         """tensors: {'up_A': (L, E, d, r), ...} full-layer stacks."""
@@ -139,6 +145,7 @@ class LoRAServer:
                 s, li = l % self.y, l // self.y
                 buf = buf.at[s, li, slot].set(src[l].astype(buf.dtype))
             self.pool[name] = buf
+        self.mutations += 1
 
     # ------------------------------------------------------------------ #
     # compiled steps                                                      #

@@ -1,0 +1,83 @@
+"""Fused shrink-expand Pallas TPU kernel — the server-hook operator.
+
+The paper's "hardware-specialized LoRA kernels" pillar: one kernel runs the
+whole LoRA delta for a segment — shrink (d_in -> r) *and* expand
+(r -> d_out) — with the (cap, r) intermediate living in VMEM scratch. The
+two-phase alternative (a shrink kernel, then an expand kernel) would round-
+trip that intermediate through HBM AND cost a second host launch per hook;
+on the GPU-initiated transport the launch is the part that matters, so the
+fused form is what the ``FusedTransport`` models and what this kernel
+provides for TPU execution.
+
+Segments are grouped by (adapter slot, expert) — the LoRA-Server's actual
+operand layout (paper Fig. 7b: expert-specific adapter blocks) — so each
+grid step is two dense MXU GEMMs against ONE (slot, expert) weight block:
+
+  seg_rows: (S, cap, d_in)   seg_slot: (S,) int32 (-1 = padding segment)
+  seg_eid : (S,) int32       A: (M, E, d_in, r)   B: (M, E, r, d_out)
+  ->  (S, cap, d_out) f32
+
+Scalar-prefetched ``seg_slot``/``seg_eid`` steer the A/B BlockSpec index
+maps (the bgmv/sgmv gather idiom), so Mosaic DMAs exactly one (slot,
+expert) block from HBM per grid step, double-buffered against the previous
+segment's MXU work. VMEM per step: cap*d_in + d_in*r + cap*r (scratch) +
+r*d_out + cap*d_out floats — e.g. cap=64, d=8192, r=64: ~8.5 MB in f32,
+under the ~16 MB/core budget; ops.py pads r/d/cap to lane/sublane tiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(slots_ref, eids_ref, x_ref, a_ref, b_ref, o_ref, h_ref):
+    s = pl.program_id(0)
+
+    @pl.when(slots_ref[s] >= 0)
+    def _():
+        # shrink into VMEM scratch (never leaves the core) ...
+        h_ref[...] = jnp.dot(x_ref[0].astype(F32), a_ref[0, 0].astype(F32),
+                             preferred_element_type=F32)       # (cap, r)
+        # ... expand straight out of it: one kernel, one launch
+        o_ref[...] = jnp.dot(h_ref[...], b_ref[0, 0].astype(F32),
+                             preferred_element_type=F32)[None]
+
+    @pl.when(slots_ref[s] < 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def fused_sgmv(seg_rows, seg_slot, seg_eid, A, B, *, interpret: bool = True):
+    """See module docstring. Shapes must be tile-aligned (ops.py pads)."""
+    S, cap, d_in = seg_rows.shape
+    M, E, _, r = A.shape
+    d_out = B.shape[-1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, cap, d_in), lambda s, slots, eids: (s, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, d_in, r),
+                lambda s, slots, eids: (jnp.maximum(slots[s], 0),
+                                        eids[s], 0, 0)),
+            pl.BlockSpec(
+                (1, 1, r, d_out),
+                lambda s, slots, eids: (jnp.maximum(slots[s], 0),
+                                        eids[s], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cap, d_out),
+                               lambda s, slots, eids: (s, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((cap, r), F32)],
+    )
+    return pl.pallas_call(
+        _kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, cap, d_out), F32),
+        interpret=interpret,
+    )(seg_slot.astype(jnp.int32), seg_eid.astype(jnp.int32),
+      seg_rows, A, B)

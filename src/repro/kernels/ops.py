@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import bgmv as _bgmv
+from repro.kernels import fused as _fused
 from repro.kernels import gmm as _gmm
 from repro.kernels import paged as _paged
 from repro.kernels import ref as _ref
@@ -94,6 +95,28 @@ def sgmv(seg_rows, seg_adapter, A, B):
         return _ref.sgmv_ref(seg_rows, seg_adapter, A, B)
     cap = seg_rows.shape[1]
     out = _sgmv_call(seg_rows, seg_adapter, A, B, interpret=not on_tpu())
+    return out[:, :cap]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fused_sgmv_call(seg_rows, seg_slot, seg_eid, A, B, interpret=True):
+    d_out = B.shape[-1]
+    seg_rows = _pad_to(_pad_to(seg_rows, 8, 1), 128, 2)
+    A = _pad_to(_pad_to(A, 128, 2), 128, 3)
+    B = _pad_to(_pad_to(B, 128, 2), 128, 3)
+    out = _fused.fused_sgmv(seg_rows, seg_slot, seg_eid, A, B,
+                            interpret=interpret)
+    return out[:, :, :d_out]
+
+
+def fused_sgmv(seg_rows, seg_slot, seg_eid, A, B):
+    """Fused shrink-expand server-hook operator over (slot, expert)
+    segments — one launch per call (see kernels/fused.py)."""
+    if not kernels_enabled():
+        return _ref.fused_sgmv_ref(seg_rows, seg_slot, seg_eid, A, B)
+    cap = seg_rows.shape[1]
+    out = _fused_sgmv_call(seg_rows, seg_slot, seg_eid, A, B,
+                           interpret=not on_tpu())
     return out[:, :cap]
 
 

@@ -25,6 +25,20 @@ def sgmv_ref(seg_rows, seg_adapter, A, B):
     return jnp.where((seg_adapter >= 0)[:, None, None], y, 0.0)
 
 
+def fused_sgmv_ref(seg_rows, seg_slot, seg_eid, A, B):
+    """seg_rows: (S, cap, d_in); seg_slot: (S,) slot ids (-1 = padding);
+    seg_eid: (S,) expert per segment; A: (M, E, d_in, r);
+    B: (M, E, r, d_out) -> (S, cap, d_out) f32 — the fused shrink-expand
+    server-hook operator (kernels/fused.py)."""
+    ids = jnp.maximum(seg_slot, 0)
+    eids = jnp.maximum(seg_eid, 0)
+    a = A[ids, eids]                 # (S, d_in, r)
+    b = B[ids, eids]                 # (S, r, d_out)
+    h = jnp.einsum("scd,sdr->scr", seg_rows.astype(F32), a.astype(F32))
+    y = jnp.einsum("scr,sro->sco", h, b.astype(F32))
+    return jnp.where((seg_slot >= 0)[:, None, None], y, 0.0)
+
+
 def gmm_ref(xe, w, group_sizes=None):
     """xe: (E, C, d); w: (E, d, f) -> (E, C, f) f32; rows past
     group_sizes[e] are zeroed (ragged groups)."""

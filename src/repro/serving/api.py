@@ -57,6 +57,7 @@ from repro.serving.metrics import Summary
 from repro.serving.server_pool import ServerPool
 from repro.serving.simulator import SimConfig, Simulation
 from repro.serving.workload import Request
+from repro.transport import TransportStats
 
 __all__ = [
     "ServeConfig", "Backend", "SimBackend", "ClusterBackend",
@@ -64,6 +65,7 @@ __all__ = [
     "SLOClass", "INTERACTIVE", "BATCH", "TERMINAL_STATES",
     "build_system", "Request", "Summary",
     "AutoscalePolicy", "Autoscaler", "ScaleAction", "ServerPool",
+    "TransportStats",
 ]
 
 
@@ -115,6 +117,13 @@ class ServeConfig:
     # execution plane
     backend: str = "cluster"        # "cluster" (real JAX) | "sim" (analytic)
     disaggregated: bool = False
+    # disaggregated hook transport: "host" = per-hook host dispatch
+    # (2 x n_layers round trips per decode step), "fused" = GPU-initiated
+    # plane (device-resident adapter->slot LUT, the whole decode step as
+    # ONE jitted program; see src/repro/transport/). Token streams are
+    # bit-identical across both — only the launch count (and on the sim
+    # plane the modeled launch tail) differs.
+    transport: str = "host"
     # capacity (previously triplicated across the three configs)
     n_instances: int = 1
     max_batch: int = 4              # decode slots per instance
@@ -150,10 +159,21 @@ class ServeConfig:
     zipf_s: float = 1.2
     n_adapters: int = 512
     step_overhead: float = 0.004
+    # per-launch hook dispatch cost: prices the sim plane's launch tail
+    # and derates the autoscaler's TPOT budget on BOTH planes (0 = off)
+    hook_launch_us: float = 0.0
     failures: Tuple[Tuple[float, int], ...] = ()
     recoveries: Tuple[Tuple[float, int], ...] = ()
     stragglers: Tuple[Tuple[float, int, float], ...] = ()
     straggler_mitigation: bool = True
+
+    def __post_init__(self):
+        # a typo'd plane must fail HERE, not silently price as "host" on
+        # the sim plane (cost_model's formula falls through to host for
+        # any unknown string) while the cluster plane raises
+        if self.transport not in ("host", "fused"):
+            raise ValueError(f"unknown transport {self.transport!r} "
+                             f"(expected 'host' or 'fused')")
 
     # ------------------------- derivations --------------------------- #
     def engine_config(self) -> EngineConfig:
@@ -171,7 +191,8 @@ class ServeConfig:
             layerwise_loading=self.layerwise_loading,
             max_rounds=self.max_rounds, paged=self.paged,
             page_size=self.page_size, n_pages=self.n_pages,
-            prefill_chunk=self.prefill_chunk, autoscale=self.autoscale)
+            prefill_chunk=self.prefill_chunk, autoscale=self.autoscale,
+            transport=self.transport, hook_launch_us=self.hook_launch_us)
 
     def sim_config(self) -> SimConfig:
         return SimConfig(
@@ -193,7 +214,8 @@ class ServeConfig:
             step_overhead=self.step_overhead, failures=self.failures,
             recoveries=self.recoveries, stragglers=self.stragglers,
             straggler_mitigation=self.straggler_mitigation,
-            autoscale=self.autoscale)
+            autoscale=self.autoscale, transport=self.transport,
+            hook_launch_us=self.hook_launch_us)
 
     # ------------------------ migration shims ------------------------ #
     @classmethod
@@ -220,7 +242,8 @@ class ServeConfig:
             failures=sim.failures, recoveries=sim.recoveries,
             stragglers=sim.stragglers,
             straggler_mitigation=sim.straggler_mitigation,
-            autoscale=sim.autoscale)
+            autoscale=sim.autoscale, transport=sim.transport,
+            hook_launch_us=sim.hook_launch_us)
         kw.update(overrides)
         return cls(**kw)
 
@@ -236,7 +259,8 @@ class ServeConfig:
             host_bw=ccfg.host_bw, layerwise_loading=ccfg.layerwise_loading,
             max_rounds=ccfg.max_rounds, paged=ccfg.paged,
             page_size=ccfg.page_size, n_pages=ccfg.n_pages,
-            prefill_chunk=ccfg.prefill_chunk, autoscale=ccfg.autoscale)
+            prefill_chunk=ccfg.prefill_chunk, autoscale=ccfg.autoscale,
+            transport=ccfg.transport, hook_launch_us=ccfg.hook_launch_us)
         kw.update(overrides)
         return cls(**kw)
 
@@ -261,6 +285,8 @@ class Backend(Protocol):
     def requests(self) -> List[Request]: ...
 
     def kv_stats(self) -> Dict: ...
+
+    def transport_stats(self) -> Dict: ...
 
     def default_duration(self) -> float: ...
 
@@ -299,6 +325,9 @@ class SimBackend:
 
     def kv_stats(self) -> Dict:
         return {}                   # the analytic plane holds no real KV
+
+    def transport_stats(self) -> Dict:
+        return self.sim.transport_stats()   # modeled launch counts
 
     def default_duration(self) -> float:
         return self._duration
@@ -382,6 +411,9 @@ class ClusterBackend:
 
     def kv_stats(self) -> Dict:
         return self.cluster.kv_stats()
+
+    def transport_stats(self) -> Dict:
+        return self.cluster.transport_stats()   # measured launch counts
 
     def default_duration(self) -> float:
         return max(self.cluster.rnd, 1) * self.step_time
@@ -622,6 +654,14 @@ class ServeSystem:
     # ---------------------------- metrics ----------------------------- #
     def kv_stats(self) -> Dict:
         return self.backend.kv_stats()
+
+    def transport_stats(self) -> Dict:
+        """Hook-transport launch accounting (host dispatches, device
+        programs, LUT uploads, per-step rate): measured on the cluster
+        plane, modeled on the sim plane, empty in coupled mode. Benches
+        and tests read THIS instead of hand-instrumenting dispatch
+        counters."""
+        return self.backend.transport_stats()
 
     def scale_history(self) -> List[Dict]:
         """Autoscaler control-tick record (rate, LB, targets, actions) —

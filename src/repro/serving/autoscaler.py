@@ -33,6 +33,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import cost_model
 from repro.core.cost_model import Hardware, V5E
 from repro.core.provisioning import iar, min_cache_size, min_gpus_for_tpot
 
@@ -113,12 +114,19 @@ class Autoscaler:
 
     def __init__(self, policy: AutoscalePolicy, model_cfg: ModelConfig, *,
                  max_batch: int, gpus_per_instance: int = 8,
-                 hw: Hardware = V5E, has_server: bool = True):
+                 hw: Hardware = V5E, has_server: bool = True,
+                 transport: str = "host", hook_launch_us: float = 0.0):
         self.policy = policy
         self.cfg = model_cfg
         self.max_batch = max(int(max_batch), 1)
         self.gpus_per_instance = gpus_per_instance
         self.hw = hw
+        # hook transport plane: the host-mediated launch tail eats into the
+        # per-token budget available for server round trips, so the Eqs. 5-6
+        # capacity search runs against the derated SLO (see
+        # cost_model.transport_dispatch_seconds; 0 us = legacy behavior)
+        self.transport = transport
+        self.hook_launch_us = float(hook_launch_us)
         # coupled planes have no LoRA-Server: skip the Eqs. 5-6 placement
         # search and never emit replica actions (an executor would only
         # drop them, leaving the control loop chasing an unreachable
@@ -240,9 +248,16 @@ class Autoscaler:
         rep_t = n_replicas
         if self.has_server:
             b_est = max(1, math.ceil(lb / inst_t))
+            # the transport plane's host launch tail is spent BEFORE any
+            # server round trip: derate the TPOT budget by it so the
+            # capacity equation provisions for what is actually left
+            launch = cost_model.transport_dispatch_seconds(
+                self.cfg.n_layers, n_replicas, self.transport,
+                self.hook_launch_us)
+            slo_eff = max(pol.slo_tpot - launch, 0.2 * pol.slo_tpot)
             gpus, _, _ = min_gpus_for_tpot(
                 self.cfg, b_est, self.gpus_per_instance, inst_t,
-                pol.slo_tpot, distinct, hw=self.hw,
+                slo_eff, distinct, hw=self.hw,
                 max_m=pol.max_replicas * pol.gpus_per_replica)
             rep_t = int(np.clip(math.ceil(gpus / pol.gpus_per_replica),
                                 pol.min_replicas, pol.max_replicas))

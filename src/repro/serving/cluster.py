@@ -54,6 +54,7 @@ from repro.serving.scheduler import InstanceState, Scheduler, \
     assign_adapters_greedy
 from repro.serving.server_pool import ServerPool
 from repro.serving.workload import Request
+from repro.transport import make_transport
 
 
 @dataclasses.dataclass
@@ -79,6 +80,13 @@ class ClusterConfig:
     prefill_chunk: int = 16
     # elastic provisioning: run Algorithm 1 online at round boundaries
     autoscale: Optional[AutoscalePolicy] = None
+    # disaggregated hook transport plane: "host" (per-hook host dispatch,
+    # 2 x n_layers round trips per decode step) or "fused" (device-resident
+    # LUT + one jitted program per step; see src/repro/transport/)
+    transport: str = "host"
+    # per-launch cost fed to the autoscaler's TPOT-budget derate (the real
+    # plane MEASURES dispatches but models their cost; 0 = no derate)
+    hook_launch_us: float = 0.0
 
 
 class Cluster:
@@ -114,6 +122,13 @@ class Cluster:
         self.pool = pool
         self.params = params
         self.server_pool = server_pool if ccfg.disaggregated else None
+        # ONE transport for the whole cluster: every instance's engine
+        # shares its stats ledger (system-level launch counts) and, on the
+        # fused plane, its device-resident LUT/pool view
+        self.transport = None
+        if ccfg.disaggregated:
+            self.transport = make_transport(ccfg.transport, self.server_pool,
+                                            n_adapters=pool.n)
         self._ecfg = EngineConfig(max_len=ccfg.max_len, n_slots=ccfg.n_slots,
                                   paged=ccfg.paged, page_size=ccfg.page_size,
                                   n_pages=ccfg.n_pages,
@@ -137,7 +152,8 @@ class Cluster:
 
     def _new_engine(self) -> Engine:
         return Engine(self.cfg, self.params, self._ecfg, pool=self.pool,
-                      server=self.server_pool)
+                      server=self.server_pool,
+                      transport=self.transport or "host")
 
     # ------------------------------------------------------------------ #
     def _prompt(self, req: Request) -> np.ndarray:
@@ -253,7 +269,9 @@ class Cluster:
                 pol = dataclasses.replace(
                     pol, max_cache_slots=self.server_pool.min_slots)
             self._scaler = Autoscaler(pol, self.cfg, max_batch=ccfg.n_slots,
-                                      has_server=self.server_pool is not None)
+                                      has_server=self.server_pool is not None,
+                                      transport=ccfg.transport,
+                                      hook_launch_us=ccfg.hook_launch_us)
         self.tokens: Dict[int, List[int]] = {}
         self._reqs: Dict[int, Request] = {}
         self._pending: List[Request] = []
@@ -485,6 +503,12 @@ class Cluster:
 
     def kv_stats(self) -> Dict[int, Dict]:
         return {i: eng.kv_stats() for i, eng in self.engines.items()}
+
+    def transport_stats(self) -> Dict:
+        """System-level launch accounting of the disaggregated transport
+        (every engine bills the one shared transport). Empty in coupled
+        mode — there the whole step is a single jit by construction."""
+        return self.transport.stats.as_dict() if self.transport else {}
 
     def scale_history(self) -> List[Dict]:
         """The autoscaler's per-control-tick record (empty when static)."""

@@ -61,6 +61,7 @@ from repro.core import disagg as disagg_mod
 from repro.core.adapter import AdapterPool
 from repro.models import cache as cache_mod
 from repro.models import transformer
+from repro.transport.base import kv_donating_jit as _kv_jit, make_transport
 
 SLOT_FAMILIES = ("dense", "moe", "vlm")
 
@@ -78,24 +79,8 @@ def _bucket(n: int, cap: int) -> int:
 # ------------------------------------------------------------------ #
 # The caller always overwrites self._k/_v with the returned caches, so the
 # old buffers are donated for in-place XLA updates — avoiding a 2x KV peak
-# and a full-cache copy per decoded token. CPU does not implement donation
-# (it would just warn), so gate on the backend — resolved LAZILY on first
-# call: probing jax.default_backend() at import would initialize the JAX
-# backend as a side effect of importing this module, breaking later
-# jax.distributed.initialize() / platform overrides in launchers.
-def _kv_jit(fn, kv_argnums, **jit_kw):
-    jitted = []
-
-    def call(*args):
-        if not jitted:
-            kw = dict(jit_kw)
-            if jax.default_backend() != "cpu":
-                kw["donate_argnums"] = kv_argnums
-            jitted.append(jax.jit(fn, **kw))
-        return jitted[0](*args)
-    return call
-
-
+# and a full-cache copy per decoded token (``transport.base.kv_donating_jit``
+# gates donation on the backend, lazily).
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _decode_static(params, cfg, cache, tokens, lora_ctx):
     return transformer.decode_step(params, cfg, cache, tokens, lora_ctx)
@@ -144,19 +129,6 @@ def _coupled_paged_step_fn(params, cfg, k_pool, v_pool, bt, toks, pos_vec,
 
 _coupled_paged_step = _kv_jit(_coupled_paged_step_fn, (2, 3),
                               static_argnames=("cfg",))
-
-
-@jax.jit  # cache must survive this call: NOT donated
-def _gather_rows(k, v, sel):
-    return jnp.take(k, sel, axis=1), jnp.take(v, sel, axis=1)
-
-
-def _scatter_rows_fn(k, v, k_rows, v_rows, idx):
-    return (k.at[:, idx].set(k_rows, mode="drop"),
-            v.at[:, idx].set(v_rows, mode="drop"))
-
-
-_scatter_rows = _kv_jit(_scatter_rows_fn, (0, 1))
 
 
 @functools.partial(jax.jit, static_argnames=("n",))
@@ -231,16 +203,25 @@ class SlotState:
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  pool: Optional[AdapterPool] = None,
-                 server=None):
+                 server=None, transport="host"):
         # ``server`` is anything satisfying LoRAServer's ``compute``
         # contract: a single LoRAServer or an elastic ``ServerPool`` of
-        # replicas (serving/server_pool.py) — the engine only dispatches
-        # hook computations to it.
+        # replicas (serving/server_pool.py). The engine never dispatches
+        # hooks itself — the ``transport`` plane does: "host" (per-hook
+        # host round trips, the measurable baseline) or "fused" (the whole
+        # disagg step as one jitted program). A prebuilt Transport instance
+        # may be passed instead of a name so a cluster's engines share one
+        # stats ledger and device view.
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.pool = pool
         self.server = server
+        self.transport = None
+        if server is not None:
+            self.transport = transport if not isinstance(transport, str) \
+                else make_transport(transport, server,
+                                    n_adapters=pool.n if pool else None)
         # slot cache is lazily allocated on the first add_request so legacy
         # static-batch users don't pay the slab/pool twice
         self._k = self._v = None
@@ -310,6 +291,11 @@ class Engine:
                     self.cfg, self.total_pages, self.ecfg.page_size, dtype),
             )
         return out
+
+    def transport_stats(self) -> Dict:
+        """Launch accounting of the disaggregated transport plane (empty in
+        coupled mode, where the whole step is one jit by construction)."""
+        return self.transport.stats.as_dict() if self.transport else {}
 
     def _alloc_page(self) -> int:
         p = self._free.pop()
@@ -493,24 +479,10 @@ class Engine:
         bt_j = jnp.asarray(self._bt[sel]) if self.ecfg.paged else None
 
         if self.server is not None:
-            if self.ecfg.paged:
-                logits, self._k, self._v = \
-                    disagg_mod.disagg_decode_step_slots(
-                        self.params, self.cfg, self._k, self._v, toks_j,
-                        pos_j, self.server, jnp.asarray(ads),
-                        self.pool.scale if self.pool else 1.0,
-                        block_table=bt_j)
-            else:
-                k_rows, v_rows = _gather_rows(self._k, self._v, sel_j)
-                logits, k_rows, v_rows = \
-                    disagg_mod.disagg_decode_step_slots(
-                        self.params, self.cfg, k_rows, v_rows, toks_j,
-                        pos_j, self.server, jnp.asarray(ads),
-                        self.pool.scale if self.pool else 1.0)
-                self._k, self._v = _scatter_rows(self._k, self._v, k_rows,
-                                                 v_rows, sc_j)
-            logits = logits[:, : self.cfg.vocab_size]
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok, self._k, self._v = self.transport.decode_step(
+                self.params, self.cfg, self._k, self._v, toks_j, pos_j,
+                jnp.asarray(ads), self.pool.scale if self.pool else 1.0,
+                sel=sel_j, scatter_idx=sc_j, block_table=bt_j)
         else:
             lora_ctx = None
             if self.pool is not None:

@@ -90,6 +90,16 @@ class ServerPool:
         self.sync_noops = 0
         self.sync_inserts = 0
         self.sync_evictions = 0
+        # monotone pool-shape/residency version: bumped on every sync that
+        # changed something and on add/remove/resize — the fused transport
+        # fingerprints (version, per-replica mutation counters) to decide
+        # when its device-resident LUT must be re-uploaded
+        self.version = 0
+        # device-launch accounting: one jitted server-step launch per
+        # replica engaged by a ``compute`` call (HostTransport bills these
+        # to its per-step host-dispatch count)
+        self.compute_calls = 0
+        self.replica_launches = 0
 
     # ------------------------------------------------------------------ #
     # construction                                                        #
@@ -152,6 +162,7 @@ class ServerPool:
         rep = self._factory()
         self.replicas.append(rep)
         self._full_sync = True
+        self.version += 1
         return rep
 
     def remove_replica(self):
@@ -161,15 +172,21 @@ class ServerPool:
             raise RuntimeError("ServerPool cannot drop below one replica")
         rep = self.replicas.pop()
         self._full_sync = True
+        self.version += 1
         return rep
 
     def resize_slots(self, cache_slots: int) -> None:
         """Follow an adapter-cache resize on replicas that support it
         (analytic slot tables); preallocated real pools keep their size and
-        the executor clamps the cache policy to ``min_slots`` instead."""
+        the executor clamps the cache policy to ``min_slots`` instead.
+        Either way the NEXT sync is forced full: a resize can re-home
+        residency (shrink evictions, capacity-driven moves), and a stale
+        slot LUT would silently route rows to the wrong adapter slot."""
         for rep in self.replicas:
             if hasattr(rep, "resize"):
                 rep.resize(cache_slots)
+        self._full_sync = True
+        self.version += 1
 
     # ------------------------------------------------------------------ #
     # residency sync (delta-based)                                        #
@@ -215,6 +232,8 @@ class ServerPool:
             # re-home passes are rare (resize only): assert the invariant
             # inline rather than trusting the re-route arithmetic
             self.check_consistent(cache)
+        if full or changed:
+            self.version += 1
         return len(changed)
 
     def check_consistent(self, cache: Optional[LoRACache] = None) -> None:
@@ -247,8 +266,14 @@ class ServerPool:
         """Drop-in for ``LoRAServer.compute``: every active row's delta
         comes from its affinity replica; replicas owning no active row in
         this batch are skipped. Single replica == passthrough, so the
-        elastic pool cannot perturb the token-equality invariant."""
+        elastic pool cannot perturb the token-equality invariant.
+
+        Each engaged replica is one host-initiated jitted server-step
+        launch (``replica_launches``) — the per-hook cost the host
+        transport pays 2 x n_layers times per decode step."""
+        self.compute_calls += 1
         if len(self.replicas) == 1:
+            self.replica_launches += 1
             return self.replicas[0].compute(hook, layer, rows, adapter_ids,
                                             expert_ids)
         ids = np.asarray(adapter_ids)
@@ -259,9 +284,11 @@ class ServerPool:
             if not mine.any():
                 continue
             masked = np.where(mine, ids, -1).astype(ids.dtype)
+            self.replica_launches += 1
             delta = rep.compute(hook, layer, rows, masked, expert_ids)
             out = delta if out is None else out + delta
         if out is None:     # no active adapters anywhere: exact zero delta
+            self.replica_launches += 1
             out = self.replicas[0].compute(hook, layer, rows,
                                            np.full_like(ids, -1), expert_ids)
         return out

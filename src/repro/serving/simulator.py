@@ -66,6 +66,13 @@ class SimConfig:
     slow_kernel_eff_scale: float = 2.8
     protocol: str = "push"
     policy: str = "fcfs"                # or "sjf" (oracle)
+    # hook transport plane (disaggregated only): "host" pays a per-launch
+    # tail of 2 x n_layers + replicas CPU-initiated dispatches per decode
+    # step; "fused" (GPU-initiated) pays ONE. hook_launch_us prices one
+    # launch; 0 (default) keeps the legacy calibration where launch cost
+    # was folded into step_overhead — transport benches sweep it.
+    transport: str = "host"
+    hook_launch_us: float = 0.0
     # environment
     hw: Hardware = V5E
     lora_rank: Optional[int] = None
@@ -163,6 +170,9 @@ class Simulation:
                  server_pool: Optional[ServerPool] = None):
         self.cfg = cfg
         self.sim = sim
+        if sim.transport not in ("host", "fused"):
+            raise ValueError(f"unknown transport {sim.transport!r} "
+                             f"(expected 'host' or 'fused')")
         self.rank = sim.lora_rank or cfg.lora_rank
         self._adapter_bytes = cfg.lora_adapter_bytes(self.rank)
         pop = zipf_popularity(sim.n_adapters, sim.zipf_s)
@@ -195,7 +205,9 @@ class Simulation:
             self._scaler = Autoscaler(
                 sim.autoscale, cfg, max_batch=sim.max_batch,
                 gpus_per_instance=sim.gpus_per_instance, hw=sim.hw,
-                has_server=sim.disaggregated)
+                has_server=sim.disaggregated,
+                transport=sim.transport,
+                hook_launch_us=sim.hook_launch_us)
         self._control_pending = False
         # event queue: (time, seq, kind, payload)
         self._ev: List[Tuple[float, int, str, object]] = []
@@ -206,6 +218,9 @@ class Simulation:
         self.batch_log: List[Tuple[float, int]] = []
         self.active_log: List[Tuple[float, int]] = []
         self.scale_log: List[Tuple[float, str, int]] = []
+        self.n_decode_steps = 0         # feeds modeled transport_stats()
+        self._modeled_dispatches = 0    # accumulated at each step with the
+        #                                 replica count in effect THEN
         self._stepping = {i.iid: False for i in self.instances}
         self._out: List[Tuple[float, int, str]] = []   # current-step events
         self._retry_at: Dict[int, Optional[float]] = \
@@ -280,6 +295,41 @@ class Simulation:
         while not self.idle():
             self.step()
 
+    def _dispatches_per_step(self) -> int:
+        """Modeled host launches of ONE decode step at the CURRENT replica
+        count: 2L hook calls x engaged replicas + 3 overhead launches
+        ("host", the measured ledger's upper bound) or 1 ("fused").
+        Coupled mode has no hook transport — 0."""
+        if not self.sim.disaggregated:
+            return 0
+        if self.sim.transport == "fused":
+            return 1
+        return 2 * self.cfg.n_layers * self.server_pool.n_replicas + 3
+
+    def transport_stats(self) -> Dict:
+        """Modeled launch accounting, observationally matching the cluster
+        plane's measured ``TransportStats.as_dict()`` keys. Dispatches are
+        accumulated per step with the replica count in effect THEN, so the
+        ledger stays consistent with the step-time model under mid-run
+        replica scaling; LUT uploads are the pool's non-noop residency
+        syncs."""
+        sim = self.sim
+        if not sim.disaggregated:
+            return {}
+        uploads = 0 if sim.transport == "host" else \
+            self.server_pool.sync_rounds - self.server_pool.sync_noops
+        return {
+            "transport": sim.transport,
+            "steps": self.n_decode_steps,
+            "host_dispatches": self._modeled_dispatches,
+            "device_programs": self._modeled_dispatches,
+            "hook_dispatches": (2 * self.cfg.n_layers * self.n_decode_steps
+                                if sim.transport == "host" else 0),
+            "lut_uploads": uploads,
+            "host_dispatches_per_step": round(
+                self._modeled_dispatches / max(self.n_decode_steps, 1), 3),
+        }
+
     def result(self) -> Dict:
         return {
             "requests": list(self.requests),
@@ -319,6 +369,9 @@ class Simulation:
                 sim.fast_kernels, sim.protocol,
                 eff_scale_slow=sim.slow_kernel_eff_scale,
                 n_server_replicas=self.server_pool.n_replicas)
+            t += cost_model.transport_dispatch_seconds(
+                cfg.n_layers, self.server_pool.n_replicas, sim.transport,
+                sim.hook_launch_us)
         else:
             t += coupled_lora_seconds(cfg, b, sim.gpus_per_instance, dist,
                                       self.rank, sim.hw, sim.fast_kernels)
@@ -519,6 +572,8 @@ class Simulation:
             if not inst.alive:
                 return
             stepped = list(inst.running)    # every running row earns a token
+            self.n_decode_steps += 1
+            self._modeled_dispatches += self._dispatches_per_step()
             finished = sched.step_complete(iid, now)
             for r in stepped:
                 self._emit(now, r.rid, "token")

@@ -1,0 +1,15 @@
+"""Transport planes for the disaggregated decode step (paper §5).
+
+``make_transport("host" | "fused", server)`` builds the plane; see
+``transport/base.py`` for the contract and the two implementations for the
+host-mediated baseline vs the GPU-initiated fused program.
+"""
+from repro.transport.base import (Transport, TransportStats,  # noqa: F401
+                                  make_transport)
+from repro.transport.fused import (DeviceLoraView,  # noqa: F401
+                                   FusedTransport, fused_hook_delta)
+from repro.transport.host import HostTransport  # noqa: F401
+
+__all__ = ["Transport", "TransportStats", "make_transport",
+           "HostTransport", "FusedTransport", "DeviceLoraView",
+           "fused_hook_delta"]

@@ -11,6 +11,7 @@ EXPECTED_EXPORTS = sorted([
     "SLOClass", "INTERACTIVE", "BATCH", "TERMINAL_STATES",
     "build_system", "Request", "Summary",
     "AutoscalePolicy", "Autoscaler", "ScaleAction", "ServerPool",
+    "TransportStats",
 ])
 
 EXPECTED_STATES = ["QUEUED", "PREFILLING", "DECODING", "FINISHED",
@@ -45,7 +46,8 @@ def test_core_entrypoint_signatures():
     cfg_fields = {f.name for f in api.ServeConfig.__dataclass_fields__.values()}
     for knob in ("backend", "disaggregated", "n_instances", "max_batch",
                  "max_len", "adapter_cache_slots", "policy", "paged",
-                 "page_size", "n_pages", "prefill_chunk", "step_time"):
+                 "page_size", "n_pages", "prefill_chunk", "step_time",
+                 "transport", "hook_launch_us"):
         assert knob in cfg_fields, f"ServeConfig lost knob {knob}"
 
 

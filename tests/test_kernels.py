@@ -85,6 +85,52 @@ def test_sgmv_and_segments(cap):
                                    rows[i], atol=1e-6)
 
 
+@pytest.mark.parametrize("shape",  # (S, cap, d_in, r, d_out, M, E)
+                         [(5, 8, 128, 128, 256, 3, 2),
+                          (7, 6, 100, 60, 200, 4, 3),    # padded dims
+                          (3, 16, 256, 32, 128, 2, 1)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_sgmv(shape, dtype):
+    """Fused shrink-expand server-hook kernel: grouped A-then-B in ONE
+    pallas_call with the (cap, r) intermediate in VMEM scratch — must match
+    the composed-einsum oracle, incl. padding segments (slot -1) and
+    tile-unaligned dims through the ops wrapper."""
+    S, cap, d_in, r, d_out, M, E = shape
+    key = jax.random.PRNGKey(S * 100 + cap)
+    x = jax.random.normal(key, (S, cap, d_in), jnp.float32).astype(dtype)
+    A = (jax.random.normal(jax.random.fold_in(key, 1), (M, E, d_in, r))
+         * 0.05).astype(dtype)
+    B = (jax.random.normal(jax.random.fold_in(key, 2), (M, E, r, d_out))
+         * 0.05).astype(dtype)
+    slots = jax.random.randint(jax.random.fold_in(key, 3), (S,), -1, M)
+    eids = jax.random.randint(jax.random.fold_in(key, 4), (S,), 0, E)
+    got = ops.fused_sgmv(x, slots, eids, A, B)
+    want = ref.fused_sgmv_ref(x, slots, eids, A, B)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               **_tol(dtype))
+    # padding segments are exact zeros, not small numbers
+    got_np = np.asarray(got)
+    for s in np.nonzero(np.asarray(slots) < 0)[0]:
+        assert np.all(got_np[s] == 0.0)
+
+
+def test_fused_sgmv_matches_two_phase_sgmv():
+    """The fused kernel computes exactly what shrink-then-expand computes —
+    collapsing two launches (and an HBM round trip of the intermediate)
+    into one, not changing the math."""
+    S, cap, d_in, r, d_out, M = 4, 8, 128, 64, 128, 3
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (S, cap, d_in))
+    A = jax.random.normal(jax.random.fold_in(key, 1), (M, d_in, r)) * 0.05
+    B = jax.random.normal(jax.random.fold_in(key, 2), (M, r, d_out)) * 0.05
+    slots = jnp.asarray([0, -1, 2, 1], jnp.int32)
+    eids = jnp.zeros((S,), jnp.int32)
+    fused = ops.fused_sgmv(x, slots, eids, A[:, None], B[:, None])
+    two_phase = ref.sgmv_ref(x, slots, A, B)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two_phase),
+                               atol=2e-5, rtol=2e-5)
+
+
 @pytest.mark.parametrize("E,C,d,f", [(4, 12, 64, 96), (8, 8, 256, 512),
                                      (3, 16, 384, 640)])
 def test_gmm(E, C, d, f):
