@@ -1,5 +1,12 @@
 """Table 1 metrics + Table 4 latency breakdown (recv/LoRA/send vs base MoE)
-for the four parallelization strategies on an 8-chip LoRA server."""
+for the four parallelization strategies on an 8-chip LoRA server — plus
+``real_main``: the same EP strategy EXECUTED on a forced-host-device mesh
+through the serving front door (``ServeConfig.mesh_shape``), one subprocess
+per placement so each gets its own device count."""
+import json
+import subprocess
+import sys
+
 from benchmarks.common import emit
 from repro.configs import get_config
 from repro.core import cost_model as cm
@@ -34,5 +41,87 @@ def main():
                  f"moe_us={moe_us:.0f}")
 
 
+# ---------------------------------------------------------------------- #
+# real sharded execution: per-placement scaling rows                       #
+# ---------------------------------------------------------------------- #
+# The child forces N host devices BEFORE importing jax, serves the same
+# tiny workload single-device and mesh-sharded, and reports wall time +
+# token equality + the fused plane's dispatch rate as one JSON line.
+_CHILD = """
+import os, sys
+data, model = int(sys.argv[1]), int(sys.argv[2])
+os.environ['XLA_FLAGS'] = (
+    '--xla_force_host_platform_device_count=%d' % (data * model))
+import dataclasses, json, time
+import jax
+from repro.configs import get_config
+from repro.models import model as model_mod
+from repro.core.adapter import init_mixed_rank_pool
+from repro.serving.api import ServeConfig, build_system
+
+cfg = dataclasses.replace(get_config('qwen3-moe-235b-a22b').reduced(),
+                          lora_targets=('gate', 'up', 'down'), lora_rank=8)
+params = model_mod.init_params(cfg, jax.random.PRNGKey(0), dtype='float32')
+pool = init_mixed_rank_pool(cfg, [2, 8, 4, 8], jax.random.PRNGKey(1),
+                            dtype='float32')
+SPECS = [(0, 0.0, 5, 6), (1, 0.0, 4, 4), (2, 2.0, 6, 5), (3, 5.0, 3, 4)]
+
+def serve(mesh_shape):
+    sc = ServeConfig(backend='cluster', disaggregated=True, n_instances=1,
+                     max_batch=2, max_len=32, adapter_cache_slots=4,
+                     transport='fused', server_replicas=2, paged=True,
+                     page_size=4, n_pages=8, prefill_chunk=8,
+                     mesh_shape=mesh_shape)
+    sys_ = build_system(sc, cfg, params=params, pool=pool)
+    hs = [sys_.submit(adapter_id=a, prompt_len=p, max_new_tokens=o,
+                      arrival=t) for a, t, p, o in SPECS]
+    t0 = time.perf_counter()
+    sys_.drain()
+    wall = time.perf_counter() - t0
+    toks = {h.rid: tuple(h.tokens) for h in hs}
+    return toks, sys_.transport_stats(), wall
+
+ref, _, _ = serve(None)
+got, st, wall = serve((data, model))
+n_tok = sum(len(t) for t in got.values())
+print(json.dumps({'tokens_match': got == ref, 'wall_s': round(wall, 3),
+                  'ms_per_token': round(wall * 1e3 / max(n_tok, 1), 2),
+                  'dispatches_per_step': st['host_dispatches_per_step']}))
+"""
+
+PLACEMENTS = [(1, 1), (2, 1), (4, 1), (2, 2)]
+
+
+def real_main():
+    """Drive the REAL mesh-sharded decode step per placement and emit
+    scaling rows (labels keyed to the analytic tables via
+    ``Placement.from_mesh_shape``). Wall time includes jit compilation —
+    rows are a trajectory, not an absolute latency claim."""
+    import os
+    cfg = get_config("qwen3-moe-235b-a22b").reduced()
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.setdefault("PYTHONPATH", "src")
+    for data, model in PLACEMENTS:
+        desc = Placement.from_mesh_shape(
+            (data, model), 4, cfg.n_layers, cfg.n_experts).describe()
+        label = f"{desc}@{data}x{model}"  # (2,1) and (2,2) are both EP2
+        res = subprocess.run(
+            [sys.executable, "-c", _CHILD, str(data), str(model)],
+            capture_output=True, text=True, timeout=900, env=env)
+        if res.returncode != 0:
+            emit(f"sharded.{label}.error", 1, res.stderr[-200:])
+            continue
+        row = json.loads(res.stdout.strip().splitlines()[-1])
+        assert row["tokens_match"], f"{label}: mesh tokens diverged"
+        assert row["dispatches_per_step"] == 1.0, row
+        emit(f"sharded.{label}.devices", data * model)
+        emit(f"sharded.{label}.ms_per_token", row["ms_per_token"],
+             f"wall_s={row['wall_s']}")
+        emit(f"sharded.{label}.dispatches_per_step",
+             row["dispatches_per_step"], "tokens_match=1")
+
+
 if __name__ == "__main__":
     main()
+    real_main()

@@ -65,6 +65,16 @@ TRANSPORT = [
     ("transport_planes", bench_transport.main),
 ]
 
+# CI parallelism lane: the analytic Table-1/Table-4 strategy metrics plus
+# real sharded execution — each placement runs the mesh-sharded decode step
+# (ServeConfig.mesh_shape) on forced host devices and reports scaling rows
+# (ms/token, token equality, fused dispatch rate) keyed to the same
+# EPx-PPy labels — writes BENCH_parallelism.json as an artifact.
+PARALLELISM = [
+    ("table1_table4_parallelism", bench_parallelism.main),
+    ("real_sharded_scaling", bench_parallelism.real_main),
+]
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -79,6 +89,9 @@ def main(argv=None) -> None:
     lane.add_argument("--transport", action="store_true",
                       help="host vs fused hook-transport lane, writes "
                            "BENCH_transport.json")
+    lane.add_argument("--parallelism", action="store_true",
+                      help="analytic Table-1 metrics + real mesh-sharded "
+                           "scaling rows, writes BENCH_parallelism.json")
     ap.add_argument("--out", default=None,
                     help="write captured rows as JSON (default "
                          "BENCH_smoke.json in --smoke mode)")
@@ -86,7 +99,8 @@ def main(argv=None) -> None:
 
     suite = SMOKE if args.smoke else \
         PROVISIONING if args.provisioning else \
-        TRANSPORT if args.transport else ALL
+        TRANSPORT if args.transport else \
+        PARALLELISM if args.parallelism else ALL
     timings = {}
     for name, fn in suite:
         if args.only and args.only not in name:
@@ -100,7 +114,8 @@ def main(argv=None) -> None:
     out_path = args.out or ("BENCH_smoke.json" if args.smoke else
                             "BENCH_provisioning.json" if args.provisioning
                             else "BENCH_transport.json" if args.transport
-                            else None)
+                            else "BENCH_parallelism.json"
+                            if args.parallelism else None)
     if out_path:
         with open(out_path, "w") as f:
             json.dump({"results": common.RESULTS, "timings": timings}, f,

@@ -15,6 +15,14 @@ of hybrid), so we implement the prose:
 Latency model (per MoE layer, both hook points): LoRA compute is
 memory-bound and driven by *distinct* adapter invocations (paper A.1.2);
 communication is NIC-bound and linear in rows.
+
+This model prices placements ANALYTICALLY (v5e constants); the repo also
+executes the EP strategy for real — ``ServeConfig.mesh_shape`` shards the
+disaggregated decode step's expert GEMMs over a device mesh
+(``distributed/steps.expert_parallel_ctx``), and
+``benchmarks/bench_parallelism.py --parallelism`` emits measured
+per-placement scaling rows next to this model's Table-1 predictions
+(``Placement.from_mesh_shape`` keys the two together).
 """
 from __future__ import annotations
 

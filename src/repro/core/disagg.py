@@ -36,7 +36,9 @@ from typing import Dict
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.models import layers as ll
 from repro.models import moe as moe_mod
@@ -47,6 +49,48 @@ F32 = jnp.float32
 
 def _layer_params(params, l):
     return jax.tree_util.tree_map(lambda a: a[l], params["layers"])
+
+
+# ------------------- expert-parallel base GEMMs (mesh plane) ------------- #
+# The expert GEMMs are independent per expert (E is a batch dim), so
+# sharding them over the mesh's expert axis is a pure map: shard_map with
+# matching in/out specs and NO collectives. Each expert's (C,d)x(d,f) GEMM
+# is then the exact same XLA routine as the unsharded run, which is what
+# keeps the mesh plane token-stream BIT-identical to the single-device
+# plane (the serving invariant). Contrast the coupled plane's allgather
+# MoE, whose psum reassociates floats — that is why the mesh knob is only
+# offered on the disaggregated planes.
+_EP_EINSUM_CACHE: Dict = {}
+
+
+def _ep_einsum(eq: str, a, w, mesh_ctx):
+    """``jnp.einsum(eq, a, w)`` with both operands' leading expert dim
+    mapped over ``mesh_ctx.axis``; plain einsum when there is no ctx or E
+    does not divide the axis."""
+    if mesh_ctx is None or mesh_ctx.size <= 1 or \
+            a.shape[0] % mesh_ctx.size != 0 or \
+            w.shape[0] % mesh_ctx.size != 0:
+        return jnp.einsum(eq, a, w, preferred_element_type=F32)
+    key = (eq, mesh_ctx.mesh, mesh_ctx.axis)
+    mapped = _EP_EINSUM_CACHE.get(key)
+    if mapped is None:
+        spec = P(mesh_ctx.axis)
+
+        def body(ai, wi):
+            return jnp.einsum(eq, ai, wi, preferred_element_type=F32)
+
+        mapped = jax.jit(shard_map(body, mesh=mesh_ctx.mesh,
+                                   in_specs=(spec, spec), out_specs=spec,
+                                   check_vma=False))
+        _EP_EINSUM_CACHE[key] = mapped
+    if isinstance(a, jax.core.Tracer) or isinstance(w, jax.core.Tracer):
+        return mapped(a, w)
+    # eager (host-plane) call: commit the operands to the mesh layout the
+    # map expects, and hand back a fully-replicated result so downstream
+    # eager ops never mix device assignments
+    sh = NamedSharding(mesh_ctx.mesh, P(mesh_ctx.axis))
+    out = mapped(jax.device_put(a, sh), jax.device_put(w, sh))
+    return jax.device_put(out, NamedSharding(mesh_ctx.mesh, P()))
 
 
 def _client_attn(x, lp, cfg, pos, k_c, v_c, positions):
@@ -60,13 +104,23 @@ def _client_attn(x, lp, cfg, pos, k_c, v_c, positions):
     return x, k_c, v_c
 
 
+def _replicate_eager(d, mesh_ctx):
+    """Eager-path helper: commit a hook delta onto the mesh (replicated) so
+    the residual add never mixes device assignments. No-op under a trace
+    and without a mesh."""
+    if mesh_ctx is None or isinstance(d, jax.core.Tracer):
+        return d
+    return jax.device_put(d, NamedSharding(mesh_ctx.mesh, P()))
+
+
 def _moe_hooks_layer(x, lp, cfg: ModelConfig, l: int, server: LoRAServer,
-                     adapter_ids, lora_scale: float):
+                     adapter_ids, lora_scale: float, mesh_ctx=None):
     """One MoE layer with the two server hook points (paper Fig. 7b): base
     GEMMs on the client, LoRA deltas from the remote server, router-weight
     combine. x: (B, 1, d) post-attention residual; adapter_ids: (B,) global
     ids (-1 rows get zero delta). Shared by BOTH decode-step variants so the
-    hook math cannot diverge between them."""
+    hook math cannot diverge between them. With ``mesh_ctx`` the three base
+    expert GEMMs run expert-parallel over the mesh (see ``_ep_einsum``)."""
     B = x.shape[0]
     E, K = cfg.n_experts, cfg.top_k
     h = ll.rms_norm(x, lp["ln2"], cfg.norm_eps)
@@ -87,20 +141,19 @@ def _moe_hooks_layer(x, lp, cfg: ModelConfig, l: int, server: LoRAServer,
 
     # hook 1: up/gate — client GEMM + server delta (overlapped on HW)
     mp = lp["moe"]
-    g = jnp.einsum("ecd,edf->ecf", xe, mp["gate"],
-                   preferred_element_type=F32)
-    u = jnp.einsum("ecd,edf->ecf", xe, mp["up"],
-                   preferred_element_type=F32)
+    g = _ep_einsum("ecd,edf->ecf", xe, mp["gate"], mesh_ctx)
+    u = _ep_einsum("ecd,edf->ecf", xe, mp["up"], mesh_ctx)
     d_up = server.compute("up", l, rows, row_adapter, row_expert)
+    d_up = _replicate_eager(d_up, mesh_ctx)
     d_up = d_up.reshape(E, C, -1) * lora_scale
     dg, du = jnp.split(d_up, 2, axis=-1)
     act = (jax.nn.silu(g + dg) * (u + du)).astype(x.dtype)
 
     # hook 2: down
-    y = jnp.einsum("ecf,efd->ecd", act, mp["down"],
-                   preferred_element_type=F32)
+    y = _ep_einsum("ecf,efd->ecd", act, mp["down"], mesh_ctx)
     d_dn = server.compute("down", l, act.reshape(E * C, -1),
                           row_adapter, row_expert)
+    d_dn = _replicate_eager(d_dn, mesh_ctx)
     y = y + d_dn.reshape(E, C, -1) * lora_scale
 
     # combine with router weights (same bookkeeping as the coupled path)
@@ -117,7 +170,7 @@ def _moe_hooks_layer(x, lp, cfg: ModelConfig, l: int, server: LoRAServer,
 def disagg_decode_step_slots(params, cfg: ModelConfig, k_cache, v_cache,
                              tokens, pos_vec, server: LoRAServer,
                              adapter_ids, lora_scale: float, *,
-                             block_table=None):
+                             block_table=None, mesh_ctx=None):
     """Continuous-batching disaggregated decode (per-slot positions).
 
     The slot-engine twin of ``transformer.decode_step_slots``: identical
@@ -127,7 +180,9 @@ def disagg_decode_step_slots(params, cfg: ModelConfig, k_cache, v_cache,
     adapter id must be -1 too so the server contributes zero delta);
     k_cache/v_cache: (L, B, S, KV, hd) — or paged pools
     (L, n_pages, page_size, KV, hd) when ``block_table`` (B, nb) is given,
-    mirroring the coupled slot step.
+    mirroring the coupled slot step. ``mesh_ctx`` (a
+    ``distributed.steps.ExpertParallelCtx``) runs the base expert GEMMs
+    expert-parallel over its mesh — bit-identical by construction.
 
     Returns (logits (B, V), k_cache', v_cache').
     """
@@ -153,7 +208,8 @@ def disagg_decode_step_slots(params, cfg: ModelConfig, k_cache, v_cache,
         k_cache = k_cache.at[l].set(k_l)
         v_cache = v_cache.at[l].set(v_l)
         x = x + ll.out_project(att[:, None], lp["attn"])
-        x = _moe_hooks_layer(x, lp, cfg, l, server, adapter_ids, lora_scale)
+        x = _moe_hooks_layer(x, lp, cfg, l, server, adapter_ids, lora_scale,
+                             mesh_ctx=mesh_ctx)
 
     x = ll.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = ll.unembed(x, params.get("lm_head", params["embed"]))

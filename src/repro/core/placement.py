@@ -52,6 +52,18 @@ class Placement:
                              x=1, y=m)
         return Placement(strategy, m, n_adapters, n_layers, n_experts)
 
+    @classmethod
+    def from_mesh_shape(cls, mesh_shape, n_adapters: int, n_layers: int,
+                        n_experts: int) -> "Placement":
+        """Label a serving-plane mesh (``ServeConfig.mesh_shape`` =
+        (data, model)) in placement terms: the decode rule-set stripes
+        experts over the "data" axis, so the mesh runs the EP strategy at
+        degree ``data`` (``benchmarks/bench_parallelism.py`` uses this to
+        key its real-execution scaling rows to the analytic tables)."""
+        data, _ = mesh_shape
+        return cls.make("ep", max(int(data), 1), n_adapters, n_layers,
+                        n_experts)
+
     # ------------------------------------------------------------------ #
     def owner(self, adapter: int, layer: int, expert: int) -> int:
         """Device index serving cell (adapter, layer, expert)."""

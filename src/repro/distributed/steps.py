@@ -15,6 +15,7 @@ Rule-sets (see DESIGN.md §7):
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional
 
 import jax
@@ -200,6 +201,70 @@ def jit_prefill_step(cfg, shape, mesh, overrides=None):
     logits_sh = rules.sharding(("batch", "seq", "vocab"), (B, S, V))
     jitted = jax.jit(step, in_shardings=(p_sh, b_sh), out_shardings=logits_sh)
     return jitted, (model_mod.abstract_params(cfg), b_abs), rules
+
+
+# ------------------- serving-plane expert parallelism -------------------- #
+@dataclasses.dataclass(frozen=True)
+class ExpertParallelCtx:
+    """Mesh context for the disaggregated serving plane.
+
+    Carries the expert-parallel axis the decode rule-set resolved for this
+    (mesh, model) pair. The serving stack closes over this object — it is
+    never a jit argument — so a ctx-bearing and a ctx-free trace can never
+    share a cache entry by accident.
+
+    The sharding it induces is a *pure map*: expert GEMMs are independent
+    per expert (E is a batch dim in ``einsum("ecd,edf->ecf")``), so
+    ``shard_map`` over E needs no collectives and each expert's GEMM is the
+    exact same XLA routine as the unsharded run — which is what makes the
+    mesh plane token-stream *bit-identical* to the single-device plane
+    (the serving invariant), not merely close in norm.
+    """
+
+    mesh: Mesh
+    axis: str
+    size: int
+
+
+def expert_parallel_ctx(mesh: Mesh,
+                        cfg: ModelConfig) -> Optional[ExpertParallelCtx]:
+    """Resolve the expert-parallel axis for serving-time decode under
+    ``mesh``, via the same decode rule-set the training-side step builders
+    use. Returns None when the mesh cannot shard the expert dim (axis
+    unresolvable, or only one device on it) — callers then run the plain
+    single-device path, which is trivially equivalent."""
+    rules = rules_for(mesh, "decode", cfg)
+    axis = rules.spec(("experts",), (cfg.n_experts,))[0]
+    if axis is None:
+        return None
+    names = axis if isinstance(axis, tuple) else (axis,)
+    dims = dict(zip(mesh.axis_names, mesh.devices.shape))
+    size = 1
+    for n in names:
+        size *= dims.get(n, 1)
+    if size <= 1:
+        return None
+    return ExpertParallelCtx(mesh=mesh, axis=axis, size=size)
+
+
+def shard_serve_params(params, ctx: ExpertParallelCtx):
+    """Place serving params onto the mesh: every leaf replicated, except the
+    MoE expert weights, which are laid out along the expert-parallel axis
+    when E divides the axis size. Placement only — values are unchanged, so
+    downstream decode stays bit-identical."""
+    mesh = ctx.mesh
+    repl = NamedSharding(mesh, P())
+    params = jax.tree_util.tree_map(
+        lambda a: jax.device_put(a, repl), params)
+    moe = params.get("layers", {}).get("moe")
+    if moe is not None:
+        for name in ("gate", "up", "down"):
+            w = moe.get(name)
+            if w is not None and w.ndim >= 2 and \
+                    w.shape[1] % ctx.size == 0:
+                moe[name] = jax.device_put(
+                    w, NamedSharding(mesh, P(None, ctx.axis)))
+    return params
 
 
 def jit_serve_step(cfg, shape, mesh, kv_quant=False, overrides=None):

@@ -21,6 +21,27 @@ def make_debug_mesh(data: int = 2, model: int = 4, pod: int = 0):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_serve_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Serving-plane mesh over the first ``data * model`` host devices,
+    axes ("data", "model") — the shape ``ServeConfig.mesh_shape`` maps to.
+
+    The decode rule-set puts experts on "data" and the FFN/kv_seq dims on
+    "model", so a (2, 1) mesh is pure expert parallelism. On CPU, force
+    multiple host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes."""
+    n = data * model
+    devs = jax.devices()
+    if n > len(devs):
+        raise ValueError(
+            f"mesh_shape ({data}, {model}) needs {n} devices but only "
+            f"{len(devs)} are visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before importing "
+            f"jax")
+    return Mesh(np.asarray(devs[:n]).reshape(data, model),
+                ("data", "model"))
+
+
 def carve_server_submesh(mesh: Mesh, x: int, y: int) -> Mesh:
     """Take the trailing x*y devices of a pod mesh as the LoRA Server mesh
     (axes ("ep","pp")) — disaggregation = disjoint submeshes (DESIGN.md §4).

@@ -71,6 +71,9 @@ __all__ = [
 
 # --------------------------- request lifecycle --------------------------- #
 class RequestState(enum.Enum):
+    """Lifecycle state of one submitted request (identical on both
+    planes): QUEUED -> PREFILLING -> DECODING -> FINISHED, with CANCELLED
+    reachable from any live state and REJECTED terminal at submit()."""
     QUEUED = "queued"
     PREFILLING = "prefilling"
     DECODING = "decoding"
@@ -162,6 +165,15 @@ class ServeConfig:
     # per-launch hook dispatch cost: prices the sim plane's launch tail
     # and derates the autoscaler's TPOT budget on BOTH planes (0 = off)
     hook_launch_us: float = 0.0
+    # mesh-sharded execution plane (cluster backend, disaggregated only):
+    # (data, model) device grid. The base MoE's expert GEMMs run
+    # expert-parallel over "data" via shard_map, the ServerPool's LoRA slot
+    # tables are PARTITIONED across replicas (each holds its affinity share
+    # instead of a full duplicate), and both transports run under the mesh
+    # — token streams stay bit-identical to single-device execution. On
+    # CPU, multiple devices need XLA_FLAGS=
+    # --xla_force_host_platform_device_count=N before jax initializes.
+    mesh_shape: Optional[Tuple[int, int]] = None
     failures: Tuple[Tuple[float, int], ...] = ()
     recoveries: Tuple[Tuple[float, int], ...] = ()
     stragglers: Tuple[Tuple[float, int, float], ...] = ()
@@ -174,6 +186,22 @@ class ServeConfig:
         if self.transport not in ("host", "fused"):
             raise ValueError(f"unknown transport {self.transport!r} "
                              f"(expected 'host' or 'fused')")
+        if self.mesh_shape is not None:
+            if self.backend != "cluster":
+                raise ValueError(
+                    "mesh_shape drives real sharded execution: it needs "
+                    "backend='cluster' (the sim plane prices parallelism "
+                    "via placement_x instead)")
+            if not self.disaggregated:
+                raise ValueError(
+                    "mesh_shape requires disaggregated=True: the coupled "
+                    "step's allgather MoE reassociates floats under a "
+                    "mesh, breaking the token bit-identity invariant")
+            if len(self.mesh_shape) != 2 or \
+                    any(int(d) < 1 for d in self.mesh_shape):
+                raise ValueError(
+                    f"mesh_shape must be two positive ints (data, model), "
+                    f"got {self.mesh_shape!r}")
 
     # ------------------------- derivations --------------------------- #
     def engine_config(self) -> EngineConfig:
@@ -192,7 +220,8 @@ class ServeConfig:
             max_rounds=self.max_rounds, paged=self.paged,
             page_size=self.page_size, n_pages=self.n_pages,
             prefill_chunk=self.prefill_chunk, autoscale=self.autoscale,
-            transport=self.transport, hook_launch_us=self.hook_launch_us)
+            transport=self.transport, hook_launch_us=self.hook_launch_us,
+            mesh_shape=self.mesh_shape)
 
     def sim_config(self) -> SimConfig:
         return SimConfig(
@@ -260,7 +289,8 @@ class ServeConfig:
             max_rounds=ccfg.max_rounds, paged=ccfg.paged,
             page_size=ccfg.page_size, n_pages=ccfg.n_pages,
             prefill_chunk=ccfg.prefill_chunk, autoscale=ccfg.autoscale,
-            transport=ccfg.transport, hook_launch_us=ccfg.hook_launch_us)
+            transport=ccfg.transport, hook_launch_us=ccfg.hook_launch_us,
+            mesh_shape=ccfg.mesh_shape)
         kw.update(overrides)
         return cls(**kw)
 
@@ -555,12 +585,15 @@ class ServeSystem:
     def _make_server_pool(model: ModelConfig, cfg: ServeConfig, pool):
         """Default elastic pool of single-device LoRA-Server replicas.
         Replica slot tables are sized so the autoscaler's cache-resize
-        ceiling always physically fits."""
+        ceiling always physically fits. Under a mesh the slot tables are
+        PARTITIONED: each replica holds its affinity share of the cache
+        instead of a full duplicate."""
         slots = cfg.adapter_cache_slots
         if cfg.autoscale is not None:
             slots = max(slots, min(cfg.autoscale.max_cache_slots, pool.n))
         return ServerPool.build(model, pool, cache_slots=slots,
-                                n_replicas=max(cfg.server_replicas, 1))
+                                n_replicas=max(cfg.server_replicas, 1),
+                                partition_slots=cfg.mesh_shape is not None)
 
     # --------------------------- submission -------------------------- #
     def submit(self, prompt: Optional[Sequence[int]] = None,

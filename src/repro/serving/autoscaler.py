@@ -85,7 +85,9 @@ def converge_replicas(pool, target: int) -> bool:
     """Shared by both planes' action executors: grow/shrink ``pool`` to
     ``target`` replicas (never below one). Returns True if the replica set
     changed — the caller must then force a residency re-home sync before
-    the next decode step."""
+    the next decode step (and, for a slot-PARTITIONED pool, first
+    ``LoRACache.repartition`` so no home exceeds its replica's share —
+    see ``Cluster._apply_action``)."""
     changed = False
     while pool.n_replicas < target:
         pool.add_replica()

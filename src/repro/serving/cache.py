@@ -17,7 +17,7 @@ All times are simulation timestamps (seconds); the simulator advances them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -42,6 +42,13 @@ class LoRACache:
         self.prefetch = prefetch
         self.resident: Dict[int, ResidentAdapter] = {}
         self.loads_in_flight = 0
+        # partition-aware admission (mesh serving): when the ServerPool is
+        # slot-PARTITIONED, each adapter may only reside on its affinity
+        # home, so the shared cache must also bound residency per home —
+        # global capacity alone would admit adapters whose home replica's
+        # slot table is already full. None = unpartitioned (default).
+        self._home_of: Optional[Callable[[int], int]] = None
+        self._home_caps: Dict[int, int] = {}
         # residency delta since the last drain_dirty(): adapter ids inserted
         # or evicted. Consumed by ServerPool.sync so replica slot tables are
         # reconciled against only what CHANGED, not rescanned every round.
@@ -66,10 +73,50 @@ class LoRACache:
     def has_free_slot(self) -> bool:
         return len(self.resident) < self.capacity or self._evictable() is not None
 
-    def _evictable(self) -> Optional[int]:
+    def _evictable(self, home: Optional[int] = None) -> Optional[int]:
         cand = [(r.last_used, a) for a, r in self.resident.items()
-                if r.pins == 0]
+                if r.pins == 0 and (home is None
+                                    or self._home_of(a) == home)]
         return min(cand)[1] if cand else None
+
+    # ---------------------- partition-aware admission ------------------ #
+    def set_partition(self, home_of: Optional[Callable[[int], int]],
+                      caps: Optional[Dict[int, int]] = None) -> None:
+        """Bound residency per affinity home: ``home_of(aid)`` maps an
+        adapter to its home, ``caps[home]`` is that home's slot count
+        (a partitioned ServerPool's ``replica_for``/``partition_caps``).
+        ``home_of=None`` clears the partition."""
+        self._home_of = home_of
+        self._home_caps = dict(caps or {})
+
+    def _home_count(self, home: int) -> int:
+        return sum(1 for a in self.resident if self._home_of(a) == home)
+
+    def _home_full(self, home: int) -> bool:
+        return self._home_count(home) >= \
+            self._home_caps.get(home, self.capacity)
+
+    def repartition(self, home_of: Callable[[int], int],
+                    caps: Dict[int, int], now: float) -> List[int]:
+        """Re-home after a replica-count change: install the new partition
+        map, then evict LRU unpinned residents out of any over-capacity
+        home. Pinned residents are never evicted (a home may transiently
+        overflow while in-flight requests drain — ``admit`` stops
+        inserting into it meanwhile, exactly like a global shrink).
+        Returns the evicted adapter ids."""
+        self.set_partition(home_of, caps)
+        evicted: List[int] = []
+        for home in set(home_of(a) for a in self.resident):
+            while self._home_count(home) > \
+                    self._home_caps.get(home, self.capacity):
+                victim = self._evictable(home)
+                if victim is None:
+                    break
+                del self.resident[victim]
+                self.evictions += 1
+                self.dirty.add(victim)
+                evicted.append(victim)
+        return evicted
 
     # ------------------------------------------------------------------ #
     def admit(self, adapter_id: int, now: float) -> Optional[float]:
@@ -81,6 +128,13 @@ class LoRACache:
             r.last_used = now
             return r.first_ready if self.layerwise else r.full_ready
         self.misses += 1
+        home = self._home_of(adapter_id) if self._home_of else None
+        if home is not None and self._home_full(home) and \
+                self._evictable(home) is None:
+            # the adapter's home replica is full of pinned residents: no
+            # global eviction can make room where THIS adapter must live,
+            # so bail before mutating anything (caller queues the request)
+            return None
         if len(self.resident) >= self.capacity:
             victim = self._evictable()
             if victim is None:
@@ -94,6 +148,14 @@ class LoRACache:
                 self.evictions += 1
                 self.dirty.add(victim)
                 victim = self._evictable()
+        if home is not None:
+            while self._home_full(home):
+                victim = self._evictable(home)
+                if victim is None:
+                    return None
+                del self.resident[victim]
+                self.evictions += 1
+                self.dirty.add(victim)
         t_full = self.adapter_bytes / self.host_bw
         t_first = t_full / self.n_layers if self.layerwise else t_full
         r = ResidentAdapter(adapter_id, now, now + t_first, now + t_full, now)
@@ -127,7 +189,10 @@ class LoRACache:
         return evicted
 
     def prefetch_hint(self, adapter_id: int, now: float) -> None:
-        """Scheduler-driven prefetch (§5.3): start loading at arrival."""
+        """Scheduler-driven prefetch (§5.3): start loading at arrival.
+        ``admit`` itself bails (mutation-free) when the adapter's partition
+        home is full of pinned residents, so the hint stays safe under a
+        partitioned pool."""
         if self.prefetch and adapter_id not in self.resident:
             if len(self.resident) < self.capacity or self._evictable() is not None:
                 self.admit(adapter_id, now)

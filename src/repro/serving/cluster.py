@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -87,6 +87,13 @@ class ClusterConfig:
     # per-launch cost fed to the autoscaler's TPOT-budget derate (the real
     # plane MEASURES dispatches but models their cost; 0 = no derate)
     hook_launch_us: float = 0.0
+    # mesh-sharded execution plane: (data, model) device grid for the
+    # disaggregated decode step — the base MoE's expert GEMMs run
+    # expert-parallel over the "data" axis via shard_map (launch/mesh.py
+    # ``make_serve_mesh`` + distributed/steps.py ``expert_parallel_ctx``).
+    # Requires disaggregated=True (the coupled step's psum would break
+    # token bit-identity). None = single-device (the default).
+    mesh_shape: Optional[Tuple[int, int]] = None
 
 
 class Cluster:
@@ -97,6 +104,27 @@ class Cluster:
                  pool: AdapterPool,
                  server_pool: Optional[ServerPool] = None,
                  server: Optional[LoRAServer] = None):
+        self.mesh_ctx = None
+        if ccfg.mesh_shape is not None:
+            if not ccfg.disaggregated:
+                raise ValueError(
+                    "mesh_shape requires disaggregated=True: the coupled "
+                    "step's allgather MoE reassociates floats under a "
+                    "mesh, breaking the token bit-identity invariant")
+            from repro.distributed.steps import expert_parallel_ctx, \
+                shard_serve_params
+            from repro.launch.mesh import make_serve_mesh
+            data, model = ccfg.mesh_shape
+            if data < 1 or model < 1:
+                raise ValueError(
+                    f"mesh_shape dims must be positive, got "
+                    f"{ccfg.mesh_shape}")
+            mesh = make_serve_mesh(data, model)
+            self.mesh_ctx = expert_parallel_ctx(mesh, cfg)
+            if self.mesh_ctx is not None:
+                params = shard_serve_params(params, self.mesh_ctx)
+            # ctx None (1-device mesh / E not shardable) -> plain path:
+            # trivially bit-identical, nothing to place
         if ccfg.disaggregated:
             if server_pool is None and server is not None:
                 # legacy single-server callers: wrap into a 1-replica pool,
@@ -111,11 +139,16 @@ class Cluster:
                 raise ValueError(
                     "disaggregated mode needs a ServerPool (server_pool=) "
                     "or a legacy LoRAServer (server=)")
-            if server_pool.min_slots < ccfg.adapter_cache_slots:
-                # the shared LoRACache mirrors into each replica's slot
-                # pool, so a smaller replica could hit "cache full" mid-run
+            if server_pool.total_slots < ccfg.adapter_cache_slots:
+                # the shared LoRACache mirrors into the replicas' slot
+                # pools, so a too-small pool could hit "cache full"
+                # mid-run. Duplicated pools bound by the smallest replica
+                # (worst case routes everything to it); partitioned pools
+                # bound by the aggregate (per-home admission enforces each
+                # replica's share).
+                kind = "aggregate" if server_pool.partitioned else "replica"
                 raise ValueError(
-                    f"ServerPool replica has {server_pool.min_slots} slots "
+                    f"ServerPool {kind} capacity {server_pool.total_slots} "
                     f"< adapter_cache_slots={ccfg.adapter_cache_slots}")
         self.cfg = cfg
         self.ccfg = ccfg
@@ -128,7 +161,8 @@ class Cluster:
         self.transport = None
         if ccfg.disaggregated:
             self.transport = make_transport(ccfg.transport, self.server_pool,
-                                            n_adapters=pool.n)
+                                            n_adapters=pool.n,
+                                            mesh_ctx=self.mesh_ctx)
         self._ecfg = EngineConfig(max_len=ccfg.max_len, n_slots=ccfg.n_slots,
                                   paged=ccfg.paged, page_size=ccfg.page_size,
                                   n_pages=ccfg.n_pages,
@@ -153,7 +187,21 @@ class Cluster:
     def _new_engine(self) -> Engine:
         return Engine(self.cfg, self.params, self._ecfg, pool=self.pool,
                       server=self.server_pool,
-                      transport=self.transport or "host")
+                      transport=self.transport or "host",
+                      mesh_ctx=self.mesh_ctx)
+
+    def _pool_capacity(self) -> int:
+        """The server pool's physical cache-slot bound: aggregate capacity
+        when partitioned (per-home admission enforces each replica's
+        share), smallest replica otherwise (worst-case affinity skew)."""
+        return self.server_pool.total_slots if self.server_pool.partitioned \
+            else self.server_pool.min_slots
+
+    def _set_cache_partition(self) -> None:
+        """Install (or refresh) the shared cache's per-home residency
+        bounds from the partitioned pool's current replica set."""
+        self._caches[-1].set_partition(self.server_pool.replica_for,
+                                       self.server_pool.partition_caps())
 
     # ------------------------------------------------------------------ #
     def _prompt(self, req: Request) -> np.ndarray:
@@ -228,6 +276,8 @@ class Cluster:
         self._cache_slots = ccfg.adapter_cache_slots
         if ccfg.disaggregated:
             self._caches = {-1: self._mk_cache()}
+            if self.server_pool.partitioned:
+                self._set_cache_partition()
             owner = None
         else:
             counts = np.bincount([r.adapter_id for r in requests],
@@ -262,12 +312,12 @@ class Cluster:
         if ccfg.autoscale is not None:
             pol = ccfg.autoscale
             if self.server_pool is not None and \
-                    pol.max_cache_slots > self.server_pool.min_slots:
-                # cap the policy at the replicas' physical slot capacity —
+                    pol.max_cache_slots > self._pool_capacity():
+                # cap the policy at the pool's physical slot capacity —
                 # otherwise the control loop would chase an unreachable
                 # cache target, re-emitting the same resize action forever
                 pol = dataclasses.replace(
-                    pol, max_cache_slots=self.server_pool.min_slots)
+                    pol, max_cache_slots=self._pool_capacity())
             self._scaler = Autoscaler(pol, self.cfg, max_batch=ccfg.n_slots,
                                       has_server=self.server_pool is not None,
                                       transport=ccfg.transport,
@@ -360,8 +410,9 @@ class Cluster:
             target = act.target
             if self.server_pool is not None:
                 # physical slot tables bound the policy knob (defensive:
-                # open() already caps the autoscaler's max at min_slots)
-                target = min(target, self.server_pool.min_slots)
+                # open() already caps the autoscaler's max at the pool's
+                # capacity — aggregate when partitioned)
+                target = min(target, self._pool_capacity())
             self._cache_slots = max(target, 1)
             for c in self._caches.values():
                 c.resize(self._cache_slots, now)
@@ -384,6 +435,14 @@ class Cluster:
             if self.server_pool is None:
                 return              # coupled plane has no server replicas
             if converge_replicas(self.server_pool, act.target):
+                if self.server_pool.partitioned:
+                    # the affinity map changed, so per-home residency
+                    # bounds change with it: evict overflow out of any
+                    # now-over-capacity home BEFORE the sync mirrors
+                    # residency into the (smaller) replica slot tables
+                    self._caches[-1].repartition(
+                        self.server_pool.replica_for,
+                        self.server_pool.partition_caps(), now)
                 # re-route NOW: running requests' adapters must sit on
                 # their (new) affinity replicas before the next decode step
                 self._sync_pool()

@@ -203,7 +203,7 @@ class SlotState:
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  pool: Optional[AdapterPool] = None,
-                 server=None, transport="host"):
+                 server=None, transport="host", mesh_ctx=None):
         # ``server`` is anything satisfying LoRAServer's ``compute``
         # contract: a single LoRAServer or an elastic ``ServerPool`` of
         # replicas (serving/server_pool.py). The engine never dispatches
@@ -211,17 +211,27 @@ class Engine:
         # host round trips, the measurable baseline) or "fused" (the whole
         # disagg step as one jitted program). A prebuilt Transport instance
         # may be passed instead of a name so a cluster's engines share one
-        # stats ledger and device view.
+        # stats ledger and device view. ``mesh_ctx`` (an
+        # ``ExpertParallelCtx``) runs the disaggregated step's base expert
+        # GEMMs expert-parallel over its mesh; the KV slab/pool is then
+        # committed to the mesh so the step never mixes device assignments.
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.pool = pool
         self.server = server
+        self.mesh_ctx = mesh_ctx
+        if mesh_ctx is not None and server is None:
+            raise ValueError(
+                "mesh_ctx requires the disaggregated plane (server=): the "
+                "coupled step's allgather MoE reassociates floats under a "
+                "mesh, breaking the token bit-identity invariant")
         self.transport = None
         if server is not None:
             self.transport = transport if not isinstance(transport, str) \
                 else make_transport(transport, server,
-                                    n_adapters=pool.n if pool else None)
+                                    n_adapters=pool.n if pool else None,
+                                    mesh_ctx=mesh_ctx)
         # slot cache is lazily allocated on the first add_request so legacy
         # static-batch users don't pay the slab/pool twice
         self._k = self._v = None
@@ -331,6 +341,14 @@ class Engine:
             full = cache_mod.init_cache(self.cfg, self.n_slots,
                                         self.ecfg.max_len, dtype=dtype)
             self._k, self._v = full["k"], full["v"]
+        if self.mesh_ctx is not None:
+            # commit the KV onto the mesh (replicated) once: params and the
+            # fused view live there, and a jit mixing mesh-committed and
+            # single-device-committed operands is an error, not a transfer
+            from jax.sharding import NamedSharding, PartitionSpec
+            repl = NamedSharding(self.mesh_ctx.mesh, PartitionSpec())
+            self._k = jax.device_put(self._k, repl)
+            self._v = jax.device_put(self._v, repl)
 
     def add_request(self, rid: int, prompt: Sequence[int],
                     adapter_id: int) -> int:

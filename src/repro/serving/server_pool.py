@@ -84,6 +84,13 @@ class ServerPool:
             raise ValueError("ServerPool needs at least one replica")
         self.replicas: List = list(replicas)
         self._factory = factory
+        # partitioned pools (built with ``partition_slots=True``): each
+        # replica's slot table holds only its affinity share of the cache
+        # (ceil(total / n_replicas) slots) instead of a full duplicate —
+        # the mesh-serving layout, where aggregate slot capacity scales
+        # with the replica count. The shared LoRACache enforces the
+        # per-home bound (``set_partition``/``repartition``).
+        self.partitioned = False
         self._full_sync = True      # first sync (and any resize) is full
         # observability (the delta-sync satellite's test hooks)
         self.sync_rounds = 0
@@ -106,21 +113,33 @@ class ServerPool:
     # ------------------------------------------------------------------ #
     @classmethod
     def build(cls, model_cfg, adapter_pool, cache_slots: int,
-              n_replicas: int = 1, dtype=None) -> "ServerPool":
+              n_replicas: int = 1, dtype=None,
+              partition_slots: bool = False) -> "ServerPool":
         """Real-plane pool: ``n_replicas`` single-device ``LoRAServer``s,
         each sized to the FULL cache capacity (affinity routing partitions
         load, not worst-case residency), plus a factory so the autoscaler
-        can add replicas online."""
+        can add replicas online.
+
+        ``partition_slots=True`` (the mesh-serving layout) sizes each
+        replica to ``ceil(cache_slots / n_replicas)`` slots instead —
+        replicas partition residency, not just load, so aggregate slot
+        capacity is ~``cache_slots`` across the pool rather than per
+        replica. All replicas stay the same size (the fused transport
+        stacks their pools on a replica axis)."""
         from repro.core.lora_server import LoRAServer, ServerConfig
         if dtype is None:
             dtype = next(iter(adapter_pool.tensors.values()))["A"].dtype
+        per_rep = -(-cache_slots // max(n_replicas, 1)) if partition_slots \
+            else cache_slots
 
         def factory():
-            scfg = ServerConfig(m=1, x=1, y=1, cache_slots=cache_slots,
+            scfg = ServerConfig(m=1, x=1, y=1, cache_slots=per_rep,
                                 rank=adapter_pool.rank)
             return LoRAServer(model_cfg, scfg, dtype=dtype)
 
-        return cls([factory() for _ in range(n_replicas)], factory=factory)
+        pool = cls([factory() for _ in range(n_replicas)], factory=factory)
+        pool.partitioned = partition_slots
+        return pool
 
     @classmethod
     def analytic(cls, n_replicas: int, cache_slots: int) -> "ServerPool":
@@ -139,9 +158,23 @@ class ServerPool:
     @property
     def min_slots(self) -> int:
         """Smallest per-replica slot capacity — the cache-size bound the
-        cluster enforces (worst case routes every resident adapter to one
-        replica)."""
+        cluster enforces on a DUPLICATED pool (worst case routes every
+        resident adapter to one replica)."""
         return min(r.M for r in self.replicas)
+
+    @property
+    def total_slots(self) -> int:
+        """Aggregate slot capacity: the cache-size bound for a PARTITIONED
+        pool (each replica holds only its affinity share, so capacities
+        add), ``min_slots`` otherwise."""
+        if self.partitioned:
+            return sum(r.M for r in self.replicas)
+        return self.min_slots
+
+    def partition_caps(self) -> Dict[int, int]:
+        """Per-home slot caps for the shared cache's partition-aware
+        admission (``LoRACache.set_partition``)."""
+        return {i: r.M for i, r in enumerate(self.replicas)}
 
     def replica_for(self, adapter_id: int) -> int:
         """Affinity home of ``adapter_id`` (stable between resizes)."""

@@ -113,15 +113,18 @@ class Transport(Protocol):
                     block_table=None): ...
 
 
-def make_transport(name: str, server, n_adapters: Optional[int] = None
-                   ) -> Transport:
+def make_transport(name: str, server, n_adapters: Optional[int] = None,
+                   mesh_ctx=None) -> Transport:
     """Build the named transport plane over ``server`` (a ``ServerPool``
-    or a legacy single ``LoRAServer``)."""
+    or a legacy single ``LoRAServer``). ``mesh_ctx`` (an
+    ``ExpertParallelCtx``) runs the base expert GEMMs of either plane
+    expert-parallel over its mesh."""
     from repro.transport.fused import FusedTransport
     from repro.transport.host import HostTransport
     if name == "host":
-        return HostTransport(server)
+        return HostTransport(server, mesh_ctx=mesh_ctx)
     if name == "fused":
-        return FusedTransport(server, n_adapters=n_adapters)
+        return FusedTransport(server, n_adapters=n_adapters,
+                              mesh_ctx=mesh_ctx)
     raise ValueError(f"unknown transport {name!r} "
                      f"(expected 'host' or 'fused')")

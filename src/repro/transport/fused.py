@@ -86,10 +86,11 @@ class DeviceLoraView:
 # the fused step: one compiled program per shape bucket               #
 # ------------------------------------------------------------------ #
 def _fused_dense_fn(params, cfg, k, v, sel, scatter_idx, toks, pos_vec,
-                    view, ads, scale):
+                    view, ads, scale, mesh_ctx=None):
     k_rows, v_rows = jnp.take(k, sel, axis=1), jnp.take(v, sel, axis=1)
     logits, k_rows, v_rows = disagg_mod.disagg_decode_step_slots(
-        params, cfg, k_rows, v_rows, toks, pos_vec, view, ads, scale)
+        params, cfg, k_rows, v_rows, toks, pos_vec, view, ads, scale,
+        mesh_ctx=mesh_ctx)
     tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
     k = k.at[:, scatter_idx].set(k_rows, mode="drop")
     v = v.at[:, scatter_idx].set(v_rows, mode="drop")
@@ -101,16 +102,40 @@ _fused_dense = kv_donating_jit(_fused_dense_fn, (2, 3),
 
 
 def _fused_paged_fn(params, cfg, k_pool, v_pool, bt, toks, pos_vec, view,
-                    ads, scale):
+                    ads, scale, mesh_ctx=None):
     logits, k_pool, v_pool = disagg_mod.disagg_decode_step_slots(
         params, cfg, k_pool, v_pool, toks, pos_vec, view, ads, scale,
-        block_table=bt)
+        block_table=bt, mesh_ctx=mesh_ctx)
     tok = jnp.argmax(logits[:, : cfg.vocab_size], -1).astype(jnp.int32)
     return tok, k_pool, v_pool
 
 
 _fused_paged = kv_donating_jit(_fused_paged_fn, (2, 3),
                                static_argnames=("cfg",))
+
+
+def _make_fused_steps(mesh_ctx):
+    """Instance-local jitted step pair for a mesh-bearing transport.
+
+    The mesh ctx must be CLOSED OVER, not passed as a jit argument (it is
+    not a pytree), and the module-level jits above must never trace with a
+    mesh baked in — a closure pair per transport keeps the ctx-free cache
+    clean while the fused step still compiles to one program whose expert
+    GEMMs are shard_map-partitioned over the mesh."""
+    def dense(params, cfg, k, v, sel, scatter_idx, toks, pos_vec, view,
+              ads, scale):
+        return _fused_dense_fn(params, cfg, k, v, sel, scatter_idx, toks,
+                               pos_vec, view, ads, scale,
+                               mesh_ctx=mesh_ctx)
+
+    def paged(params, cfg, k_pool, v_pool, bt, toks, pos_vec, view, ads,
+              scale):
+        return _fused_paged_fn(params, cfg, k_pool, v_pool, bt, toks,
+                               pos_vec, view, ads, scale,
+                               mesh_ctx=mesh_ctx)
+
+    return (kv_donating_jit(dense, (2, 3), static_argnames=("cfg",)),
+            kv_donating_jit(paged, (2, 3), static_argnames=("cfg",)))
 
 
 def _pow2(n: int) -> int:
@@ -125,12 +150,18 @@ class FusedTransport:
 
     name = "fused"
 
-    def __init__(self, server, n_adapters: Optional[int] = None):
+    def __init__(self, server, n_adapters: Optional[int] = None,
+                 mesh_ctx=None):
         self.server = server
         self.n_adapters = n_adapters
+        self.mesh_ctx = mesh_ctx
         self.stats = TransportStats(transport="fused")
         self._view: Optional[DeviceLoraView] = None
         self._fingerprint = None
+        if mesh_ctx is not None:
+            self._dense, self._paged = _make_fused_steps(mesh_ctx)
+        else:
+            self._dense, self._paged = _fused_dense, _fused_paged
 
     # ------------------------- residency upload ----------------------- #
     def _replicas(self):
@@ -169,9 +200,19 @@ class FusedTransport:
                     lut[aid] = slot
         stacked = {name: jnp.stack([rep.pool[name][0] for rep in reps])
                    for name in ("up_A", "up_B", "down_A", "down_B")}
+        lut_arr = jnp.asarray(lut)
+        if self.mesh_ctx is not None:
+            # control-plane DMA onto the mesh (replicated): the fused step
+            # mixes the view with mesh-committed params/KV, so the view
+            # must share their device assignment
+            repl = jax.sharding.NamedSharding(
+                self.mesh_ctx.mesh, jax.sharding.PartitionSpec())
+            stacked = {n: jax.device_put(a, repl)
+                       for n, a in stacked.items()}
+            lut_arr = jax.device_put(lut_arr, repl)
         self._view = DeviceLoraView(stacked["up_A"], stacked["up_B"],
                                     stacked["down_A"], stacked["down_B"],
-                                    jnp.asarray(lut))
+                                    lut_arr)
         self._fingerprint = fp
         self.stats.lut_uploads += 1
         return True
@@ -186,13 +227,13 @@ class FusedTransport:
         st.host_dispatches += 1          # the ONE fused program launch
         scale = jnp.asarray(lora_scale, F32)
         if block_table is not None:
-            tok, k, v = _fused_paged(params, cfg, k, v, block_table, toks,
-                                     pos_vec, self._view, adapter_ids,
-                                     scale)
+            tok, k, v = self._paged(params, cfg, k, v, block_table, toks,
+                                    pos_vec, self._view, adapter_ids,
+                                    scale)
         else:
-            tok, k, v = _fused_dense(params, cfg, k, v, sel, scatter_idx,
-                                     toks, pos_vec, self._view, adapter_ids,
-                                     scale)
+            tok, k, v = self._dense(params, cfg, k, v, sel, scatter_idx,
+                                    toks, pos_vec, self._view, adapter_ids,
+                                    scale)
         return np.asarray(tok), k, v
 
 

@@ -32,8 +32,14 @@ class _CountingServer:
 
     def compute(self, hook, layer, rows, adapter_ids, expert_ids):
         before = getattr(self._server, "replica_launches", None)
-        out = self._server.compute(hook, layer, rows, adapter_ids,
-                                   expert_ids)
+        # host-mediated hop: activations come back to the host before the
+        # server-side jits see them. This is the honest data path of this
+        # plane, and it also keeps the per-replica server programs on their
+        # own (single-device) assignment when the client math runs on a
+        # mesh — mesh-committed rows would otherwise poison the server jit.
+        out = self._server.compute(hook, layer, np.asarray(rows),
+                                   np.asarray(adapter_ids),
+                                   np.asarray(expert_ids))
         launches = 1 if before is None else \
             max(self._server.replica_launches - before, 1)
         self._stats.hook_dispatches += 1
@@ -46,8 +52,9 @@ class HostTransport:
 
     name = "host"
 
-    def __init__(self, server):
+    def __init__(self, server, mesh_ctx=None):
         self.server = server
+        self.mesh_ctx = mesh_ctx
         self.stats = TransportStats(transport="host")
         self._counting = _CountingServer(server, self.stats)
 
@@ -59,13 +66,14 @@ class HostTransport:
         if block_table is not None:
             logits, k, v = disagg_mod.disagg_decode_step_slots(
                 params, cfg, k, v, toks, pos_vec, self._counting,
-                adapter_ids, lora_scale, block_table=block_table)
+                adapter_ids, lora_scale, block_table=block_table,
+                mesh_ctx=self.mesh_ctx)
             st.host_dispatches += 1          # token-select launch
         else:
             k_rows, v_rows = gather_rows(k, v, sel)
             logits, k_rows, v_rows = disagg_mod.disagg_decode_step_slots(
                 params, cfg, k_rows, v_rows, toks, pos_vec, self._counting,
-                adapter_ids, lora_scale)
+                adapter_ids, lora_scale, mesh_ctx=self.mesh_ctx)
             k, v = scatter_rows(k, v, k_rows, v_rows, scatter_idx)
             st.host_dispatches += 3          # gather + scatter + select
         logits = logits[:, : cfg.vocab_size]

@@ -55,3 +55,21 @@ def test_serve_config_derivers_exist():
     for method in ("engine_config", "cluster_config", "sim_config",
                    "from_sim", "from_cluster"):
         assert callable(getattr(api.ServeConfig, method))
+
+
+def test_mesh_shape_knob_exported():
+    cfg_fields = {f.name for f in api.ServeConfig.__dataclass_fields__.values()}
+    assert "mesh_shape" in cfg_fields
+
+
+def test_public_surface_documented():
+    """Every exported class/function carries a docstring — the public
+    surface is self-describing (docs/ARCHITECTURE.md links here rather
+    than restating signatures). Instances (SLO presets, the terminal-state
+    set) are exempt: they are data, not API shapes."""
+    for name in api.__all__:
+        obj = getattr(api, name)
+        if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+            continue
+        doc = inspect.getdoc(obj)
+        assert doc and doc.strip(), f"{name} is exported without a docstring"

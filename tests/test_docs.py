@@ -1,0 +1,60 @@
+"""Docs drift detector (the CI ``docs`` lane — stdlib + pytest only, no
+jax): intra-repo markdown links must resolve, ``docs/ARCHITECTURE.md``
+must mention every top-level ``src/repro`` package, and
+``docs/BENCHMARKS.md`` must document every ``benchmarks/run.py`` lane
+flag and every ``BENCH_*.json`` artifact CI uploads."""
+import pathlib
+import re
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# the authored documentation surface (PAPER.md / PAPERS.md / SNIPPETS.md
+# are generated research context, not docs we maintain links in)
+DOC_FILES = [ROOT / "README.md", ROOT / "ROADMAP.md",
+             *sorted((ROOT / "docs").glob("*.md"))]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _intra_repo_links(md: pathlib.Path):
+    for target in _LINK.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        yield target.split("#", 1)[0]
+
+
+def test_docs_exist():
+    assert (ROOT / "docs" / "ARCHITECTURE.md").is_file()
+    assert (ROOT / "docs" / "BENCHMARKS.md").is_file()
+
+
+def test_intra_repo_markdown_links_resolve():
+    missing = []
+    for md in DOC_FILES:
+        for target in _intra_repo_links(md):
+            if not (md.parent / target).exists():
+                missing.append(f"{md.relative_to(ROOT)} -> {target}")
+    assert not missing, f"dangling doc links: {missing}"
+
+
+def test_architecture_covers_every_package():
+    text = (ROOT / "docs" / "ARCHITECTURE.md").read_text()
+    pkgs = sorted(p.name for p in (ROOT / "src" / "repro").iterdir()
+                  if p.is_dir() and not p.name.startswith("__"))
+    assert pkgs, "src/repro package listing came back empty"
+    missing = [p for p in pkgs if p not in text]
+    assert not missing, \
+        f"docs/ARCHITECTURE.md does not mention packages: {missing}"
+
+
+def test_benchmarks_doc_covers_every_lane():
+    doc = (ROOT / "docs" / "BENCHMARKS.md").read_text()
+    run_src = (ROOT / "benchmarks" / "run.py").read_text()
+    lanes = re.findall(r'add_argument\("(--[a-z]+)"', run_src)
+    assert lanes, "no lane flags found in benchmarks/run.py"
+    missing = [f for f in lanes if f not in doc]
+    assert not missing, f"docs/BENCHMARKS.md missing lane flags: {missing}"
+    artifacts = set(re.findall(r"BENCH_[a-z]+\.json", run_src))
+    undocumented = [a for a in artifacts if a not in doc]
+    assert not undocumented, \
+        f"docs/BENCHMARKS.md missing artifacts: {undocumented}"
