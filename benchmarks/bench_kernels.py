@@ -63,6 +63,7 @@ def main():
         x = jax.random.normal(key, (T, d_in), jnp.float32)
         A = jax.random.normal(jax.random.fold_in(key, 1), (N, d_in, r)) * .02
         B = jax.random.normal(jax.random.fold_in(key, 2), (N, r, d_out)) * .02
+        # staticcheck: disable=SC003 (new shapes per phase; reused in loop)
         bg = jax.jit(lambda x, A, B, i: ref.bgmv_ref(x, A, B, i))
         bg(x, A, B, ids).block_until_ready()
         t0 = time.perf_counter()
@@ -71,6 +72,7 @@ def main():
         t_bgmv = (time.perf_counter() - t0) / 3 * 1e6
 
         segs, seg_ad, _ = ops.build_segments(x, ids, N, cap=64)
+        # staticcheck: disable=SC003 (new shapes per phase; reused in loop)
         sg = jax.jit(lambda s, a, A, B: ref.sgmv_ref(s, a, A, B))
         sg(segs, seg_ad, A, B).block_until_ready()
         t0 = time.perf_counter()

@@ -42,6 +42,7 @@ def main():
         dcfg = data_mod.DataConfig(cfg.vocab_size, 32, 8, tenant_id=tenant)
         pool = init_adapter_pool(cfg, 1, jax.random.fold_in(key, tenant),
                                  rank=8, dtype=jnp.float32)
+        # staticcheck: disable=SC003 (one trace per tenant, reused 40 steps)
         step = jax.jit(make_lora_train_step(cfg, params, pool.scale, opt_cfg))
         adapter, opt_state = pool.tensors, opt_mod.init(pool.tensors)
         for s in range(40):

@@ -156,5 +156,4 @@ def base_moe_gemm_seconds(cfg: ModelConfig, b: int, p: int,
     n_mats = 3 if cfg.gated_mlp else 2
     flops = 2.0 * b * k * n_mats * d * ff
     w_bytes = min(b * k, cfg.n_experts or 1) * n_mats * d * ff * 2
-    t = max(flops / (hw.flops * eff), w_bytes / hw.hbm_bw) / p
-    return t
+    return max(flops / (hw.flops * eff), w_bytes / hw.hbm_bw) / p

@@ -153,8 +153,7 @@ class LoRAServer:
     def _specs(self, row_dim_sharded: bool):
         if self.mesh is None:
             return None
-        row = P("ep") if row_dim_sharded else P()
-        return row
+        return P("ep") if row_dim_sharded else P()
 
     def _step(self, hook: str):
         """Compiled (layer, rows, slot_ids, expert_ids) -> deltas."""

@@ -123,7 +123,10 @@ def lm_loss(logits, labels):
 
 # --------------------------- step builders ------------------------------- #
 def make_train_step(cfg: ModelConfig, rules: ShardingRules,
-                    opt_cfg: opt_mod.AdamWConfig = opt_mod.AdamWConfig()):
+                    opt_cfg: opt_mod.AdamWConfig = None):
+    if opt_cfg is None:
+        opt_cfg = opt_mod.AdamWConfig()
+
     def step(params, opt_state, batch):
         with use_rules(rules):
             def loss_fn(p):
@@ -166,8 +169,9 @@ def make_serve_step(cfg: ModelConfig, rules: ShardingRules,
 
 
 # ------------------------- jit orchestration ----------------------------- #
-def jit_train_step(cfg, shape, mesh, opt_cfg=opt_mod.AdamWConfig(),
-                   overrides=None):
+def jit_train_step(cfg, shape, mesh, opt_cfg=None, overrides=None):
+    if opt_cfg is None:
+        opt_cfg = opt_mod.AdamWConfig()
     rules = rules_for(mesh, "train", cfg, overrides)
     p_sh = model_mod.param_shardings(cfg, rules)
     o_sh = {"m": p_sh, "v": p_sh, "step": NamedSharding(mesh, P())}

@@ -4,7 +4,8 @@ On TPU the kernels compile natively; elsewhere (this CPU container, and any
 test run) they execute in interpret mode, which runs the kernel body in
 Python per grid step — same math, same blocking. ``use_ref()`` can force the
 pure-jnp oracle (used by the model code on non-TPU backends where interpret
-mode would be needlessly slow inside big jits).
+mode would be needlessly slow inside big jits). REPRO_PALLAS_INTERPRET=1/0
+overrides the backend-derived interpret choice (see ``pallas_interpret``).
 
 Padding: TPU lanes want the last dim % 128 == 0 and sublanes % 8 == 0; the
 wrappers zero-pad r / d_out / cap as needed and slice back.
@@ -38,6 +39,20 @@ def kernels_enabled() -> bool:
     return on_tpu()
 
 
+def pallas_interpret() -> bool:
+    """Whether pallas_call should run in interpret mode. Default: native
+    compile on TPU, interpret elsewhere. REPRO_PALLAS_INTERPRET=1 forces
+    interpret even on TPU (kernel-body debugging); =0 forces native
+    lowering (e.g. to surface lowering errors under a CPU-emulated TPU
+    backend)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "auto")
+    if env == "1":
+        return True
+    if env == "0":
+        return False
+    return not on_tpu()
+
+
 def _pad_to(x, mult, axis):
     size = x.shape[axis]
     pad = (-size) % mult
@@ -61,7 +76,7 @@ def _bgmv_call(x, A, B, ids, interpret=True):
 def bgmv(x, A, B, ids):
     if not kernels_enabled():
         return _ref.bgmv_ref(x, A, B, ids)
-    return _bgmv_call(x, A, B, ids, interpret=not on_tpu())
+    return _bgmv_call(x, A, B, ids, interpret=pallas_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -77,7 +92,7 @@ def _bgmv_expert_call(x, A, B, ids, eids, interpret=True):
 def bgmv_expert(x, A, B, ids, eids):
     if not kernels_enabled():
         return _ref.bgmv_expert_ref(x, A, B, ids, eids)
-    return _bgmv_expert_call(x, A, B, ids, eids, interpret=not on_tpu())
+    return _bgmv_expert_call(x, A, B, ids, eids, interpret=pallas_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -94,7 +109,7 @@ def sgmv(seg_rows, seg_adapter, A, B):
     if not kernels_enabled():
         return _ref.sgmv_ref(seg_rows, seg_adapter, A, B)
     cap = seg_rows.shape[1]
-    out = _sgmv_call(seg_rows, seg_adapter, A, B, interpret=not on_tpu())
+    out = _sgmv_call(seg_rows, seg_adapter, A, B, interpret=pallas_interpret())
     return out[:, :cap]
 
 
@@ -116,7 +131,7 @@ def fused_sgmv(seg_rows, seg_slot, seg_eid, A, B):
         return _ref.fused_sgmv_ref(seg_rows, seg_slot, seg_eid, A, B)
     cap = seg_rows.shape[1]
     out = _fused_sgmv_call(seg_rows, seg_slot, seg_eid, A, B,
-                           interpret=not on_tpu())
+                           interpret=pallas_interpret())
     return out[:, :cap]
 
 
@@ -135,7 +150,7 @@ def gmm(xe, w, group_sizes=None):
     C = xe.shape[1]
     if group_sizes is None:
         group_sizes = jnp.full((xe.shape[0],), C, jnp.int32)
-    out = _gmm_call(xe, w, group_sizes, interpret=not on_tpu())
+    out = _gmm_call(xe, w, group_sizes, interpret=pallas_interpret())
     return out[:, :C]
 
 
@@ -167,7 +182,7 @@ def paged_attention(q, k_pool, v_pool, block_tables, pos, *, window: int = 0):
         return _ref.paged_attention_ref(q, k_pool, v_pool, block_tables,
                                         pos, window)
     return _paged_attention_call(q, k_pool, v_pool, block_tables, pos,
-                                 window=window, interpret=not on_tpu())
+                                 window=window, interpret=pallas_interpret())
 
 
 build_segments = _sgmv.build_segments

@@ -86,7 +86,7 @@ def compile_cell(arch: str, shape_name: str, mesh_name: str,
     from repro.analysis.memory_est import analytic_device_bytes
     analytic = analytic_device_bytes(cfg, shape, rules, shape.kind,
                                      kv_quant=kv_quant)
-    rec = {
+    return {
         "status": "OK",
         "variant": variant,
         "lower_s": round(t_lower, 1),
@@ -104,7 +104,6 @@ def compile_cell(arch: str, shape_name: str, mesh_name: str,
         },
         "roofline": rl.to_dict(),
     }
-    return rec
 
 
 def compile_disagg(arch: str, mesh_name: str = "single", x: int = 4,

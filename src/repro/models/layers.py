@@ -574,8 +574,7 @@ def _mlp_math(x, p, cfg, gate_w, up_w, down_w, inside_sm=False):
         h = jax.nn.gelu(u).astype(x.dtype)
     if not inside_sm:  # sharding constraints are illegal on manual axes
         h = constrain(h, "batch", None, "mlp")
-    y = jnp.einsum("bsf,fd->bsd", h, down_w, preferred_element_type=F32)
-    return y
+    return jnp.einsum("bsf,fd->bsd", h, down_w, preferred_element_type=F32)
 
 
 def mlp(x, p, cfg):

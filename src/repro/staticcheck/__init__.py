@@ -1,0 +1,52 @@
+"""repro.staticcheck — AST-based static guards for the serving plane's
+runtime invariants.
+
+The reproduction's correctness rests on a handful of contracts (mesh
+tokens bit-identical to single-device, one host dispatch per fused decode
+step, no host impurity inside jitted step functions, Pallas kernels that
+actually lower). Each is pinned by a runtime test, but the tests are slow
+subprocess jobs that only bite on the paths they exercise. This package is
+the lint-time twin: a stdlib-``ast`` rule engine (NO jax import — the CI
+lane runs without jax installed) that rejects invariant-breaking diffs
+repo-wide in milliseconds.
+
+Rules (docs/STATICCHECK.md maps each to its invariant + runtime test):
+
+  SC001 no-collectives-in-pure-map   SC004 pallas-kernel-discipline
+  SC002 jit-host-leak                SC005 donation-after-use
+  SC003 recompile-hazard             SC006 dispatch-budget
+
+Usage::
+
+    python -m repro.staticcheck [paths...] [--json] [--baseline FILE]
+
+Inline suppression (same line or the standalone comment line above)::
+
+    jax.device_put(x, sh)  # staticcheck: disable=SC006 (eager path only)
+
+A checked-in baseline (``staticcheck.baseline.json``, auto-loaded from the
+working directory) grandfathers existing findings; any NEW violation still
+fails.
+"""
+from repro.staticcheck.engine import (  # noqa: F401
+    Finding,
+    ModuleInfo,
+    ProjectContext,
+    Report,
+    load_baseline,
+    run_paths,
+    write_baseline,
+)
+from repro.staticcheck.rules import ALL_RULES, get_rules  # noqa: F401
+
+__all__ = [
+    "ALL_RULES",
+    "Finding",
+    "ModuleInfo",
+    "ProjectContext",
+    "Report",
+    "get_rules",
+    "load_baseline",
+    "run_paths",
+    "write_baseline",
+]

@@ -1,0 +1,28 @@
+"""Rule registry. Each rule module exports one Rule class; the engine and
+the docs check (tests/test_docs.py) both key off the ``rule_id`` strings
+declared here."""
+from repro.staticcheck.rules.sc001_collectives import NoCollectivesInPureMap
+from repro.staticcheck.rules.sc002_jit_host_leak import JitHostLeak
+from repro.staticcheck.rules.sc003_recompile import RecompileHazard
+from repro.staticcheck.rules.sc004_pallas import PallasKernelDiscipline
+from repro.staticcheck.rules.sc005_donation import DonationAfterUse
+from repro.staticcheck.rules.sc006_dispatch import DispatchBudget
+
+ALL_RULES = (
+    NoCollectivesInPureMap,
+    JitHostLeak,
+    RecompileHazard,
+    PallasKernelDiscipline,
+    DonationAfterUse,
+    DispatchBudget,
+)
+
+
+def get_rules(select=None):
+    """Instantiate the registered rules (optionally only ``select``, a
+    collection of rule ids like {"SC001"})."""
+    rules = [cls() for cls in ALL_RULES]
+    if select:
+        wanted = set(select)
+        rules = [r for r in rules if r.rule_id in wanted]
+    return rules

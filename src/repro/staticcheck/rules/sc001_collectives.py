@@ -1,0 +1,84 @@
+"""SC001 no-collectives-in-pure-map.
+
+Invariant guarded: the serving mesh plane is BIT-identical to
+single-device (tests/test_distributed.py). That holds because every
+serving-plane ``shard_map`` body (``core/disagg._ep_einsum``'s expert-GEMM
+map, and anything future PRs add) is a *pure map*: matching in/out specs
+and NO cross-shard communication, so each shard runs the exact same XLA
+routine as the unsharded program. A single ``lax.psum`` (or any other
+collective) in such a body turns the map into a reduction whose float
+reassociation breaks token bit-identity — silently, on meshes the quick
+tests don't force.
+
+Scope: every ``shard_map`` body outside the allowlisted TRAINING paths.
+``models/`` and ``training/`` shard_maps (sequence-parallel attention,
+all_to_all MoE, gradient pmean) exist to communicate — they are the
+coupled/training plane, which never promised bit-identity. The LoRA
+server's own pipeline-parallel psum (``core/lora_server.py``) reduces a
+mathematically-exact partition of disjoint expert blocks and predates the
+mesh plane; it is allowlisted by path for the same reason.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.staticcheck.astutil import (
+    call_name,
+    first_pos_arg,
+    iter_calls,
+    name_tail,
+)
+from repro.staticcheck.engine import Finding, ModuleInfo, ProjectContext
+
+COLLECTIVES = frozenset({
+    "psum", "pmean", "pmax", "pmin", "all_gather", "all_to_all",
+    "ppermute", "pshuffle", "psum_scatter", "pbroadcast",
+})
+
+# path components / suffixes whose shard_maps are ALLOWED to communicate
+ALLOW_DIR_PARTS = ("models", "training")
+ALLOW_SUFFIXES = ("core/lora_server.py",)
+
+
+def _allowlisted(relpath: str) -> bool:
+    parts = relpath.split("/")
+    if any(p in parts for p in ALLOW_DIR_PARTS):
+        return True
+    return any(relpath.endswith(s) for s in ALLOW_SUFFIXES)
+
+
+class NoCollectivesInPureMap:
+    rule_id = "SC001"
+    name = "no-collectives-in-pure-map"
+
+    def check_module(self, mod: ModuleInfo,
+                     ctx: ProjectContext) -> List[Finding]:
+        if _allowlisted(mod.relpath):
+            return []
+        findings: List[Finding] = []
+        index = mod.index
+        for call in iter_calls(mod.tree):
+            if name_tail(call_name(call)) != "shard_map":
+                continue
+            body_arg = first_pos_arg(call)
+            # keyword form: shard_map(f=..., ...) is not the repo idiom;
+            # only positional bodies are resolved
+            if body_arg is None:
+                continue
+            body = index.resolve_callable(body_arg)
+            if body is None:
+                continue
+            for fn in index.reachable([body]):
+                for inner in iter_calls(fn):
+                    tail = name_tail(call_name(inner))
+                    if tail in COLLECTIVES:
+                        findings.append(Finding(
+                            self.rule_id, mod.relpath, inner.lineno,
+                            inner.col_offset,
+                            f"collective '{tail}' reachable from a "
+                            f"serving-plane shard_map body: pure maps must "
+                            f"not communicate (mesh==single-device token "
+                            f"bit-identity contract). Training collectives "
+                            f"belong under models/ or training/."))
+        return findings

@@ -1,0 +1,184 @@
+"""SC002 jit-host-leak.
+
+Invariant guarded: jitted step functions are PURE. The serving hot path
+(engine slot steps, the fused transport's whole-decode-step program, the
+chunked-prefill steps) is compiled once per shape bucket and replayed; any
+host-side effect inside the traced function either (a) runs only at trace
+time, silently vanishing from the steady state (``print``, ``time.*``
+measurements, mutation of captured Python state), or (b) forces a
+device->host sync per call (``.item()``, ``float()/int()`` on traced
+values, ``np.random``/``np.asarray`` round trips), destroying the one-
+dispatch/step and latency contracts the transport/serving tests pin.
+
+Roots: functions decorated with ``jax.jit`` (directly or via
+``functools.partial``), passed positionally to ``jax.jit`` /
+``kv_donating_jit`` / ``pmap``, plus everything reachable from them
+through same-module calls.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.staticcheck.astutil import (
+    call_name,
+    first_pos_arg,
+    func_params,
+    iter_calls,
+    mentions_tainted,
+    mentions_tainted_direct,
+    name_tail,
+    taint_set,
+    unwrap_partial,
+)
+from repro.staticcheck.engine import Finding, ModuleInfo, ProjectContext
+
+JIT_ENTRY_TAILS = frozenset({"jit", "kv_donating_jit", "_kv_jit", "pmap"})
+
+# call-name prefixes that are a host effect under a trace
+_BANNED_PREFIXES = ("time.", "np.random.", "numpy.random.")
+_BANNED_NAMES = frozenset({"print", "input", "breakpoint"})
+_SYNC_METHODS = frozenset({"item", "block_until_ready", "tolist"})
+_CAST_FUNCS = frozenset({"float", "int", "bool"})
+# NB: no "update" — it is hopelessly overloaded (dict.update vs the pure
+# optimizer-module `opt.update(params, grads, ...)` API used repo-wide)
+_MUTATING_METHODS = frozenset({
+    "append", "extend", "insert", "setdefault", "add",
+    "remove", "discard", "pop", "popitem", "clear",
+})
+
+
+def collect_jit_roots(mod: ModuleInfo) -> List[ast.AST]:
+    """Function defs that are (or produce) jit-traced bodies."""
+    index = mod.index
+    roots: List[ast.AST] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                target = dec
+                if isinstance(dec, ast.Call):
+                    target = unwrap_partial(dec)
+                    if isinstance(target, ast.Call):
+                        target = target.func
+                tail = name_tail(call_name(target)
+                                 if isinstance(target, ast.Call)
+                                 else _dotted(target))
+                if tail in JIT_ENTRY_TAILS:
+                    roots.append(node)
+                    break
+    for call in iter_calls(mod.tree):
+        if name_tail(call_name(call)) not in JIT_ENTRY_TAILS:
+            continue
+        arg = first_pos_arg(call)
+        if arg is None:
+            continue
+        body = index.resolve_callable(arg)
+        if body is not None:
+            roots.append(body)
+    return roots
+
+
+def _dotted(node: ast.AST):
+    from repro.staticcheck.astutil import dotted_name
+    return dotted_name(node)
+
+
+class JitHostLeak:
+    rule_id = "SC002"
+    name = "jit-host-leak"
+
+    def check_module(self, mod: ModuleInfo,
+                     ctx: ProjectContext) -> List[Finding]:
+        roots = collect_jit_roots(mod)
+        if not roots:
+            return []
+        findings: List[Finding] = []
+        seen: Set[int] = set()
+        imported = _module_imports(mod.tree)
+        for fn in mod.index.reachable(roots):
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            findings.extend(self._check_fn(fn, mod, imported))
+        return findings
+
+    def _check_fn(self, fn: ast.AST, mod: ModuleInfo,
+                  imported: Set[str]) -> List[Finding]:
+        out: List[Finding] = []
+        tainted = taint_set(fn, func_params(fn))
+
+        def flag(node: ast.AST, msg: str) -> None:
+            out.append(Finding(self.rule_id, mod.relpath, node.lineno,
+                               node.col_offset, msg))
+
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                flag(node, "mutation of captured Python state "
+                           f"({type(node).__name__.lower()} "
+                           f"{', '.join(node.names)}) inside a jit-traced "
+                           "function: runs once at trace time, not per "
+                           "step")
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = call_name(node) or ""
+            tail = name_tail(dotted)
+            if dotted in _BANNED_NAMES:
+                flag(node, f"'{dotted}()' inside a jit-traced function "
+                           "executes at trace time only (and never in the "
+                           "compiled steady state)")
+            elif any(dotted.startswith(p) for p in _BANNED_PREFIXES):
+                flag(node, f"host call '{dotted}' inside a jit-traced "
+                           "function: measures/randomizes at trace time, "
+                           "constant thereafter")
+            elif tail in _SYNC_METHODS and isinstance(node.func,
+                                                      ast.Attribute):
+                if mentions_tainted(node.func.value, tainted):
+                    flag(node, f"'.{tail}()' on a traced value forces a "
+                               "device->host sync inside the compiled "
+                               "step")
+            elif dotted in _CAST_FUNCS and node.args:
+                if mentions_tainted_direct(node.args[0], tainted):
+                    flag(node, f"'{dotted}()' on a traced value inside a "
+                               "jit-traced function: concretization "
+                               "error / host sync")
+            elif tail in _MUTATING_METHODS and isinstance(node.func,
+                                                          ast.Attribute):
+                # imported names (np, optimizer modules) are pure-function
+                # namespaces, not mutable captured containers
+                base = node.func.value
+                if isinstance(base, ast.Name) and \
+                        base.id not in imported and \
+                        base.id not in _local_bindings(fn):
+                    flag(node, f"'.{tail}()' on captured name "
+                               f"'{base.id}' inside a jit-traced "
+                               "function: mutates Python state at trace "
+                               "time only")
+        return out
+
+
+def _module_imports(tree: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                names.add((alias.asname or alias.name).split(".")[0])
+    return names
+
+
+def _local_bindings(fn: ast.AST) -> Set[str]:
+    """Names bound inside ``fn`` (params, assignments, loop targets,
+    comprehension targets, with/except aliases, inner defs)."""
+    bound: Set[str] = set(func_params(fn))
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx,
+                                                     (ast.Store, ast.Del)):
+            bound.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)) and node is not fn:
+            bound.add(node.name)
+        elif isinstance(node, ast.ExceptHandler) and node.name:
+            bound.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                bound.add((alias.asname or alias.name).split(".")[0])
+    return bound

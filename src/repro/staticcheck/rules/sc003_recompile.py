@@ -1,0 +1,173 @@
+"""SC003 recompile-hazard.
+
+Invariant guarded: the serving hot path compiles a BOUNDED number of
+programs (one per shape bucket / chunk geometry — ``serving/engine.py``),
+and mesh-bearing transports key their jit caches on hashable, per-INSTANCE
+state, never per-request values (``transport/fused._make_fused_steps``).
+Three statically-visible ways to break that:
+
+  1. ``jax.jit(f)(args)`` immediately invoked: a fresh wrapper (and a
+     fresh trace) per call — the classic silent 1000x slowdown.
+  2. ``jax.jit(...)`` built inside a ``for``/``while`` body whose result
+     is neither stored in a surviving cache (dict subscript, object
+     attribute, ``.append`` to an enclosing-scope list) nor returned:
+     a fresh wrapper — and a fresh trace — per ITERATION. The blessed
+     idioms — ``_EP_EINSUM_CACHE[key] = mapped``, ``kv_donating_jit``'s
+     lazy closure cell, and the bench/train pattern that binds
+     ``step = jax.jit(f)`` once BEFORE its timing loop — all pass.
+  3. unhashable literals (list/dict/set) inside a cache-key expression:
+     a ``TypeError`` at best, a silently-always-missing cache at worst.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.staticcheck.astutil import (
+    call_name,
+    iter_calls,
+    name_tail,
+)
+from repro.staticcheck.engine import Finding, ModuleInfo, ProjectContext
+
+_JIT_TAILS = frozenset({"jit"})
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp, ast.GeneratorExp)
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    return name_tail(call_name(call)) in _JIT_TAILS
+
+
+class RecompileHazard:
+    rule_id = "SC003"
+    name = "recompile-hazard"
+
+    def check_module(self, mod: ModuleInfo,
+                     ctx: ProjectContext) -> List[Finding]:
+        findings: List[Finding] = []
+        findings += self._immediate_invocations(mod)
+        findings += self._uncached_function_local_jits(mod)
+        findings += self._unhashable_cache_keys(mod)
+        return findings
+
+    # --- 1. jax.jit(f)(x) ------------------------------------------------ #
+    def _immediate_invocations(self, mod: ModuleInfo) -> List[Finding]:
+        out = []
+        for call in iter_calls(mod.tree):
+            if isinstance(call.func, ast.Call) and _is_jit_call(call.func):
+                out.append(Finding(
+                    self.rule_id, mod.relpath, call.lineno, call.col_offset,
+                    "jax.jit(...) immediately invoked: a fresh wrapper is "
+                    "traced on EVERY call — bind the jitted function once "
+                    "(module level or a cached closure) and reuse it"))
+        return out
+
+    # --- 2. function-local jit that never reaches a cache ---------------- #
+    def _uncached_function_local_jits(self, mod: ModuleInfo
+                                      ) -> List[Finding]:
+        out = []
+        index = mod.index
+        for call in iter_calls(mod.tree):
+            if not _is_jit_call(call):
+                continue
+            if isinstance(call.func, ast.Call):
+                continue  # covered by check 1 from the outer call
+            enclosing = index.enclosing_function(call)
+            if enclosing is None:
+                continue  # module level: compiled once, shared
+            if not self._inside_loop(call, index, enclosing):
+                continue  # built once per frame: the caller's problem at
+                # worst, and the standard bench/train warmup idiom
+            local = self._assigned_local(call, index)
+            if local is None:
+                # part of a larger expression: immediate invocation is
+                # check 1; anything else (returned directly, passed on)
+                # escapes to a caller that can cache it — allow
+                continue
+            if self._local_reaches_cache(enclosing, local):
+                continue
+            out.append(Finding(
+                self.rule_id, mod.relpath, call.lineno, call.col_offset,
+                f"jax.jit(...) built inside a loop and bound to '{local}' "
+                "without reaching a surviving cache (dict/attribute/"
+                "closure) or a return: a fresh wrapper is traced every "
+                "iteration — hoist it out of the loop or key it in a "
+                "cache"))
+        return out
+
+    def _inside_loop(self, call: ast.Call, index,
+                     enclosing: ast.AST) -> bool:
+        for anc in index.parent_chain(call):
+            if anc is enclosing:
+                return False
+            if isinstance(anc, (ast.For, ast.While)):
+                return True
+        return False
+
+    def _assigned_local(self, call: ast.Call,
+                        index) -> Optional[str]:
+        parent = index.parents.get(call)
+        if isinstance(parent, ast.Assign) and parent.value is call and \
+                len(parent.targets) == 1 and \
+                isinstance(parent.targets[0], ast.Name):
+            return parent.targets[0].id
+        return None
+
+    def _local_reaches_cache(self, fn: ast.AST, local: str) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if isinstance(node.value, ast.Name) and \
+                        node.value.id == local and \
+                        any(isinstance(t, (ast.Subscript, ast.Attribute))
+                            for t in node.targets):
+                    return True
+            elif isinstance(node, ast.Call):
+                tail = name_tail(call_name(node))
+                if tail in ("append", "setdefault", "insert") and any(
+                        isinstance(a, ast.Name) and a.id == local
+                        for a in node.args):
+                    return True
+            elif isinstance(node, ast.Return) and node.value is not None:
+                for sub in ast.walk(node.value):
+                    if isinstance(sub, ast.Name) and sub.id == local:
+                        return True
+        return False
+
+    # --- 3. unhashable values in cache keys ------------------------------ #
+    def _unhashable_cache_keys(self, mod: ModuleInfo) -> List[Finding]:
+        out = []
+
+        def key_expr_sites(tree):
+            for node in ast.walk(tree):
+                # KEY = (...) assignments to names spelled like cache keys
+                if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name):
+                    name = node.targets[0].id.lower()
+                    if name == "key" or name.endswith("_key"):
+                        yield node.value
+                # CACHE[key] / CACHE.get(key) on cache-spelled names
+                elif isinstance(node, ast.Subscript):
+                    base = node.value
+                    if isinstance(base, ast.Name) and \
+                            "cache" in base.id.lower():
+                        yield node.slice
+                elif isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in ("get", "setdefault") and \
+                        isinstance(node.func.value, ast.Name) and \
+                        "cache" in node.func.value.id.lower() and node.args:
+                    yield node.args[0]
+
+        for expr in key_expr_sites(mod.tree):
+            for sub in ast.walk(expr):
+                if isinstance(sub, _UNHASHABLE):
+                    out.append(Finding(
+                        self.rule_id, mod.relpath, sub.lineno,
+                        sub.col_offset,
+                        "unhashable literal inside a jit/cache key "
+                        "expression: keys must be hashable, static values "
+                        "(tuples of ints/strs), or every lookup "
+                        "misses/raises and the program retraces"))
+                    break
+        return out

@@ -1,0 +1,209 @@
+"""SC004 pallas-kernel-discipline.
+
+Invariant guarded: every Pallas kernel lowers on TPU and has a pure-jnp
+oracle pinned by tests (tests/test_kernels.py) — the repo's kernels run
+interpret-mode on CPU, so "it passed the tests" does NOT mean "it lowers";
+these are the statically-checkable subset of the accelerator guide's
+pitfalls:
+
+  - Python ``if``/``while``/``for`` on a value read from a kernel Ref or
+    ``pl.program_id``: traced values have no truth value inside the
+    kernel; branching must be ``pl.when``/``jnp.where``. Keyword-only
+    params (bound via ``functools.partial``) are static configuration and
+    exempt — ``paged._kernel``'s ``if window:`` is the blessed pattern.
+  - 1D ``jnp.arange``/``lax.iota`` in a kernel body: 1D iota does not
+    lower on TPU (use ``lax.broadcasted_iota``).
+  - host-side ops in a kernel body: ``np.*``, ``print``, dynamic-shape
+    ops (``nonzero``/``unique``/``argwhere``).
+  - every public wrapper function that issues a ``pl.pallas_call`` must
+    have a ``<name>_ref`` twin in the sibling ``ref.py`` (defined there or
+    re-exported), and — when the repo has tests/test_kernels.py — be
+    exercised by name in it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.staticcheck.astutil import (
+    FunctionNode,
+    call_name,
+    first_pos_arg,
+    iter_calls,
+    kwonly_params,
+    mentions_tainted,
+    name_tail,
+    positional_params,
+    unwrap_partial,
+)
+from repro.staticcheck.engine import Finding, ModuleInfo, ProjectContext
+
+_DYNSHAPE = frozenset({"nonzero", "unique", "argwhere", "flatnonzero"})
+_IOTA = frozenset({"arange", "iota"})
+
+
+def _kernel_def(call: ast.Call, index) -> Optional[ast.AST]:
+    """``pl.pallas_call(kernel, ...)`` -> the kernel def (peeling a
+    ``functools.partial(kernel, **statics)``)."""
+    arg = first_pos_arg(call)
+    if arg is None:
+        return None
+    arg = unwrap_partial(arg)
+    if isinstance(arg, ast.Name):
+        return index.functions.get(arg.id)
+    if isinstance(arg, ast.Lambda):
+        return arg
+    return None
+
+
+class PallasKernelDiscipline:
+    rule_id = "SC004"
+    name = "pallas-kernel-discipline"
+
+    def check_module(self, mod: ModuleInfo,
+                     ctx: ProjectContext) -> List[Finding]:
+        findings: List[Finding] = []
+        index = mod.index
+        checked_kernels: Set[int] = set()
+        for call in iter_calls(mod.tree):
+            if name_tail(call_name(call)) != "pallas_call":
+                continue
+            kernel = _kernel_def(call, index)
+            if kernel is not None and id(kernel) not in checked_kernels:
+                checked_kernels.add(id(kernel))
+                findings.extend(self._check_kernel_body(kernel, mod))
+            findings.extend(self._check_ref_twin(call, mod, ctx))
+        return findings
+
+    # ----------------------- kernel body checks ----------------------- #
+    def _check_kernel_body(self, kernel: ast.AST,
+                           mod: ModuleInfo) -> List[Finding]:
+        out: List[Finding] = []
+        # positional params are Refs / scalar-prefetch values (traced);
+        # kw-only params are partial-bound static config
+        if isinstance(kernel, ast.Lambda):
+            traced = set(a.arg for a in kernel.args.args)
+        else:
+            traced = set(positional_params(kernel)) - set(
+                kwonly_params(kernel))
+        tainted = set(traced)
+        # anything read from a ref or the grid position is traced too
+        # (fixed point: taint flows through chains of local assignments)
+        changed = True
+        while changed:
+            changed = False
+            for node in ast.walk(kernel):
+                if not isinstance(node, ast.Assign):
+                    continue
+                val_traced = any(
+                    (isinstance(sub, ast.Name) and sub.id in tainted)
+                    or (isinstance(sub, ast.Call) and
+                        name_tail(call_name(sub)) in ("program_id",
+                                                      "num_programs"))
+                    for sub in ast.walk(node.value))
+                if val_traced:
+                    for t in node.targets:
+                        for sub in ast.walk(t):
+                            if isinstance(sub, ast.Name) and \
+                                    sub.id not in tainted:
+                                tainted.add(sub.id)
+                                changed = True
+
+        def flag(node: ast.AST, msg: str) -> None:
+            out.append(Finding(self.rule_id, mod.relpath, node.lineno,
+                               node.col_offset, msg))
+
+        for node in ast.walk(kernel):
+            if isinstance(node, (ast.If, ast.While)) and \
+                    mentions_tainted(node.test, tainted):
+                flag(node, "Python control flow on a traced value inside "
+                           "a Pallas kernel body: use pl.when / jnp.where "
+                           "(traced values have no truth value; this "
+                           "fails to lower)")
+            elif isinstance(node, ast.For) and \
+                    mentions_tainted(node.iter, tainted):
+                flag(node, "Python loop over a traced value inside a "
+                           "Pallas kernel body: loop bounds must be "
+                           "static (grid dims or fori_loop)")
+            elif isinstance(node, ast.Call):
+                dotted = call_name(node) or ""
+                tail = name_tail(dotted)
+                if tail in _IOTA:
+                    flag(node, f"1D '{tail}' inside a Pallas kernel body "
+                               "does not lower on TPU: use "
+                               "lax.broadcasted_iota (>= 2D)")
+                elif dotted.startswith(("np.", "numpy.")):
+                    flag(node, f"host numpy call '{dotted}' inside a "
+                               "Pallas kernel body: kernels run on-core, "
+                               "hoist host math to the wrapper")
+                elif dotted == "print":
+                    flag(node, "print() inside a Pallas kernel body: use "
+                               "pl.debug_print, and only while debugging")
+                elif tail in _DYNSHAPE:
+                    flag(node, f"dynamic-shape op '{tail}' inside a "
+                               "Pallas kernel body: output shapes must be "
+                               "static to lower")
+        return out
+
+    # ----------------------- ref-twin + test pin ----------------------- #
+    def _check_ref_twin(self, call: ast.Call, mod: ModuleInfo,
+                        ctx: ProjectContext) -> List[Finding]:
+        wrapper = mod.index.enclosing_function(call)
+        if wrapper is None or wrapper.name.startswith("_"):
+            return []  # private helpers are covered via their public caller
+        ref_path = mod.path.parent / "ref.py"
+        if mod.path.name == "ref.py":
+            return []
+        out: List[Finding] = []
+        want = f"{wrapper.name}_ref"
+        if not ref_path.exists():
+            out.append(Finding(
+                self.rule_id, mod.relpath, wrapper.lineno,
+                wrapper.col_offset,
+                f"kernel wrapper '{wrapper.name}' has no sibling ref.py "
+                f"oracle module (expected {want} next to it): every "
+                "Pallas kernel needs a pure-jnp twin the tests compare "
+                "against"))
+            return out
+        if want not in self._ref_exports(ref_path, ctx):
+            out.append(Finding(
+                self.rule_id, mod.relpath, wrapper.lineno,
+                wrapper.col_offset,
+                f"kernel wrapper '{wrapper.name}' has no '{want}' oracle "
+                "in the sibling ref.py: every Pallas kernel needs a "
+                "pure-jnp twin the tests compare against"))
+        tests = ctx.root / "tests" / "test_kernels.py"
+        if tests.exists() and wrapper.name not in tests.read_text():
+            out.append(Finding(
+                self.rule_id, mod.relpath, wrapper.lineno,
+                wrapper.col_offset,
+                f"kernel wrapper '{wrapper.name}' is never exercised in "
+                "tests/test_kernels.py: interpret-mode kernels rot "
+                "silently without an allclose-vs-oracle pin"))
+        return out
+
+    def _ref_exports(self, ref_path, ctx: ProjectContext) -> Set[str]:
+        cache = getattr(self, "_ref_cache", None)
+        if cache is None:
+            cache = self._ref_cache = {}
+        key = str(ref_path)
+        if key in cache:
+            return cache[key]
+        names: Set[str] = set()
+        try:
+            tree = ast.parse(ref_path.read_text())
+        except SyntaxError:
+            cache[key] = names
+            return names
+        for node in ast.walk(tree):
+            if isinstance(node, FunctionNode):
+                names.add(node.name)
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                for alias in node.names:
+                    names.add(alias.asname or alias.name)
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        names.add(t.id)
+        cache[key] = names
+        return names

@@ -1,0 +1,173 @@
+"""SC005 donation-after-use.
+
+Invariant guarded: buffers donated through ``transport.base.
+kv_donating_jit`` (the KV slab/pool on every decode/prefill-write step)
+are DEAD after the call — XLA may have updated them in place. On CPU
+(where donation is skipped) reading a donated buffer afterwards works,
+so the tier-1 suite cannot catch it; on TPU/GPU it is a
+use-after-donation: garbage KV or a runtime error. The blessed pattern
+rebinds in the same statement::
+
+    self._k, self._v = _write_chunk_pages(self._k, self._v, ...)
+
+The rule learns donated positions from ``NAME = kv_donating_jit(fn,
+(i, j))`` creation sites anywhere in the checked tree (a project-wide
+prepare pass, so importing modules are covered too), then flags any later
+load of a donated argument expression inside the same function unless it
+was rebound first.
+
+Scope limitation (documented, deliberate): only plain names and dotted
+attribute chains are tracked, and statement order is source order — a
+donated read on a loop back-edge before the rebinding statement is not
+seen. The runtime donation tests stay the backstop.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.staticcheck.astutil import (
+    FunctionNode,
+    call_name,
+    int_tuple_literal,
+    iter_calls,
+    name_tail,
+    ref_chain,
+)
+from repro.staticcheck.engine import Finding, ModuleInfo, ProjectContext
+
+_CREATORS = frozenset({"kv_donating_jit"})
+
+
+def _creation_sites(mod: ModuleInfo) -> Dict[str, Tuple[int, ...]]:
+    """``name = kv_donating_jit(fn, (0, 1))`` -> {name: (0, 1)} (also via
+    local aliases of the creator, e.g. ``_kv_jit``)."""
+    aliases = set(_CREATORS)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name in _CREATORS and alias.asname:
+                    aliases.add(alias.asname)
+    out: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Assign) and
+                isinstance(node.value, ast.Call)):
+            continue
+        if name_tail(call_name(node.value)) not in aliases:
+            continue
+        if len(node.value.args) < 2:
+            continue
+        argnums = int_tuple_literal(node.value.args[1])
+        if argnums is None:
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Name):
+                out[t.id] = argnums
+    return out
+
+
+class DonationAfterUse:
+    rule_id = "SC005"
+    name = "donation-after-use"
+
+    def prepare(self, ctx: ProjectContext) -> None:
+        for mod in ctx.modules:
+            if mod.tree is None:
+                continue
+            ctx.donating.update(_creation_sites(mod))
+
+    def check_module(self, mod: ModuleInfo,
+                     ctx: ProjectContext) -> List[Finding]:
+        if not ctx.donating:
+            return []
+        findings: List[Finding] = []
+        for fn in (n for n in ast.walk(mod.tree)
+                   if isinstance(n, FunctionNode)):
+            findings.extend(self._check_fn(fn, mod, ctx))
+        return findings
+
+    def _check_fn(self, fn: ast.AST, mod: ModuleInfo,
+                  ctx: ProjectContext) -> List[Finding]:
+        out: List[Finding] = []
+        body = list(ast.iter_child_nodes(fn))
+        # linearize the function's statements in source order
+        stmts = sorted(
+            (n for n in ast.walk(fn) if isinstance(n, ast.stmt)
+             and n is not fn),
+            key=lambda n: (n.lineno, n.col_offset))
+        del body
+        for call in iter_calls(fn):
+            if not isinstance(call.func, ast.Name):
+                continue
+            argnums = ctx.donating.get(call.func.id)
+            if argnums is None:
+                continue
+            donated = []
+            for i in argnums:
+                if i < len(call.args):
+                    chain = ref_chain(call.args[i])
+                    if chain is not None:
+                        donated.append(chain)
+            if not donated:
+                continue
+            out.extend(self._uses_after(call, donated, stmts, mod))
+        return out
+
+    def _uses_after(self, call: ast.Call, donated: List[str],
+                    stmts: List[ast.stmt], mod: ModuleInfo
+                    ) -> List[Finding]:
+        # the INNERMOST statement containing the call: its own targets
+        # rebind (an enclosing if/for would swallow sibling branches and
+        # produce phantom "reads after" from before the call)
+        owner: Optional[ast.stmt] = None
+        node: ast.AST = call
+        for anc in mod.index.parent_chain(node):
+            if isinstance(anc, ast.stmt):
+                owner = anc
+                break
+        if owner is None:
+            return []
+        live = set(donated)
+        # rebinding in the SAME statement (the canonical k,v = step(k,v))
+        if isinstance(owner, ast.Assign):
+            for t in owner.targets:
+                for sub in ast.walk(t):
+                    chain = ref_chain(sub)
+                    if chain in live:
+                        live.discard(chain)
+        out: List[Finding] = []
+        started = False
+        for st in stmts:
+            if st is owner:
+                started = True
+                continue
+            if not started or not live:
+                continue
+            if st.lineno <= owner.lineno:
+                continue
+            # stores first: a rebinding statement kills the hazard even if
+            # it also mentions the name on its RHS as part of the rebind
+            killed = set()
+            if isinstance(st, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = st.targets if isinstance(st, ast.Assign) \
+                    else [st.target]
+                for t in targets:
+                    chain = ref_chain(t)
+                    if chain in live:
+                        killed.add(chain)
+            for sub in ast.walk(st):
+                if isinstance(sub, (ast.Name, ast.Attribute)) and \
+                        isinstance(getattr(sub, "ctx", None), ast.Load):
+                    chain = ref_chain(sub)
+                    if chain in live and chain not in killed:
+                        out.append(Finding(
+                            self.rule_id, mod.relpath, sub.lineno,
+                            sub.col_offset,
+                            f"'{chain}' was donated to "
+                            f"'{call.func.id}' (line {call.lineno}) and "
+                            "read afterwards: donated buffers may be "
+                            "updated in place by XLA — rebind the result "
+                            "or copy before the call"))
+                        live.discard(chain)
+            live -= killed
+        return out

@@ -1,0 +1,97 @@
+"""SC006 dispatch-budget.
+
+Invariant guarded: the fused transport's ONE-host-dispatch-per-decode-step
+contract (tests/test_transport.py's O(1) dispatch acceptance, and the
+1-dispatch/step guard in tests/test_distributed.py under the mesh). A
+function that compiles into the fused step must not contain host round
+trips: a ``jax.device_put`` / ``np.asarray`` / ``.block_until_ready()``
+inside it either breaks the trace or — worse — silently splits the step
+back into multiple launches on the eager path, regressing exactly the
+latency the transport bench measures.
+
+Roots: every function handed to ``kv_donating_jit`` (each IS a fused
+one-dispatch program by construction), plus the named step bodies in
+``EXTRA_ROOTS`` — the disaggregated decode step that both transports
+compile — with same-module reachability. Eager-plane helpers that are
+tracer-guarded (``_replicate_eager``-style) carry inline suppressions
+with their justification; that is the intended mechanism, so the guard
+stays loud for NEW host hops.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.staticcheck.astutil import (
+    call_name,
+    first_pos_arg,
+    iter_calls,
+    name_tail,
+)
+from repro.staticcheck.engine import Finding, ModuleInfo, ProjectContext
+
+_ROOT_CREATORS = frozenset({"kv_donating_jit", "_kv_jit"})
+
+# functions that ARE the fused step's body even though the kv_donating_jit
+# wrapper lives in another module: (relpath suffix, function name)
+EXTRA_ROOTS = (
+    ("core/disagg.py", "disagg_decode_step_slots"),
+)
+
+_HOST_CALLS = frozenset({"device_put", "device_get", "block_until_ready"})
+_HOST_PREFIXES = ("np.", "numpy.", "jax.debug.")
+
+
+class DispatchBudget:
+    rule_id = "SC006"
+    name = "dispatch-budget"
+
+    def check_module(self, mod: ModuleInfo,
+                     ctx: ProjectContext) -> List[Finding]:
+        index = mod.index
+        roots: List[ast.AST] = []
+        for call in iter_calls(mod.tree):
+            if name_tail(call_name(call)) not in _ROOT_CREATORS:
+                continue
+            arg = first_pos_arg(call)
+            if arg is None:
+                continue
+            body = index.resolve_callable(arg)
+            if body is not None:
+                roots.append(body)
+        for suffix, fn_name in EXTRA_ROOTS:
+            if mod.relpath.endswith(suffix):
+                fn = index.functions.get(fn_name)
+                if fn is not None:
+                    roots.append(fn)
+        if not roots:
+            return []
+        findings: List[Finding] = []
+        seen = set()
+        for fn in index.reachable(roots):
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            findings.extend(self._check_fn(fn, mod))
+        return findings
+
+    def _check_fn(self, fn: ast.AST, mod: ModuleInfo) -> List[Finding]:
+        out: List[Finding] = []
+        for call in iter_calls(fn):
+            dotted = call_name(call) or ""
+            tail = name_tail(dotted)
+            msg = None
+            if tail in _HOST_CALLS:
+                msg = f"'{tail}' inside a one-dispatch fused step body: " \
+                      "host round trip on the fused decode path breaks " \
+                      "the 1-dispatch/step contract (move it to the " \
+                      "residency-upload/control plane, or tracer-guard " \
+                      "and suppress with a reason)"
+            elif any(dotted.startswith(p) for p in _HOST_PREFIXES):
+                msg = f"host-side call '{dotted}' inside a one-dispatch " \
+                      "fused step body: the fused program must stay " \
+                      "device-resident end to end"
+            if msg is not None:
+                out.append(Finding(self.rule_id, mod.relpath, call.lineno,
+                                   call.col_offset, msg))
+        return out

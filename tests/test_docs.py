@@ -1,8 +1,10 @@
 """Docs drift detector (the CI ``docs`` lane — stdlib + pytest only, no
 jax): intra-repo markdown links must resolve, ``docs/ARCHITECTURE.md``
-must mention every top-level ``src/repro`` package, and
+must mention every top-level ``src/repro`` package,
 ``docs/BENCHMARKS.md`` must document every ``benchmarks/run.py`` lane
-flag and every ``BENCH_*.json`` artifact CI uploads."""
+flag and every ``BENCH_*.json`` artifact named anywhere in CI, and
+``docs/STATICCHECK.md`` must document every registered staticcheck
+rule id."""
 import pathlib
 import re
 
@@ -58,3 +60,29 @@ def test_benchmarks_doc_covers_every_lane():
     undocumented = [a for a in artifacts if a not in doc]
     assert not undocumented, \
         f"docs/BENCHMARKS.md missing artifacts: {undocumented}"
+
+
+def test_benchmarks_doc_covers_every_ci_artifact():
+    """Every BENCH_*.json CI uploads (named in the workflow file, the
+    source of truth for what lands in the artifacts tab) is documented."""
+    doc = (ROOT / "docs" / "BENCHMARKS.md").read_text()
+    ci = (ROOT / ".github" / "workflows" / "ci.yml").read_text()
+    artifacts = sorted(set(re.findall(r"BENCH_\w+\.json", ci)))
+    assert artifacts, "no BENCH_*.json artifacts found in ci.yml"
+    undocumented = [a for a in artifacts if a not in doc]
+    assert not undocumented, \
+        f"docs/BENCHMARKS.md missing CI artifacts: {undocumented}"
+
+
+def test_staticcheck_doc_covers_every_rule():
+    """docs/STATICCHECK.md documents every rule id registered in the
+    checker (scraped from the rule sources, so a new SC00x cannot land
+    undocumented)."""
+    doc = (ROOT / "docs" / "STATICCHECK.md").read_text()
+    rules_dir = ROOT / "src" / "repro" / "staticcheck" / "rules"
+    ids = set()
+    for py in sorted(rules_dir.glob("sc*.py")):
+        ids.update(re.findall(r'rule_id\s*=\s*"(SC\d+)"', py.read_text()))
+    assert ids, "no rule ids found under src/repro/staticcheck/rules"
+    missing = [i for i in sorted(ids) if i not in doc]
+    assert not missing, f"docs/STATICCHECK.md missing rule ids: {missing}"

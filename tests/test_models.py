@@ -200,9 +200,9 @@ def test_flash_attention_vjp_matches_naive():
     k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
     v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
     for causal, window, qc in [(True, 0, 8), (True, 8, 8), (False, 0, 16)]:
-        f1 = lambda *a: jnp.sum(jnp.sin(ll.causal_attention(
-            *a, causal=causal, window=window, q_chunk=qc)))
-        f2 = lambda *a: jnp.sum(jnp.sin(naive(*a, causal, window)))
+        f1 = lambda *a, c=causal, w=window, q=qc: jnp.sum(jnp.sin(
+            ll.causal_attention(*a, causal=c, window=w, q_chunk=q)))
+        f2 = lambda *a, c=causal, w=window: jnp.sum(jnp.sin(naive(*a, c, w)))
         g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
         g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
         for a, b in zip(g1, g2):

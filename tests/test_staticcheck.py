@@ -1,0 +1,436 @@
+"""Tier-1 tests for the staticcheck framework (src/repro/staticcheck).
+
+Stdlib-only by design — the checker must run (and these tests must pass)
+without jax installed, because the CI staticcheck lane does exactly that.
+
+Structure: one failing ("positive") and one passing ("negative") fixture
+per rule SC001-SC006, the suppression and baseline round-trips, the CLI
+contract, and the tier-1 gate that the shipped tree itself is clean.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.staticcheck import run_paths, write_baseline
+from repro.staticcheck.rules import ALL_RULES, get_rules
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+def check(tmp_path, sources, select=None):
+    """Write {relpath: source} fixtures under tmp_path and run the checker
+    (optionally only the rules in ``select``)."""
+    for rel, src in sources.items():
+        f = tmp_path / rel
+        f.parent.mkdir(parents=True, exist_ok=True)
+        f.write_text(textwrap.dedent(src))
+    rules = get_rules(select) if select else None
+    return run_paths([str(tmp_path)], root=tmp_path, rules=rules)
+
+
+def rule_ids(report):
+    return [f.rule for f in report.findings]
+
+
+# ------------------------------ SC001 ---------------------------------- #
+PURE_MAP = """
+    import jax
+    from jax import lax
+    from jax.experimental.shard_map import shard_map
+
+    def make(mesh, spec):
+        def body(a, w):
+            return a @ w
+        return jax.jit(shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                                 out_specs=spec))
+"""
+
+REDUCING_MAP = PURE_MAP.replace("return a @ w",
+                                'return lax.psum(a @ w, "x")')
+
+
+def test_sc001_flags_collective_in_serving_shard_map(tmp_path):
+    rep = check(tmp_path, {"core/serve.py": REDUCING_MAP}, {"SC001"})
+    assert rule_ids(rep) == ["SC001"]
+    assert "psum" in rep.findings[0].message
+
+
+def test_sc001_pure_map_and_training_allowlist_pass(tmp_path):
+    rep = check(tmp_path, {
+        "core/serve.py": PURE_MAP,
+        # the training plane is allowed to communicate
+        "models/attn.py": REDUCING_MAP,
+        "training/grads.py": REDUCING_MAP,
+    }, {"SC001"})
+    assert rep.ok, rep.findings
+
+
+def test_sc001_catches_psum_seeded_into_ep_einsum(tmp_path):
+    """The acceptance scenario: a collective seeded into the REAL
+    ``core/disagg._ep_einsum`` shard_map body must trip SC001 (at runtime
+    the same seed breaks the mesh bit-identity test)."""
+    src = (SRC / "repro" / "core" / "disagg.py").read_text()
+    pure = "return jnp.einsum(eq, ai, wi, preferred_element_type=F32)"
+    assert pure in src, "disagg._ep_einsum body changed; update this test"
+    seeded = src.replace(
+        pure, 'return jax.lax.psum(jnp.einsum(eq, ai, wi, '
+              'preferred_element_type=F32), mesh_ctx.axis)')
+    rep = check(tmp_path, {"core/disagg.py": seeded}, {"SC001"})
+    assert "SC001" in rule_ids(rep)
+
+
+# ------------------------------ SC002 ---------------------------------- #
+def test_sc002_flags_host_effects_in_jitted_fn(tmp_path):
+    rep = check(tmp_path, {"serve.py": """
+        import time
+        import jax
+
+        @jax.jit
+        def step(x):
+            t0 = time.perf_counter()
+            print("tracing", t0)
+            return float(x) * 2
+    """}, {"SC002"})
+    msgs = " | ".join(f.message for f in rep.findings)
+    assert rule_ids(rep).count("SC002") == 3
+    assert "time.perf_counter" in msgs and "print" in msgs \
+        and "float" in msgs
+
+
+def test_sc002_pure_fn_and_static_config_attr_pass(tmp_path):
+    rep = check(tmp_path, {"serve.py": """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x, cfg):
+            # attribute reads off a static config object are fine
+            scale = float(cfg.scale)
+            return jnp.tanh(x) * scale
+    """}, {"SC002"})
+    assert rep.ok, rep.findings
+
+
+# ------------------------------ SC003 ---------------------------------- #
+def test_sc003_flags_immediate_invocation_and_loop_local_jit(tmp_path):
+    rep = check(tmp_path, {"serve.py": """
+        import jax
+
+        def run(xs):
+            out = [jax.jit(lambda v: v + 1)(x) for x in xs]
+            for x in xs:
+                g = jax.jit(lambda v: v * 2)
+                out.append(g(x))
+            return out
+    """}, {"SC003"})
+    assert rule_ids(rep).count("SC003") == 2
+
+
+def test_sc003_cached_and_prebound_jits_pass(tmp_path):
+    rep = check(tmp_path, {"serve.py": """
+        import jax
+
+        _CACHE = {}
+
+        def get_step(key):
+            mapped = _CACHE.get(key)
+            if mapped is None:
+                mapped = jax.jit(lambda v: v + 1)
+                _CACHE[key] = mapped
+            return mapped
+
+        def bench(f, xs):
+            # bound once per frame, reused inside the loop: fine
+            step = jax.jit(f)
+            for x in xs:
+                step(x)
+    """}, {"SC003"})
+    assert rep.ok, rep.findings
+
+
+def test_sc003_flags_unhashable_cache_key(tmp_path):
+    rep = check(tmp_path, {"serve.py": """
+        _CACHE = {}
+
+        def lookup(eq, shapes):
+            key = (eq, [s for s in shapes])
+            return _CACHE.get(key)
+    """}, {"SC003"})
+    assert "SC003" in rule_ids(rep)
+
+
+# ------------------------------ SC004 ---------------------------------- #
+def test_sc004_flags_python_branch_and_1d_iota_in_kernel(tmp_path):
+    rep = check(tmp_path, {"kern.py": """
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _kern(x_ref, o_ref):
+            i = pl.program_id(0)
+            if i > 0:
+                o_ref[...] = x_ref[...]
+            o_ref[...] = x_ref[...] + jnp.arange(8)
+
+        def _wrap(x):
+            return pl.pallas_call(_kern, out_shape=x)(x)
+    """}, {"SC004"})
+    msgs = " | ".join(f.message for f in rep.findings)
+    assert rule_ids(rep).count("SC004") == 2
+    assert "pl.when" in msgs and "broadcasted_iota" in msgs
+
+
+def test_sc004_static_kwonly_branch_passes(tmp_path):
+    # partial-bound kw-only params are static config: `if window:` is the
+    # blessed paged-attention pattern
+    rep = check(tmp_path, {"kern.py": """
+        import functools
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _kern(x_ref, o_ref, *, window):
+            if window:
+                o_ref[...] = x_ref[...] * 2
+            else:
+                o_ref[...] = x_ref[...]
+
+        def _wrap(x, window):
+            return pl.pallas_call(functools.partial(_kern, window=window),
+                                  out_shape=x)(x)
+    """}, {"SC004"})
+    assert rep.ok, rep.findings
+
+
+def test_sc004_public_wrapper_requires_ref_twin(tmp_path):
+    body = """
+        from jax.experimental import pallas as pl
+
+        def _kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def mykernel(x):
+            return pl.pallas_call(_kern, out_shape=x)(x)
+    """
+    rep = check(tmp_path, {"kernels/k.py": body}, {"SC004"})
+    assert rule_ids(rep) == ["SC004"]
+    assert "ref.py" in rep.findings[0].message
+
+    rep = check(tmp_path, {
+        "kernels/k.py": body,
+        "kernels/ref.py": "def mykernel_ref(x):\n    return x\n",
+    }, {"SC004"})
+    assert rep.ok, rep.findings
+
+
+# ------------------------------ SC005 ---------------------------------- #
+DONATE_READ_AFTER = """
+    from repro.transport.base import kv_donating_jit
+
+    def _step_fn(k, v, x):
+        return k, v
+
+    step = kv_donating_jit(_step_fn, (0, 1))
+
+    def loop(k, v, x):
+        k2, v2 = step(k, v, x)
+        return k + k2
+"""
+
+
+def test_sc005_flags_read_after_donation(tmp_path):
+    rep = check(tmp_path, {"t.py": DONATE_READ_AFTER}, {"SC005"})
+    assert rule_ids(rep) == ["SC005"]
+    assert "'k'" in rep.findings[0].message
+
+
+def test_sc005_same_statement_rebind_passes(tmp_path):
+    rep = check(tmp_path, {"t.py": DONATE_READ_AFTER.replace(
+        "k2, v2 = step(k, v, x)\n        return k + k2",
+        "k, v = step(k, v, x)\n        return k + v")}, {"SC005"})
+    assert rep.ok, rep.findings
+
+
+def test_sc005_rebind_inside_branch_is_not_a_use(tmp_path):
+    # the rebinding statement lives inside an `if`: the innermost owner
+    # statement must be the Assign, not the enclosing If (regression test
+    # for the outermost-owner bug)
+    rep = check(tmp_path, {"t.py": """
+        def _step_fn(k, v, x):
+            return k, v
+
+        step = kv_donating_jit(_step_fn, (0, 1))
+
+        def loop(k, v, xs, paged):
+            for x in xs:
+                if paged:
+                    k, v = step(k, v, x)
+                else:
+                    k, v = step(k, v, x)
+            return k, v
+    """}, {"SC005"})
+    assert rep.ok, rep.findings
+
+
+# ------------------------------ SC006 ---------------------------------- #
+def test_sc006_flags_host_hop_in_fused_step_body(tmp_path):
+    rep = check(tmp_path, {"t.py": """
+        import jax
+        import numpy as np
+
+        def _fused_fn(k, x):
+            y = jax.device_put(x)
+            return k + y, np.asarray(x)
+
+        fused = kv_donating_jit(_fused_fn, (0,))
+    """}, {"SC006"})
+    assert rule_ids(rep).count("SC006") == 2
+
+
+def test_sc006_device_resident_body_passes(tmp_path):
+    rep = check(tmp_path, {"t.py": """
+        import jax.numpy as jnp
+
+        def _fused_fn(k, x):
+            return k.at[0].set(jnp.tanh(x))
+
+        fused = kv_donating_jit(_fused_fn, (0,))
+    """}, {"SC006"})
+    assert rep.ok, rep.findings
+
+
+# -------------------------- engine mechanics ---------------------------- #
+def test_inline_suppression_same_line_and_line_above(tmp_path):
+    rep = check(tmp_path, {"serve.py": """
+        import jax
+
+        @jax.jit
+        def step(x):
+            print("a")  # staticcheck: disable=SC002 (trace-time log ok)
+            # staticcheck: disable=SC002 (trace-time log ok)
+            print("b")
+            return x
+    """}, {"SC002"})
+    assert rep.ok
+    assert rep.suppressed_count == 2
+
+
+def test_suppression_is_per_rule(tmp_path):
+    rep = check(tmp_path, {"serve.py": """
+        import jax
+
+        @jax.jit
+        def step(x):
+            print("a")  # staticcheck: disable=SC001 (wrong id)
+            return x
+    """}, {"SC002"})
+    assert rule_ids(rep) == ["SC002"]
+
+
+def test_baseline_round_trip(tmp_path):
+    src = {"serve.py": """
+        import jax
+
+        @jax.jit
+        def step(x):
+            print("a")
+            return x
+    """}
+    rep = check(tmp_path, src, {"SC002"})
+    assert len(rep.findings) == 1
+    base = tmp_path / "base.json"
+    write_baseline(base, rep.findings)
+
+    rep2 = run_paths([str(tmp_path)], root=tmp_path,
+                     baseline=base, rules=get_rules({"SC002"}))
+    assert rep2.ok and len(rep2.baselined) == 1
+
+    # a NEW violation is not covered by the grandfathered budget
+    (tmp_path / "serve.py").write_text(
+        (tmp_path / "serve.py").read_text().replace(
+            'print("a")', 'print("a")\n    print("new")'))
+    rep3 = run_paths([str(tmp_path)], root=tmp_path,
+                     baseline=base, rules=get_rules({"SC002"}))
+    assert len(rep3.findings) == 1 and len(rep3.baselined) == 1
+
+
+def test_syntax_error_surfaces_as_sc000(tmp_path):
+    rep = check(tmp_path, {"broken.py": "def f(:\n    pass\n"})
+    assert rule_ids(rep) == ["SC000"]
+
+
+# ------------------------------- CLI ------------------------------------ #
+def _run_cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.staticcheck", *args],
+        cwd=cwd, env=env, capture_output=True, text=True, timeout=120)
+
+
+def test_cli_json_exit_codes_and_baseline(tmp_path):
+    (tmp_path / "bad.py").write_text(textwrap.dedent("""
+        import jax
+
+        @jax.jit
+        def step(x):
+            print("a")
+            return x
+    """))
+    proc = _run_cli(["bad.py", "--json"], tmp_path)
+    assert proc.returncode == 1, proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["ok"] is False
+    assert report["new_findings"][0]["rule"] == "SC002"
+
+    # --write-baseline, then the default ./staticcheck.baseline.json is
+    # auto-loaded and the same tree exits 0
+    proc = _run_cli(["bad.py", "--write-baseline",
+                     "staticcheck.baseline.json"], tmp_path)
+    assert proc.returncode == 0, proc.stderr
+    proc = _run_cli(["bad.py"], tmp_path)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    proc = _run_cli(["bad.py", "--select", "SC999"], tmp_path)
+    assert proc.returncode == 2
+
+
+def test_cli_list_rules_names_all_six(tmp_path):
+    proc = _run_cli(["--list-rules"], tmp_path)
+    assert proc.returncode == 0
+    for cls in ALL_RULES:
+        assert cls.rule_id in proc.stdout
+
+
+# ----------------------------- tier-1 gate ------------------------------ #
+def test_shipped_tree_is_clean():
+    """The acceptance invocation: the repo's own sources carry no new
+    findings (inline suppressions document the few deliberate eager-path
+    exceptions)."""
+    rep = run_paths(
+        [str(REPO / "src"), str(REPO / "tests"), str(REPO / "benchmarks"),
+         str(REPO / "examples")],
+        root=REPO)
+    assert rep.ok, "\n".join(f.render() for f in rep.findings)
+    assert rep.checked_files > 100
+
+
+def test_staticcheck_imports_without_jax():
+    """The CI lane runs the checker with no jax installed: importing the
+    package must not pull jax (src/repro is a namespace package, so
+    ``import repro.staticcheck`` must stay self-contained)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC)
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "import sys; sys.modules['jax'] = None; import repro.staticcheck"],
+        env=env, capture_output=True, text=True, timeout=60)
+    assert proc.returncode == 0, proc.stderr
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))
