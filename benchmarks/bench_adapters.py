@@ -1,0 +1,73 @@
+"""Hierarchical adapter store lane: P95 TTFT, prefetch staging, and tier
+miss pricing vs adapter-universe size under zipf skew (sim plane).
+
+Each point serves the SAME skewed trace twice — async prefetch OFF vs ON —
+through a store whose host-RAM budget holds half the universe (the rest is
+priced at disk bandwidth) and a device cache small enough to thrash.
+Prefetch starts the disk->host staging at request ARRIVAL, so by the time
+a request clears the queue the disk leg is (partly) paid: ON must strictly
+beat OFF on P95 TTFT; the `strict_win` row is the acceptance gate for
+BENCH_adapters.json."""
+import dataclasses
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.serving import workload
+from repro.serving.api import ServeConfig, build_system
+
+MODEL = "mixtral-8x7b"
+UNIVERSES = (64, 128, 256)
+SLOTS = 8             # device tier far smaller than any universe
+RATE = 2.4            # req/s: enough queueing for staging to overlap
+DURATION = 120.0
+ZIPF_S = 0.7          # flatter skew: the cold tail actually gets hit
+LORA_RANK = 16
+HOST_BW = 5e9         # finite: every device miss costs real time
+DISK_BW = 5e8         # 10x slower: demoted adapters hurt without prefetch
+
+
+def _run(cfg, n_adapters: int, prefetch: bool, host_bytes: int):
+    sc = ServeConfig(backend="sim", disaggregated=True,
+                     n_adapters=n_adapters, n_instances=2, max_batch=8,
+                     lora_rank=LORA_RANK, adapter_cache_slots=SLOTS,
+                     duration=DURATION, layerwise_loading=False,
+                     store_host_bytes=host_bytes, disk_bw=DISK_BW,
+                     prefetch=prefetch)
+    sc = dataclasses.replace(
+        sc, hw=dataclasses.replace(sc.hw, host_bw=HOST_BW))
+    system = build_system(sc, cfg)
+    reqs = workload.generate(n_adapters, rate=RATE, duration=DURATION,
+                             seed=7, zipf_s=ZIPF_S)
+    system.submit_workload(reqs)
+    system.drain()
+    summary = system.summary()
+    store = system.cache_stats()["store"]
+    system.close()
+    return summary, store
+
+
+def main():
+    cfg = get_config(MODEL)
+    adapter_bytes = int(cfg.lora_adapter_bytes(LORA_RANK))
+    for n in UNIVERSES:
+        host_bytes = (n // 2) * adapter_bytes
+        off, _ = _run(cfg, n, prefetch=False, host_bytes=host_bytes)
+        on, st = _run(cfg, n, prefetch=True, host_bytes=host_bytes)
+        tag = f"adapters.n{n}"
+        emit(f"{tag}.prefetch_off.p95_ttft_s", round(off.p95_ttft, 4))
+        emit(f"{tag}.prefetch_on.p95_ttft_s", round(on.p95_ttft, 4),
+             f"speedup={off.p95_ttft / max(on.p95_ttft, 1e-9):.2f}x")
+        emit(f"{tag}.prefetch_staged", int(st["staged_hits"]),
+             f"of {int(st['prefetch_requests'])} stagings started")
+        emit(f"{tag}.cache_hit_rate", round(on.cache_hit_rate, 3),
+             f"off={off.cache_hit_rate:.3f}")
+        emit(f"{tag}.host_hit_rate", round(on.host_hit_rate, 3),
+             "host-RAM share of device-tier misses")
+        emit(f"{tag}.miss_penalty_ms", round(on.miss_penalty_s * 1e3, 3),
+             f"off={off.miss_penalty_s * 1e3:.3f}")
+        emit(f"{tag}.strict_win", bool(on.p95_ttft < off.p95_ttft),
+             "prefetch-on strictly beats prefetch-off on p95 TTFT")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,7 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 sys.path.insert(0, _ROOT)
 
 from benchmarks import (bench_ablation, bench_adapter_memory,  # noqa: E402
-                        bench_autoscaler, bench_batch_sweep,
+                        bench_adapters, bench_autoscaler, bench_batch_sweep,
                         bench_cache_ratio, bench_e2e_serving, bench_kernels,
                         bench_parallelism, bench_provisioning,
                         bench_roofline, bench_scale_instances,
@@ -37,6 +37,7 @@ ALL = [
     ("fig11_e2e_serving", bench_e2e_serving.main),
     ("transport_planes", bench_transport.main),
     ("roofline_table", bench_roofline.main),
+    ("adapter_store_prefetch", bench_adapters.main),
 ]
 
 # CI smoke set: analytic tables (instant) + the real slot-engine cluster on
@@ -75,6 +76,13 @@ PARALLELISM = [
     ("real_sharded_scaling", bench_parallelism.real_main),
 ]
 
+# CI adapter-store lane: the hierarchical store sweep (prefetch on/off over
+# a half-host-budget tier under zipf skew) — p95 TTFT, staging counters,
+# and the strict_win acceptance rows land in BENCH_adapters.json.
+ADAPTERS = [
+    ("adapter_store_prefetch", bench_adapters.main),
+]
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -92,6 +100,9 @@ def main(argv=None) -> None:
     lane.add_argument("--parallelism", action="store_true",
                       help="analytic Table-1 metrics + real mesh-sharded "
                            "scaling rows, writes BENCH_parallelism.json")
+    lane.add_argument("--adapters", action="store_true",
+                      help="hierarchical adapter store prefetch sweep, "
+                           "writes BENCH_adapters.json")
     ap.add_argument("--out", default=None,
                     help="write captured rows as JSON (default "
                          "BENCH_smoke.json in --smoke mode)")
@@ -100,7 +111,8 @@ def main(argv=None) -> None:
     suite = SMOKE if args.smoke else \
         PROVISIONING if args.provisioning else \
         TRANSPORT if args.transport else \
-        PARALLELISM if args.parallelism else ALL
+        PARALLELISM if args.parallelism else \
+        ADAPTERS if args.adapters else ALL
     timings = {}
     for name, fn in suite:
         if args.only and args.only not in name:
@@ -114,8 +126,9 @@ def main(argv=None) -> None:
     out_path = args.out or ("BENCH_smoke.json" if args.smoke else
                             "BENCH_provisioning.json" if args.provisioning
                             else "BENCH_transport.json" if args.transport
-                            else "BENCH_parallelism.json"
-                            if args.parallelism else None)
+                            else "BENCH_parallelism.json" if args.parallelism
+                            else "BENCH_adapters.json"
+                            if args.adapters else None)
     if out_path:
         with open(out_path, "w") as f:
             json.dump({"results": common.RESULTS, "timings": timings}, f,

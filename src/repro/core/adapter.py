@@ -70,17 +70,42 @@ class AdapterPool:
     rank: int
     scale: float
     tensors: Dict[str, Dict[str, jax.Array]]  # target -> {"A","B"}
+    # true per-adapter ranks for mixed-rank pools (None = uniform ``rank``);
+    # the slot tensors are still padded to ``rank``, but byte accounting and
+    # host->device staging use the true rank.
+    ranks: Optional[Tuple[int, ...]] = None
 
     def lora_ctx(self, ids: jax.Array) -> Dict:
         """Build the transformer's coupled-path lora_ctx for request ids."""
         return {"adapters": self.tensors, "ids": ids, "scale": self.scale}
 
     def bytes_per_adapter(self) -> int:
+        """Padded (slot-layout) per-adapter bytes — what one device slot
+        costs regardless of the adapter's true rank."""
         total = 0
         for t in self.tensors.values():
             for a in t.values():
                 total += a.size * a.dtype.itemsize
         return total // self.n
+
+    def rank_of(self, adapter_id: int) -> int:
+        """True rank of one adapter (pool rank for uniform pools)."""
+        if self.ranks is not None:
+            return int(self.ranks[adapter_id])
+        return int(self.rank)
+
+    def adapter_bytes(self, adapter_id: int) -> int:
+        """TRUE-RANK payload bytes of one adapter — what a host->device
+        upload actually moves. Every factor's rank axis scales linearly,
+        so this is the padded size sliced by rank_of(i) / rank; for
+        uniform pools it equals ``bytes_per_adapter()`` exactly."""
+        r = self.rank_of(adapter_id)
+        total = 0
+        for t in self.tensors.values():
+            for a in t.values():
+                per_unit_rank = a.size // self.n // self.rank
+                total += per_unit_rank * r * a.dtype.itemsize
+        return total
 
 
 def init_adapter_pool(cfg: ModelConfig, n_adapters: int, key,
@@ -135,8 +160,13 @@ def init_mixed_rank_pool(cfg: ModelConfig, ranks, key,
         b_mask = keep.reshape((1, len(ranks)) + (1,) * (B.ndim - 4)
                               + (r_max, 1))
         b_fac = rescale.reshape((1, len(ranks)) + (1,) * (B.ndim - 2))
-        t["A"] = (A * a_mask.astype(A.dtype)).astype(A.dtype)
-        t["B"] = (B * b_mask.astype(B.dtype) * b_fac).astype(B.dtype)
+        # where (not multiply) so masked-out lanes hold +0.0 exactly: the
+        # store's host staging pads trimmed ranks with fresh zeros, and the
+        # two layouts must match BITWISE (a -0.0 from `-x * 0` would not)
+        t["A"] = jnp.where(a_mask, A, jnp.zeros((), A.dtype)).astype(A.dtype)
+        t["B"] = jnp.where(b_mask, (B * b_fac).astype(B.dtype),
+                           jnp.zeros((), B.dtype)).astype(B.dtype)
+    pool.ranks = tuple(ranks)
     return pool
 
 

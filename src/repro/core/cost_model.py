@@ -43,6 +43,8 @@ class Hardware:
     ici_lat: float = 1e-6          # s per one-sided transfer
     dcn_lat: float = 10e-6
     host_bw: float = 50e9          # host RAM -> HBM staging (PCIe5-class)
+    disk_bw: float = 5e9           # disk -> host RAM (NVMe-class; the
+    #                                adapter store's second miss tier)
     hbm_gb: float = 16.0
 
     def link(self, inter_pod: bool):

@@ -57,6 +57,7 @@ from repro.serving.metrics import Summary
 from repro.serving.server_pool import ServerPool
 from repro.serving.simulator import SimConfig, Simulation
 from repro.serving.workload import Request
+from repro.store import AdapterStore
 from repro.transport import TransportStats
 
 __all__ = [
@@ -65,7 +66,7 @@ __all__ = [
     "SLOClass", "INTERACTIVE", "BATCH", "TERMINAL_STATES",
     "build_system", "Request", "Summary",
     "AutoscalePolicy", "Autoscaler", "ScaleAction", "ServerPool",
-    "TransportStats",
+    "TransportStats", "AdapterStore",
 ]
 
 
@@ -143,6 +144,18 @@ class ServeConfig:
     host_bw: float = float("inf")   # cluster: adapter load bandwidth
     layerwise_loading: bool = True
     max_rounds: int = 100_000
+    # hierarchical adapter store (disaggregated only): host-RAM tier byte
+    # budget (None = unbounded — the whole adapter universe stays
+    # host-resident, the pre-store behavior); adapters beyond the budget
+    # live on the disk tier and pay a disk read on top of the upload
+    store_host_bytes: Optional[int] = None
+    # disk-tier directory (cluster plane; None = private tempdir created
+    # on first spill) and disk read bandwidth for miss pricing
+    store_dir: Optional[str] = None
+    disk_bw: float = 5e9
+    # async prefetch staging + scheduler prefetch hints at request
+    # arrival; None follows layerwise_loading (the legacy coupling)
+    prefetch: Optional[bool] = None
     # elastic provisioning (both planes): LoRA-Server replica count at
     # start, plus the online Algorithm-1 control loop when ``autoscale``
     # carries an AutoscalePolicy (None = static provisioning)
@@ -221,7 +234,10 @@ class ServeConfig:
             page_size=self.page_size, n_pages=self.n_pages,
             prefill_chunk=self.prefill_chunk, autoscale=self.autoscale,
             transport=self.transport, hook_launch_us=self.hook_launch_us,
-            mesh_shape=self.mesh_shape)
+            mesh_shape=self.mesh_shape,
+            store_host_bytes=self.store_host_bytes,
+            store_dir=self.store_dir, disk_bw=self.disk_bw,
+            prefetch=self.prefetch)
 
     def sim_config(self) -> SimConfig:
         return SimConfig(
@@ -238,13 +254,17 @@ class ServeConfig:
             fast_kernels=self.fast_kernels,
             slow_kernel_eff_scale=self.slow_kernel_eff_scale,
             protocol=self.protocol,
-            policy=self.policy, hw=self.hw, lora_rank=self.lora_rank,
+            policy=self.policy,
+            hw=dataclasses.replace(self.hw, disk_bw=self.disk_bw),
+            lora_rank=self.lora_rank,
             zipf_s=self.zipf_s, n_adapters=self.n_adapters,
             step_overhead=self.step_overhead, failures=self.failures,
             recoveries=self.recoveries, stragglers=self.stragglers,
             straggler_mitigation=self.straggler_mitigation,
             autoscale=self.autoscale, transport=self.transport,
-            hook_launch_us=self.hook_launch_us)
+            hook_launch_us=self.hook_launch_us,
+            store_host_bytes=self.store_host_bytes,
+            prefetch=self.prefetch)
 
     # ------------------------ migration shims ------------------------ #
     @classmethod
@@ -272,7 +292,9 @@ class ServeConfig:
             stragglers=sim.stragglers,
             straggler_mitigation=sim.straggler_mitigation,
             autoscale=sim.autoscale, transport=sim.transport,
-            hook_launch_us=sim.hook_launch_us)
+            hook_launch_us=sim.hook_launch_us,
+            store_host_bytes=sim.store_host_bytes,
+            disk_bw=sim.hw.disk_bw, prefetch=sim.prefetch)
         kw.update(overrides)
         return cls(**kw)
 
@@ -290,7 +312,10 @@ class ServeConfig:
             page_size=ccfg.page_size, n_pages=ccfg.n_pages,
             prefill_chunk=ccfg.prefill_chunk, autoscale=ccfg.autoscale,
             transport=ccfg.transport, hook_launch_us=ccfg.hook_launch_us,
-            mesh_shape=ccfg.mesh_shape)
+            mesh_shape=ccfg.mesh_shape,
+            store_host_bytes=ccfg.store_host_bytes,
+            store_dir=ccfg.store_dir, disk_bw=ccfg.disk_bw,
+            prefetch=ccfg.prefetch)
         kw.update(overrides)
         return cls(**kw)
 
@@ -316,11 +341,20 @@ class Backend(Protocol):
 
     def kv_stats(self) -> Dict: ...
 
+    def cache_stats(self) -> Dict: ...
+
     def transport_stats(self) -> Dict: ...
 
     def default_duration(self) -> float: ...
 
     def scale_history(self) -> List[Dict]: ...
+
+    def load_adapter(self, adapter_id: int, tensors=None, *,
+                     alpha: Optional[float] = None) -> Optional[int]: ...
+
+    def unload_adapter(self, adapter_id: int) -> None: ...
+
+    def close(self) -> None: ...
 
 
 class SimBackend:
@@ -356,6 +390,10 @@ class SimBackend:
     def kv_stats(self) -> Dict:
         return {}                   # the analytic plane holds no real KV
 
+    def cache_stats(self) -> Dict:
+        return {"caches": {k: c.stats() for k, c in self.sim.caches.items()},
+                "store": self.sim.store.stats() if self.sim.store else {}}
+
     def transport_stats(self) -> Dict:
         return self.sim.transport_stats()   # modeled launch counts
 
@@ -365,6 +403,18 @@ class SimBackend:
     def scale_history(self) -> List[Dict]:
         sc = self.sim._scaler
         return list(sc.history) if sc is not None else []
+
+    def load_adapter(self, adapter_id: int, tensors=None, *,
+                     alpha: Optional[float] = None) -> Optional[int]:
+        # the analytic plane has no tensors to validate — only the id joins
+        self.sim.load_adapter(adapter_id)
+        return None
+
+    def unload_adapter(self, adapter_id: int) -> None:
+        self.sim.unload_adapter(adapter_id)
+
+    def close(self) -> None:
+        pass                        # nothing real to tear down
 
 
 class ClusterBackend:
@@ -442,6 +492,9 @@ class ClusterBackend:
     def kv_stats(self) -> Dict:
         return self.cluster.kv_stats()
 
+    def cache_stats(self) -> Dict:
+        return self.cluster.cache_stats()
+
     def transport_stats(self) -> Dict:
         return self.cluster.transport_stats()   # measured launch counts
 
@@ -450,6 +503,20 @@ class ClusterBackend:
 
     def scale_history(self) -> List[Dict]:
         return self.cluster.scale_history()
+
+    def load_adapter(self, adapter_id: int, tensors=None, *,
+                     alpha: Optional[float] = None) -> Optional[int]:
+        if tensors is None:
+            raise ValueError(
+                "the cluster plane loads REAL weights: pass tensors= in "
+                "the canonical host format ({'<target>.A'/'<target>.B'})")
+        return self.cluster.load_adapter(adapter_id, tensors, alpha=alpha)
+
+    def unload_adapter(self, adapter_id: int) -> None:
+        self.cluster.unload_adapter(adapter_id)
+
+    def close(self) -> None:
+        self.cluster.close()
 
 
 # ---------------------------- request handle ----------------------------- #
@@ -684,9 +751,41 @@ class ServeSystem:
     def now(self) -> float:
         return self.backend.now
 
+    # ----------------------- adapter lifecycle ------------------------ #
+    def load_adapter(self, adapter_id: int, tensors=None, *,
+                     alpha: Optional[float] = None) -> Optional[int]:
+        """Register a new adapter mid-run (vLLM-style dynamic load): the
+        id becomes targetable by subsequent ``submit`` calls. On the
+        cluster plane ``tensors`` is the canonical host format
+        ({"<target>.A"/"<target>.B"} at the adapter's true rank) and is
+        validated against the model config; ``alpha`` rescales from the
+        raw alpha/r convention into the pool's uniform scale; the
+        adapter's rank is returned. The sim plane registers the id alone
+        (returns None). Disaggregated only; raises ValueError on a
+        coupled system or invalid tensors."""
+        return self.backend.load_adapter(adapter_id, tensors, alpha=alpha)
+
+    def unload_adapter(self, adapter_id: int) -> None:
+        """Remove an adapter from every store tier and the device cache.
+        Refused (ValueError) while any unfinished request references it —
+        cancel or drain those first."""
+        self.backend.unload_adapter(adapter_id)
+
+    def close(self) -> None:
+        """Tear down backend resources (the adapter store's prefetch
+        thread and owned disk-tier tempdir). Idempotent."""
+        self.backend.close()
+
     # ---------------------------- metrics ----------------------------- #
     def kv_stats(self) -> Dict:
         return self.backend.kv_stats()
+
+    def cache_stats(self) -> Dict:
+        """Adapter-plane telemetry: per-cache device-tier counters
+        (hits/misses/evictions/prefetch_hits/miss_load_seconds under
+        "caches") and the store's host/disk tier counters (under
+        "store"). Benches read THIS instead of hand-instrumenting."""
+        return self.backend.cache_stats()
 
     def transport_stats(self) -> Dict:
         """Hook-transport launch accounting (host dispatches, device
@@ -716,7 +815,8 @@ class ServeSystem:
         return metrics.summarize(
             reqs, duration if duration is not None
             else self.backend.default_duration(),
-            ttft_slo=sc.ttft_slo, tpot_slo=sc.tpot_slo, warmup=warmup)
+            ttft_slo=sc.ttft_slo, tpot_slo=sc.tpot_slo, warmup=warmup,
+            cache_stats=self.backend.cache_stats())
 
 
 def build_system(cfg: ServeConfig, model: ModelConfig, *, params=None,

@@ -195,13 +195,30 @@ class Autoscaler:
 
     def control(self, now: float, *, in_flight: int, queued: int,
                 cache_slots: int, n_instances: int,
-                n_replicas: int) -> List[ScaleAction]:
+                n_replicas: int,
+                host_hit_rate: Optional[float] = None,
+                miss_cost_ratio: float = 1.0) -> List[ScaleAction]:
         """One Algorithm-1 evaluation over the live window; returns the
         actions that converge the system to the new targets (empty when
-        nothing changes or the interval has not elapsed)."""
+        nothing changes or the interval has not elapsed).
+
+        ``host_hit_rate``/``miss_cost_ratio`` feed the second-tier derate:
+        Algorithm 1's cache-size equation assumes every miss is a cold
+        start, but with a host-RAM tier a fraction ``h`` of misses only
+        pays ``ratio`` (= c_host / c_disk <= 1) of the worst-case penalty.
+        The expected miss cost scales by f = h*ratio + (1-h), so the IAR
+        target relaxes to alpha_eff = 1 - (1-alpha)/f: cheaper misses
+        tolerate a higher miss RATE at the same TTFT damage, shrinking
+        M*. ``host_hit_rate=None`` (no tier observations yet) keeps the
+        cold-start model."""
         pol = self.policy
         if not self.due(now):
             return []
+        alpha_eff = pol.alpha
+        if host_hit_rate is not None:
+            f = float(np.clip(host_hit_rate * miss_cost_ratio
+                              + (1.0 - host_hit_rate), 1e-3, 1.0))
+            alpha_eff = max(1.0 - (1.0 - pol.alpha) / f, 0.0)
         self._next_control = now + pol.control_interval
         self._prune(now)
         rate = self.rate(now)
@@ -230,7 +247,7 @@ class Autoscaler:
             counts = np.array([sum(1 for _, a in self._arrivals if a == s)
                                for s in seen], float)
             p_seen = counts / counts.sum()
-            m_star = min_cache_size(p_seen, lb, pol.alpha)
+            m_star = min_cache_size(p_seen, lb, alpha_eff)
         else:
             m_star = pol.min_cache_slots
         cache_t = int(np.clip(max(m_star, math.ceil(1.2 * distinct)),
@@ -293,6 +310,9 @@ class Autoscaler:
         self.history.append({
             "now": now, "rate": rate, "lb": lb,
             "iar": round(float(achieved_iar), 4),
+            "alpha_eff": round(float(alpha_eff), 4),
+            "host_hit_rate": (round(float(host_hit_rate), 4)
+                              if host_hit_rate is not None else None),
             "targets": {"cache_slots": cache_t, "instances": inst_t,
                         "replicas": rep_t},
             "actions": [(a.kind, a.target) for a in actions],

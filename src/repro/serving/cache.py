@@ -28,18 +28,26 @@ class ResidentAdapter:
     full_ready: float      # entire adapter resident
     last_used: float
     pins: int = 0
+    prefetched: bool = False   # admitted by a hint, not yet used by a request
 
 
 class LoRACache:
     def __init__(self, capacity: int, adapter_bytes: int, n_layers: int,
                  host_bw: float = 50e9, layerwise: bool = True,
-                 prefetch: bool = True):
+                 prefetch: bool = True,
+                 load_seconds_fn: Optional[Callable[[int, float],
+                                           float]] = None):
         self.capacity = capacity
         self.adapter_bytes = adapter_bytes
         self.n_layers = max(n_layers, 1)
         self.host_bw = host_bw
         self.layerwise = layerwise
         self.prefetch = prefetch
+        # tier-aware miss pricing: when an adapter store backs this cache,
+        # the full-load time depends on WHERE the adapter lives (host RAM
+        # vs disk) and its true rank — the store's load_seconds supplies
+        # it. None = the flat adapter_bytes/host_bw model.
+        self.load_seconds_fn = load_seconds_fn
         self.resident: Dict[int, ResidentAdapter] = {}
         self.loads_in_flight = 0
         # partition-aware admission (mesh serving): when the ServerPool is
@@ -58,6 +66,8 @@ class LoRACache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.prefetch_hits = 0       # hits on hint-admitted residents
+        self.miss_load_seconds = 0.0  # summed full-load cost of misses
 
     # ------------------------------------------------------------------ #
     def is_ready(self, adapter_id: int, now: float) -> bool:
@@ -125,6 +135,9 @@ class LoRACache:
         r = self.resident.get(adapter_id)
         if r is not None:
             self.hits += 1
+            if r.prefetched:
+                self.prefetch_hits += 1
+                r.prefetched = False
             r.last_used = now
             return r.first_ready if self.layerwise else r.full_ready
         self.misses += 1
@@ -156,7 +169,13 @@ class LoRACache:
                 del self.resident[victim]
                 self.evictions += 1
                 self.dirty.add(victim)
-        t_full = self.adapter_bytes / self.host_bw
+        if self.load_seconds_fn is not None:
+            # `now` lets tiered stores credit async staging work already
+            # done by admission time (the prefetch overlap)
+            t_full = self.load_seconds_fn(adapter_id, now)
+        else:
+            t_full = self.adapter_bytes / self.host_bw
+        self.miss_load_seconds += t_full
         t_first = t_full / self.n_layers if self.layerwise else t_full
         r = ResidentAdapter(adapter_id, now, now + t_first, now + t_full, now)
         self.resident[adapter_id] = r
@@ -195,7 +214,30 @@ class LoRACache:
         partitioned pool."""
         if self.prefetch and adapter_id not in self.resident:
             if len(self.resident) < self.capacity or self._evictable() is not None:
-                self.admit(adapter_id, now)
+                if self.admit(adapter_id, now) is not None:
+                    self.resident[adapter_id].prefetched = True
+
+    def invalidate(self, adapter_id: int) -> bool:
+        """Force-evict one adapter (dynamic unload). Refuses pinned
+        residents — the caller must reject unload while requests are in
+        flight. Returns whether the adapter was resident."""
+        r = self.resident.get(adapter_id)
+        if r is None:
+            return False
+        if r.pins > 0:
+            raise ValueError(f"adapter {adapter_id} is pinned by "
+                             f"{r.pins} in-flight request(s)")
+        del self.resident[adapter_id]
+        self.evictions += 1
+        self.dirty.add(adapter_id)
+        return True
+
+    def stats(self) -> Dict[str, float]:
+        """Telemetry counters (surfaced through Backend.cache_stats)."""
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "prefetch_hits": self.prefetch_hits,
+                "miss_load_seconds": self.miss_load_seconds}
 
     def pin(self, adapter_id: int) -> None:
         self.resident[adapter_id].pins += 1

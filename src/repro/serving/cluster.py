@@ -44,7 +44,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.adapter import AdapterPool
-from repro.core.lora_server import LoRAServer, pool_tensors_from_adapter
+from repro.core.lora_server import LoRAServer
 from repro.models.cache import pages_for
 from repro.serving.autoscaler import Autoscaler, AutoscalePolicy, \
     ScaleAction, converge_replicas, pick_drain_candidate
@@ -54,6 +54,7 @@ from repro.serving.scheduler import InstanceState, Scheduler, \
     assign_adapters_greedy
 from repro.serving.server_pool import ServerPool
 from repro.serving.workload import Request
+from repro.store import AdapterStore
 from repro.transport import make_transport
 
 
@@ -94,6 +95,21 @@ class ClusterConfig:
     # Requires disaggregated=True (the coupled step's psum would break
     # token bit-identity). None = single-device (the default).
     mesh_shape: Optional[Tuple[int, int]] = None
+    # hierarchical adapter store (disaggregated only): host-RAM tier byte
+    # budget (None = unbounded, the whole universe stays host-resident),
+    # disk-tier directory (None = private tempdir created on first spill),
+    # and disk read bandwidth for miss pricing
+    store_host_bytes: Optional[int] = None
+    store_dir: Optional[str] = None
+    disk_bw: float = 5e9
+    # async prefetch staging + scheduler prefetch hints; None follows
+    # layerwise_loading (the legacy coupling of the two knobs)
+    prefetch: Optional[bool] = None
+
+    @property
+    def prefetch_on(self) -> bool:
+        return self.layerwise_loading if self.prefetch is None \
+            else self.prefetch
 
 
 class Cluster:
@@ -155,6 +171,16 @@ class Cluster:
         self.pool = pool
         self.params = params
         self.server_pool = server_pool if ccfg.disaggregated else None
+        # hierarchical adapter store: host/disk tiers + async staging + the
+        # dynamic register/unregister lifecycle. Disaggregated-only — the
+        # coupled path gathers adapters from the static pool inside the
+        # model, so its universe is frozen at startup by construction.
+        self.store: Optional[AdapterStore] = None
+        if ccfg.disaggregated:
+            self.store = AdapterStore(
+                cfg, pool, host_bytes=ccfg.store_host_bytes,
+                store_dir=ccfg.store_dir, host_bw=ccfg.host_bw,
+                disk_bw=ccfg.disk_bw, prefetch=ccfg.prefetch_on)
         # ONE transport for the whole cluster: every instance's engine
         # shares its stats ledger (system-level launch counts) and, on the
         # fused plane, its device-resident LUT/pool view
@@ -221,10 +247,12 @@ class Cluster:
         """Delta-based residency mirror: reconcile the replicas' slot
         tables against only the adapter ids the shared cache mutated since
         the last sync (``LoRACache.dirty``), instead of the pre-pool full
-        rescan of every resident adapter every round."""
-        self.server_pool.sync(
-            self._caches[-1],
-            tensors_fn=lambda aid: pool_tensors_from_adapter(self.pool, aid))
+        rescan of every resident adapter every round. Uploads stage
+        through the adapter store (consuming async-prefetched results and
+        promoting disk-tier adapters), bitwise identical to the direct
+        pool extraction it replaces."""
+        self.server_pool.sync(self._caches[-1],
+                              tensors_fn=self.store.server_tensors)
 
     # ------------------------------------------------------------------ #
     # incremental session API (serving/api.py front door)                 #
@@ -244,7 +272,13 @@ class Cluster:
                 f"request {req.rid}: prompt_len {plen} + output_len "
                 f"{req.output_len} cannot fit a max_len={ccfg.max_len} "
                 f"slot")
-        if not 0 <= req.adapter_id < self.pool.n:
+        if self.store is not None:
+            # dynamic universe: any id the store currently knows is legal
+            if not self.store.has(req.adapter_id):
+                raise ValueError(
+                    f"request {req.rid}: adapter_id {req.adapter_id} is "
+                    f"not registered in the adapter store")
+        elif not 0 <= req.adapter_id < self.pool.n:
             # out-of-range ids would be silently clamped by the gather
             # kernels to the last adapter's weights
             raise ValueError(
@@ -332,7 +366,9 @@ class Cluster:
         return LoRACache(self._cache_slots, self.pool.bytes_per_adapter(),
                          self.cfg.n_layers, host_bw=self.ccfg.host_bw,
                          layerwise=self.ccfg.layerwise_loading,
-                         prefetch=self.ccfg.layerwise_loading)
+                         prefetch=self.ccfg.prefetch_on,
+                         load_seconds_fn=self.store.load_seconds
+                         if self.store is not None else None)
 
     @property
     def now(self) -> float:
@@ -399,7 +435,11 @@ class Cluster:
             cache_slots=self._cache_slots,
             n_instances=self._n_admitting(),
             n_replicas=self.server_pool.n_replicas
-            if self.server_pool else 1)
+            if self.server_pool else 1,
+            host_hit_rate=self.store.host_hit_rate()
+            if self.store else None,
+            miss_cost_ratio=self.store.miss_cost_ratio()
+            if self.store else 1.0)
         for act in actions:
             self._apply_action(act, now)
         return actions
@@ -496,6 +536,10 @@ class Cluster:
         stream the front door streams from."""
         ccfg = self.ccfg
         now = self.now
+        if self.store is not None:
+            # land async-staged adapters at the round boundary, BEFORE any
+            # sync this round consumes them (main thread only)
+            self.store.drain_prefetched()
         scale_actions = self._run_control(now)
         enqueued: List[Request] = []
         while self._pi < len(self._pending) and \
@@ -504,6 +548,12 @@ class Cluster:
             self._pi += 1
             if not r.cancelled:             # cancelled while still pending
                 self.sched.enqueue(r, now)
+                if self.store is not None:
+                    # start the REAL staging (disk read + CPU fusion) at
+                    # arrival, overlapped with this round's decode; the
+                    # cache's prefetch_hint (inside enqueue) starts the
+                    # virtual-time load clock in parallel
+                    self.store.prefetch(r.adapter_id)
                 if self._scaler is not None:
                     self._scaler.observe_arrival(now, r.adapter_id)
                 enqueued.append(r)
@@ -556,9 +606,53 @@ class Cluster:
                             for eng in self.engines.values()))
 
     def cache_stats(self) -> Dict:
-        return {k: {"hits": c.hits, "misses": c.misses,
-                    "evictions": c.evictions}
-                for k, c in self._caches.items()}
+        """Device-tier counters per cache (-1 = the shared disagg cache)
+        plus the adapter store's host/disk tier telemetry."""
+        return {"caches": {k: c.stats() for k, c in self._caches.items()},
+                "store": self.store.stats() if self.store else {}}
+
+    # --------------------- dynamic adapter lifecycle -------------------- #
+    def load_adapter(self, adapter_id: int, tensors, *,
+                     alpha: Optional[float] = None) -> int:
+        """Register a new adapter mid-run (vLLM-style dynamic load):
+        validates shapes/rank against the model config, then makes the id
+        immediately targetable by requests. Disaggregated-only. Returns
+        the adapter's rank."""
+        if self.store is None:
+            raise ValueError(
+                "dynamic adapter load requires the disaggregated plane "
+                "(the coupled path gathers from the static pool in-model)")
+        return self.store.register(adapter_id, tensors, alpha=alpha)
+
+    def unload_adapter(self, adapter_id: int) -> None:
+        """Remove an adapter from every tier. Refused while any submitted
+        request still references it (queued, running, or pinned) — the
+        eviction would yank weights out from under in-flight decode."""
+        if self.store is None:
+            raise ValueError(
+                "dynamic adapter unload requires the disaggregated plane")
+        if not self.store.has(adapter_id):
+            raise ValueError(f"adapter {adapter_id} is not registered")
+        for r in self._reqs.values():
+            if r.adapter_id == adapter_id and r.finish < 0 \
+                    and not r.cancelled:
+                raise ValueError(
+                    f"adapter {adapter_id} is in use by unfinished "
+                    f"request {r.rid}")
+        cache = self._caches.get(-1)
+        if cache is not None:
+            cache.invalidate(adapter_id)   # raises if somehow pinned
+            # flush the eviction into the replica slot tables NOW: the
+            # fused transport's residency fingerprint (pool version +
+            # replica mutations) must stop mapping this id before any
+            # future decode step
+            self._sync_pool()
+        self.store.unregister(adapter_id)
+
+    def close(self) -> None:
+        """Tear down the adapter store (prefetch thread + owned tempdir)."""
+        if self.store is not None:
+            self.store.close()
 
     def kv_stats(self) -> Dict[int, Dict]:
         return {i: eng.kv_stats() for i, eng in self.engines.items()}

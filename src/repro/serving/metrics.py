@@ -31,14 +31,40 @@ class Summary:
     #                             token): SLO violations of unbounded TTFT
     n_cancelled: int = 0        # client-cancelled: excluded from throughput,
     #                             goodput, and attainment (not a violation)
+    # adapter-plane telemetry (from Backend.cache_stats; nan = not supplied)
+    cache_hit_rate: float = float("nan")      # device-tier hits/(hits+miss)
+    prefetch_hit_rate: float = float("nan")   # hint-admitted hits/(hits+miss)
+    host_hit_rate: float = float("nan")       # host-RAM share of tier misses
+    miss_penalty_s: float = float("nan")      # mean full-load s per miss
 
     def meets_slos(self, ttft_slo=TTFT_SLO, tpot_slo=TPOT_SLO) -> bool:
         return self.p95_ttft <= ttft_slo and self.mean_tpot <= tpot_slo
 
 
+def _cache_telemetry(cache_stats: Dict) -> Dict[str, float]:
+    """Fold Backend.cache_stats ({"caches": {cid: counters}, "store":
+    tier counters}) into the four Summary telemetry rates."""
+    out = {}
+    caches = (cache_stats or {}).get("caches", {})
+    hits = sum(c.get("hits", 0) for c in caches.values())
+    misses = sum(c.get("misses", 0) for c in caches.values())
+    pre = sum(c.get("prefetch_hits", 0) for c in caches.values())
+    load_s = sum(c.get("miss_load_seconds", 0.0) for c in caches.values())
+    if hits + misses > 0:
+        out["cache_hit_rate"] = hits / (hits + misses)
+        out["prefetch_hit_rate"] = pre / (hits + misses)
+    if misses > 0:
+        out["miss_penalty_s"] = load_s / misses
+    store = (cache_stats or {}).get("store", {})
+    tier = store.get("host_hits", 0) + store.get("disk_hits", 0)
+    if tier > 0:
+        out["host_hit_rate"] = store["host_hits"] / tier
+    return out
+
+
 def summarize(requests: Sequence[Request], duration: float,
               ttft_slo: float = TTFT_SLO, tpot_slo: float = TPOT_SLO,
-              warmup: float = 0.1) -> Summary:
+              warmup: float = 0.1, cache_stats: Dict = None) -> Summary:
     """Steady-state stats (drop the first ``warmup`` fraction, paper Fig. 6
     measures 30-270 s of a 300 s run)."""
     t0 = duration * warmup
@@ -56,10 +82,12 @@ def summarize(requests: Sequence[Request], duration: float,
     # censoring: requests that never finished are SLO violations with
     # unbounded TTFT (counting only survivors would hide queue collapse)
     censored = [r for r in window if r.finish < 0 or r.first_token < 0]
+    telemetry = _cache_telemetry(cache_stats)
     if not done:
         return Summary(len(requests), 0, float("inf"), float("inf"),
                        float("inf"), 0.0, 0.0, 0.0,
-                       n_censored=len(censored), n_cancelled=len(cancelled))
+                       n_censored=len(censored), n_cancelled=len(cancelled),
+                       **telemetry)
     ttfts = np.array([r.ttft for r in done] +
                      [np.inf] * len(censored))
     tpots = np.array([r.tpot for r in done])
@@ -93,6 +121,7 @@ def summarize(requests: Sequence[Request], duration: float,
         per_adapter_ok=attain,
         n_censored=len(censored),
         n_cancelled=len(cancelled),
+        **telemetry,
     )
 
 

@@ -38,6 +38,7 @@ from repro.serving.scheduler import InstanceState, Scheduler, \
     assign_adapters_greedy
 from repro.serving.server_pool import ServerPool
 from repro.serving.workload import Request, zipf_popularity
+from repro.store import AnalyticStore
 
 
 @dataclasses.dataclass
@@ -86,6 +87,18 @@ class SimConfig:
     straggler_mitigation: bool = True
     # elastic provisioning: run Algorithm 1 online at event boundaries
     autoscale: Optional[AutoscalePolicy] = None
+    # hierarchical adapter store (disaggregated only): host-RAM tier byte
+    # budget (None = unbounded = every adapter host-resident, the legacy
+    # one-tier model). Disk reads price at ``hw.disk_bw``.
+    store_host_bytes: Optional[int] = None
+    # scheduler prefetch hints; None follows layerwise_loading (the legacy
+    # coupling of the two knobs)
+    prefetch: Optional[bool] = None
+
+    @property
+    def prefetch_on(self) -> bool:
+        return self.layerwise_loading if self.prefetch is None \
+            else self.prefetch
 
 
 # ----------------------------- step model ------------------------------- #
@@ -175,6 +188,15 @@ class Simulation:
                              f"(expected 'host' or 'fused')")
         self.rank = sim.lora_rank or cfg.lora_rank
         self._adapter_bytes = cfg.lora_adapter_bytes(self.rank)
+        # analytic host/disk tier accounting (disaggregated only): prices
+        # each cache miss by where the adapter lives, mirroring the cluster
+        # plane's AdapterStore without tensors, files, or threads
+        self.store: Optional[AnalyticStore] = None
+        if sim.disaggregated:
+            self.store = AnalyticStore(
+                lambda aid: self._adapter_bytes, sim.n_adapters,
+                host_bytes=sim.store_host_bytes,
+                host_bw=sim.hw.host_bw, disk_bw=sim.hw.disk_bw)
         pop = zipf_popularity(sim.n_adapters, sim.zipf_s)
         self.instances = [InstanceState(i, sim.max_batch)
                           for i in range(sim.n_instances)]
@@ -234,13 +256,21 @@ class Simulation:
         return LoRACache(self._cache_slots, self._adapter_bytes,
                          self.cfg.n_layers, self.sim.hw.host_bw,
                          layerwise=self.sim.layerwise_loading,
-                         prefetch=self.sim.layerwise_loading)
+                         prefetch=self.sim.prefetch_on,
+                         load_seconds_fn=self.store.load_seconds
+                         if self.store is not None else None)
 
     # -------------------------- client surface ------------------------- #
     def submit(self, req: Request) -> Request:
         if req.rid in self._by_rid:
             raise ValueError(f"rid {req.rid} already submitted")
-        if not 0 <= req.adapter_id < self.sim.n_adapters:
+        if self.store is not None:
+            # dynamic universe: any id the store currently knows is legal
+            if not self.store.has(req.adapter_id):
+                raise ValueError(
+                    f"request {req.rid}: adapter_id {req.adapter_id} is "
+                    f"not registered in the adapter store")
+        elif not 0 <= req.adapter_id < self.sim.n_adapters:
             # coupled mode would IndexError on the owner lookup mid-run (or
             # silently wrap a negative id); match the cluster plane's
             # up-front rejection
@@ -265,6 +295,38 @@ class Simulation:
         self._push(max(at if at is not None else self.now, self.now),
                    "cancel", rid)
         return True
+
+    def load_adapter(self, adapter_id: int) -> None:
+        """Register a new adapter id mid-run (analytic twin of the cluster
+        plane's dynamic load — no tensors to validate here). Disaggregated
+        only: the coupled plane's owner map is sized at startup."""
+        if self.store is None:
+            raise ValueError(
+                "dynamic adapter load requires the disaggregated plane "
+                "(the coupled owner map is frozen at startup)")
+        if self.store.has(adapter_id):
+            raise ValueError(f"adapter {adapter_id} is already registered")
+        self.store.register(adapter_id)
+
+    def unload_adapter(self, adapter_id: int) -> None:
+        """Remove an adapter. Refused while any submitted request still
+        references it (queued, running, or pinned)."""
+        if self.store is None:
+            raise ValueError(
+                "dynamic adapter unload requires the disaggregated plane")
+        if not self.store.has(adapter_id):
+            raise ValueError(f"adapter {adapter_id} is not registered")
+        for r in self.requests:
+            if r.adapter_id == adapter_id and r.finish < 0 \
+                    and not r.cancelled:
+                raise ValueError(
+                    f"adapter {adapter_id} is in use by unfinished "
+                    f"request {r.rid}")
+        cache = self.caches.get(-1)
+        if cache is not None:
+            cache.invalidate(adapter_id)   # raises if somehow pinned
+            self.server_pool.sync(cache)   # flush out of replica tables
+        self.store.unregister(adapter_id)
 
     def idle(self) -> bool:
         return self._halted or not self._ev
@@ -337,9 +399,9 @@ class Simulation:
             "active_adapters_log": self.active_log,
             "scale_log": list(self.scale_log),
             "cache_stats": {
-                k: {"hits": c.hits, "misses": c.misses,
-                    "evictions": c.evictions}
-                for k, c in self.caches.items()},
+                "caches": {k: c.stats() for k, c in self.caches.items()},
+                "store": self.store.stats() if self.store else {},
+            },
         }
 
     # ----------------------------- internals --------------------------- #
@@ -469,7 +531,11 @@ class Simulation:
             cache_slots=self._cache_slots,
             n_instances=len(self._admitting()),
             n_replicas=self.server_pool.n_replicas
-            if self.server_pool else 1)
+            if self.server_pool else 1,
+            host_hit_rate=self.store.host_hit_rate()
+            if self.store else None,
+            miss_cost_ratio=self.store.miss_cost_ratio()
+            if self.store else 1.0)
         for act in actions:
             self._apply_action(act, now)
             self.scale_log.append((now, act.kind, act.target))
@@ -520,6 +586,11 @@ class Simulation:
         if kind == "arrive":
             if payload.cancelled:       # cancelled before it ever arrived
                 return
+            if self.store is not None and self.sim.prefetch_on:
+                # start the async disk->host staging BEFORE the enqueue
+                # hint can promote the adapter: by the time the request
+                # clears the queue, the disk leg is (partly) done
+                self.store.prefetch(payload.adapter_id, now)
             sched.enqueue(payload, now)
             if self._scaler is not None:
                 self._scaler.observe_arrival(now, payload.adapter_id)

@@ -1,0 +1,26 @@
+"""Hierarchical adapter store: host/disk tiers under the device cache,
+async prefetch staging, and the dynamic adapter lifecycle."""
+from repro.store.convert import (host_tensor_bytes, host_tensors_from_pool,
+                                 random_host_tensors,
+                                 server_tensors_from_host,
+                                 validate_host_tensors)
+from repro.store.prefetch import Prefetcher
+from repro.store.store import AdapterStore, AnalyticStore
+from repro.store.tensorfile import load as load_tensorfile
+from repro.store.tensorfile import save as save_tensorfile
+from repro.store.tiers import DiskTier, HostTier
+
+__all__ = [
+    "AdapterStore",
+    "AnalyticStore",
+    "DiskTier",
+    "HostTier",
+    "Prefetcher",
+    "host_tensor_bytes",
+    "host_tensors_from_pool",
+    "load_tensorfile",
+    "random_host_tensors",
+    "save_tensorfile",
+    "server_tensors_from_host",
+    "validate_host_tensors",
+]

@@ -1,0 +1,150 @@
+"""Host-side (numpy) adapter staging: the CPU-assisted conversion path.
+
+The disaggregated server consumes one fused 4-tensor layout per adapter
+(``core.lora_server.pool_tensors_from_adapter``: gate/up concatenated at
+rank 2r with a block-diagonal B). The store keeps adapters in a CANONICAL
+host format instead — per-target {"A", "B"} at the adapter's TRUE rank —
+and builds the padded fused server layout on the CPU at staging time
+(CaraServe's CPU-assisted serving: the pad/concat/block-diag work happens
+off the accelerator, overlapped with decode by the prefetcher).
+
+Every operation here is pure data movement (slice, zero-pad, concatenate),
+so staging from the canonical format is BITWISE identical to extracting
+the same adapter from a live ``AdapterPool`` — the property the
+store == pool equivalence tests pin.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.adapter import AdapterPool, active_targets, target_dims
+
+
+def pool_rank_of(pool: AdapterPool, adapter_id: int) -> int:
+    """True rank of one pool adapter (mixed-rank pools carry ``ranks``;
+    uniform pools use the pool rank)."""
+    ranks = getattr(pool, "ranks", None)
+    if ranks is not None:
+        return int(ranks[adapter_id])
+    return int(pool.rank)
+
+
+def host_tensors_from_pool(pool: AdapterPool, adapter_id: int
+                           ) -> Dict[str, np.ndarray]:
+    """Extract one adapter from a pool into the canonical host format:
+    ``{"<target>.A": (L, [E,] d_in, r_true), "<target>.B": ...}`` numpy
+    arrays TRIMMED to the adapter's true rank. A mixed-rank pool zero-pads
+    the rank tail (and pre-scales B), so trimming loses nothing and
+    re-padding at staging time restores the pool bytes exactly."""
+    r = pool_rank_of(pool, adapter_id)
+    out: Dict[str, np.ndarray] = {}
+    for tgt, t in pool.tensors.items():
+        A = np.asarray(t["A"][:, adapter_id])
+        B = np.asarray(t["B"][:, adapter_id])
+        out[f"{tgt}.A"] = np.ascontiguousarray(A[..., :r])
+        out[f"{tgt}.B"] = np.ascontiguousarray(B[..., :r, :])
+    return out
+
+
+def host_tensor_bytes(tensors: Dict[str, np.ndarray]) -> int:
+    """Payload bytes of a canonical host tensor set (true-rank sizing)."""
+    return sum(int(a.size) * a.dtype.itemsize for a in tensors.values())
+
+
+def _pad_rank(arr: np.ndarray, axis: int, r_pool: int) -> np.ndarray:
+    r = arr.shape[axis]
+    if r == r_pool:
+        return arr
+    if r > r_pool:
+        raise ValueError(f"adapter rank {r} exceeds pool rank {r_pool}")
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, r_pool - r)
+    return np.pad(arr, pad)
+
+
+def server_tensors_from_host(cfg: ModelConfig, tensors: Dict[str, np.ndarray],
+                             r_pool: int) -> Dict[str, np.ndarray]:
+    """Build the fused server slot layout from canonical host tensors:
+    zero-pad each factor to the pool rank, add the singleton expert dim for
+    non-MoE configs, and fuse gate/up as rank-2r with a block-diagonal B —
+    the numpy twin of ``pool_tensors_from_adapter``, byte-for-byte."""
+    def tgt(name):
+        A = _pad_rank(tensors[f"{name}.A"], -1, r_pool)
+        B = _pad_rank(tensors[f"{name}.B"], -2, r_pool)
+        if not cfg.is_moe:
+            A, B = A[:, None], B[:, None]
+        return A, B
+
+    up_A, up_B = tgt("up")
+    if cfg.gated_mlp and "gate.A" in tensors:
+        g_A, g_B = tgt("gate")
+        up_A = np.concatenate([g_A, up_A], axis=-1)
+        up_B = np.concatenate(
+            [np.concatenate([g_B, np.zeros_like(g_B)], axis=-1),
+             np.concatenate([np.zeros_like(up_B), up_B], axis=-1)],
+            axis=-2)
+
+    dn_A, dn_B = tgt("down")
+    return {"up_A": up_A, "up_B": up_B, "down_A": dn_A, "down_B": dn_B}
+
+
+def validate_host_tensors(cfg: ModelConfig, tensors: Dict[str, np.ndarray],
+                          r_pool: int) -> int:
+    """Shape/rank validation for dynamically registered adapters (the
+    vLLM-style load endpoint's admission contract). Returns the adapter's
+    rank. Raises ValueError on any mismatch: missing/extra targets, wrong
+    layer or expert dims, factor shapes inconsistent with the model
+    config, or rank above the server slot pools' capacity."""
+    want = set(active_targets(cfg))
+    got = {k.rsplit(".", 1)[0] for k in tensors}
+    if got != want:
+        raise ValueError(f"adapter targets {sorted(got)} != model targets "
+                         f"{sorted(want)}")
+    L, E = cfg.n_layers, max(cfg.n_experts, 1)
+    rank: Optional[int] = None
+    for t in sorted(want):
+        if f"{t}.A" not in tensors or f"{t}.B" not in tensors:
+            raise ValueError(f"target {t!r} needs both A and B factors")
+        A, B = tensors[f"{t}.A"], tensors[f"{t}.B"]
+        d_in, d_out, per_expert = target_dims(cfg, t)
+        lead: Tuple[int, ...] = (L, E) if per_expert else (L,)
+        r = int(A.shape[-1])
+        if rank is None:
+            rank = r
+        if r != rank or int(B.shape[-2]) != rank:
+            raise ValueError(f"target {t!r}: inconsistent rank (A has "
+                             f"{r}, B has {B.shape[-2]}, adapter {rank})")
+        if tuple(A.shape) != lead + (d_in, r):
+            raise ValueError(f"target {t!r}: A shape {tuple(A.shape)} != "
+                             f"{lead + (d_in, r)}")
+        if tuple(B.shape) != lead + (rank, d_out):
+            raise ValueError(f"target {t!r}: B shape {tuple(B.shape)} != "
+                             f"{lead + (rank, d_out)}")
+    if rank is None or rank < 1:
+        raise ValueError("adapter has no rank dimension")
+    if rank > r_pool:
+        raise ValueError(f"adapter rank {rank} exceeds the pool/server "
+                         f"rank {r_pool}")
+    return rank
+
+
+def random_host_tensors(cfg: ModelConfig, rank: int, seed: int,
+                        dtype=None) -> Dict[str, np.ndarray]:
+    """Deterministic synthetic adapter in canonical host format (tests and
+    the dynamic-registration convenience path; A ~ N(0, 1/r), small B)."""
+    import ml_dtypes
+    dtype = np.dtype(dtype if dtype is not None else ml_dtypes.bfloat16)
+    rng = np.random.default_rng(seed)
+    L, E = cfg.n_layers, max(cfg.n_experts, 1)
+    out: Dict[str, np.ndarray] = {}
+    for t in active_targets(cfg):
+        d_in, d_out, per_expert = target_dims(cfg, t)
+        lead: Tuple[int, ...] = (L, E) if per_expert else (L,)
+        A = (rng.standard_normal(lead + (d_in, rank)) / rank)
+        B = rng.standard_normal(lead + (rank, d_out)) * 0.01
+        out[f"{t}.A"] = A.astype(dtype)
+        out[f"{t}.B"] = B.astype(dtype)
+    return out

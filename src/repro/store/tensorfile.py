@@ -1,0 +1,94 @@
+"""Safetensors-style single-file tensor serialization (the disk tier).
+
+Layout (mirrors the safetensors container so files are inspectable with
+standard tooling, without importing a new dependency):
+
+    [8 bytes]  little-endian uint64 N = header length
+    [N bytes]  JSON header: {name: {"dtype", "shape", "data_offsets"}}
+    [...]      raw tensor bytes, C-contiguous, concatenated in offset order
+
+``dtype`` strings follow the safetensors convention ("F32", "BF16", ...).
+bfloat16 round-trips through ``ml_dtypes`` (shipped with jax — no new
+dependency). Round-trips are BITWISE exact: ``load`` returns arrays whose
+buffers equal what ``save`` consumed, which is what lets the adapter
+store's disk tier participate in the token bit-identity invariant.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict
+
+import ml_dtypes
+import numpy as np
+
+# safetensors dtype tag <-> numpy dtype (the subset adapters use)
+_DTYPES = {
+    "F64": np.dtype(np.float64),
+    "F32": np.dtype(np.float32),
+    "F16": np.dtype(np.float16),
+    "BF16": np.dtype(ml_dtypes.bfloat16),
+    "I64": np.dtype(np.int64),
+    "I32": np.dtype(np.int32),
+    "I16": np.dtype(np.int16),
+    "I8": np.dtype(np.int8),
+    "U8": np.dtype(np.uint8),
+    "BOOL": np.dtype(np.bool_),
+}
+_TAGS = {v: k for k, v in _DTYPES.items()}
+
+
+def dtype_tag(dt) -> str:
+    """Safetensors tag for a numpy dtype (raises on unsupported)."""
+    dt = np.dtype(dt)
+    if dt not in _TAGS:
+        raise ValueError(f"unsupported tensor dtype {dt}")
+    return _TAGS[dt]
+
+
+def save(path: str, tensors: Dict[str, np.ndarray]) -> int:
+    """Write ``tensors`` to ``path``; returns the payload byte count."""
+    header: Dict[str, Dict] = {}
+    blobs = []
+    off = 0
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name])
+        raw = arr.tobytes()
+        header[name] = {"dtype": dtype_tag(arr.dtype),
+                        "shape": list(arr.shape),
+                        "data_offsets": [off, off + len(raw)]}
+        blobs.append(raw)
+        off += len(raw)
+    hdr = json.dumps(header, sort_keys=True).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", len(hdr)))
+        f.write(hdr)
+        for raw in blobs:
+            f.write(raw)
+    return off
+
+
+def load(path: str) -> Dict[str, np.ndarray]:
+    """Read a file written by ``save``; bitwise-exact tensors by name."""
+    with open(path, "rb") as f:
+        raw_len = f.read(8)
+        if len(raw_len) != 8:
+            raise ValueError(f"{path}: truncated header length")
+        (hlen,) = struct.unpack("<Q", raw_len)
+        raw_hdr = f.read(hlen)
+        if len(raw_hdr) != hlen:
+            raise ValueError(f"{path}: truncated header")
+        try:
+            header = json.loads(raw_hdr.decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise ValueError(f"{path}: corrupt header: {e}") from e
+        payload = f.read()
+    out: Dict[str, np.ndarray] = {}
+    for name, meta in header.items():
+        dt = _DTYPES.get(meta["dtype"])
+        if dt is None:
+            raise ValueError(f"{path}: unknown dtype tag {meta['dtype']!r}")
+        s, e = meta["data_offsets"]
+        arr = np.frombuffer(payload[s:e], dtype=dt)
+        out[name] = arr.reshape(meta["shape"]).copy()
+    return out

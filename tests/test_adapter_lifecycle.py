@@ -1,0 +1,251 @@
+"""Dynamic adapter lifecycle through the serving front door: runtime
+load/unload (vLLM-style) with churn bit-identity on the real cluster plane
+across transports and KV layouts, the 64-adapter tight-budget acceptance
+run, refusal semantics (unload-in-use, unload-pinned, coupled-plane load),
+the sim plane's id-only lifecycle, and store telemetry surfaced in
+``Summary``."""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.adapter import init_adapter_pool, init_mixed_rank_pool
+from repro.models import model as model_mod
+from repro.serving.api import RequestState, ServeConfig, build_system
+from repro.serving.cache import LoRACache
+from repro.store import random_host_tensors
+
+# (adapter, arrival, prompt_len, output_len) — the test_api churn workload
+SPECS = [(0, 0.0, 5, 6), (1, 0.0, 4, 4), (2, 2.0, 6, 5), (3, 5.0, 3, 4)]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("qwen3-moe-235b-a22b").reduced(),
+                              lora_targets=("gate", "up", "down"),
+                              lora_rank=8)
+    key = jax.random.PRNGKey(0)
+    params = model_mod.init_params(cfg, key, dtype="float32")
+    pool = init_mixed_rank_pool(cfg, [2, 8, 4, 8],
+                                jax.random.fold_in(key, 1),
+                                dtype=jnp.float32)
+    return cfg, params, pool
+
+
+def _system(setup, **kw):
+    cfg, params, pool = setup
+    kw.setdefault("adapter_cache_slots", 2)
+    sc = ServeConfig(backend="cluster", disaggregated=True, n_instances=1,
+                     max_batch=2, max_len=32, prefill_chunk=8, **kw)
+    return build_system(sc, cfg, params=params, pool=pool)
+
+
+def _run_specs(system, specs=SPECS):
+    handles = [system.submit(adapter_id=a, arrival=t, prompt_len=p,
+                             max_new_tokens=o) for a, t, p, o in specs]
+    system.drain()
+    return {h.rid: tuple(h.tokens) for h in handles}
+
+
+@pytest.fixture(scope="module")
+def reference_tokens(setup):
+    """Static all-resident coupled run: the token ground truth every churn
+    variant must reproduce bit-for-bit."""
+    cfg, params, pool = setup
+    sc = ServeConfig(backend="cluster", disaggregated=False, n_instances=1,
+                     max_batch=2, max_len=32, adapter_cache_slots=4,
+                     prefill_chunk=8)
+    system = build_system(sc, cfg, params=params, pool=pool)
+    toks = _run_specs(system)
+    system.close()
+    return toks
+
+
+# -------------------------- churn bit-identity --------------------------- #
+@pytest.mark.parametrize("transport", ["host", "fused"])
+@pytest.mark.parametrize("paged", [False, True], ids=["dense-kv", "paged-kv"])
+def test_churn_bit_identity(setup, reference_tokens, transport, paged):
+    """Load a NEW adapter mid-run, serve it, unload it, re-load it, serve
+    it again: the static workload's tokens never move, and the dynamic
+    adapter's two servings are bitwise identical to each other — under a
+    host budget tight enough to force disk demotions, on both transports
+    and both KV layouts."""
+    cfg, params, pool = setup
+    kw = dict(page_size=4, n_pages=8) if paged else {}
+    system = _system(setup, transport=transport,
+                     store_host_bytes=2 * pool.adapter_bytes(1),
+                     host_bw=1e9, **kw)
+    try:
+        tensors = random_host_tensors(cfg, 4, seed=7)
+        assert system.load_adapter(4, tensors, alpha=16.0) == 4
+        # explicit prompt: synthesized prompts key on the rid, which the
+        # re-served request below cannot reuse
+        prompt = (11, 7, 3, 19, 5)
+        handles = [system.submit(adapter_id=a, arrival=t, prompt_len=p,
+                                 max_new_tokens=o) for a, t, p, o in SPECS]
+        extra_h = system.submit(adapter_id=4, arrival=6.0, prompt=prompt,
+                                max_new_tokens=5)
+        system.drain()
+        static = {h.rid: tuple(h.tokens) for h in handles}
+        assert static == reference_tokens
+        first_serving = tuple(extra_h.tokens)
+        assert len(first_serving) == 5
+
+        system.unload_adapter(4)
+        rejected = system.submit(adapter_id=4, arrival=20.0, prompt_len=3,
+                                 max_new_tokens=3)
+        assert rejected.state == RequestState.REJECTED
+
+        # re-load the SAME weights: the second serving must be bitwise
+        # identical (nothing about the churn leaked into the slot pools)
+        assert system.load_adapter(4, tensors, alpha=16.0) == 4
+        h = system.submit(adapter_id=4, arrival=30.0, prompt=prompt,
+                          max_new_tokens=5)
+        system.drain()
+        assert tuple(h.tokens) == first_serving
+    finally:
+        system.close()
+
+
+# ----------------------- tight-budget acceptance ------------------------- #
+def test_64_adapters_8_slots_32_host_budget_bit_identical(setup):
+    """The ISSUE acceptance bar: a 64-adapter universe served with 8
+    device slots and host RAM for only 32 adapters (the rest demoted to
+    disk) completes bit-identical to the all-resident run, and the run's
+    Summary carries live store telemetry."""
+    cfg, params, _ = setup
+    cfg = dataclasses.replace(cfg, lora_rank=4)
+    key = jax.random.PRNGKey(2)
+    pool = init_adapter_pool(cfg, 64, jax.random.fold_in(key, 1),
+                             dtype=jnp.float32)
+    specs = [(aid, 0.25 * i, 4 + (i % 3), 4)
+             for i, aid in enumerate(range(0, 64, 4))]   # 16 adapters
+
+    def run(**kw):
+        sc = ServeConfig(backend="cluster", disaggregated=True,
+                         n_instances=1, max_batch=4, max_len=16,
+                         adapter_cache_slots=8, prefill_chunk=8, **kw)
+        system = build_system(sc, cfg, params=params, pool=pool)
+        toks = _run_specs(system, specs)
+        summ = system.summary()
+        stats = system.cache_stats()
+        system.close()
+        return toks, summ, stats
+
+    ref, _, _ = run()                      # unbounded host tier
+    got, summ, stats = run(store_host_bytes=32 * pool.adapter_bytes(0),
+                           host_bw=25e9, disk_bw=2e9)
+    assert got == ref
+    st = stats["store"]
+    assert st["registered"] == 64 and st["host_resident"] <= 32
+    assert st["disk_writes"] >= 32         # the spilled half hit disk
+    for field in ("cache_hit_rate", "prefetch_hit_rate", "miss_penalty_s"):
+        assert not math.isnan(getattr(summ, field)), field
+    assert 0.0 <= summ.cache_hit_rate <= 1.0
+
+
+# --------------------------- refusal semantics --------------------------- #
+def test_unload_refused_while_request_in_flight(setup):
+    system = _system(setup)
+    try:
+        h = system.submit(adapter_id=1, arrival=0.0, prompt_len=4,
+                          max_new_tokens=6)
+        it = iter(h)
+        next(it)                           # pump until the first token
+        with pytest.raises(ValueError, match="in use"):
+            system.unload_adapter(1)
+        system.drain()
+        assert h.state == RequestState.FINISHED
+        system.unload_adapter(1)           # drained: now legal
+        rej = system.submit(adapter_id=1, arrival=50.0, prompt_len=3,
+                            max_new_tokens=3)
+        assert rej.state == RequestState.REJECTED
+    finally:
+        system.close()
+
+
+def test_cache_invalidate_refuses_pinned_adapter():
+    cache = LoRACache(capacity=2, adapter_bytes=1 << 20, n_layers=4)
+    cache.admit(0, now=0.0)
+    cache.pin(0)
+    with pytest.raises(ValueError):
+        cache.invalidate(0)
+    cache.unpin(0, now=1.0)
+    assert cache.invalidate(0) is True
+    assert not cache.is_resident(0)
+    assert cache.stats()["evictions"] == 1
+    assert cache.invalidate(0) is False    # already gone: no-op
+
+
+def test_coupled_plane_refuses_dynamic_load(setup):
+    cfg, params, pool = setup
+    sc = ServeConfig(backend="cluster", disaggregated=False, n_instances=1,
+                     max_batch=2, max_len=32, adapter_cache_slots=4,
+                     prefill_chunk=8)
+    system = build_system(sc, cfg, params=params, pool=pool)
+    try:
+        with pytest.raises(ValueError, match="disaggregated"):
+            system.load_adapter(4, random_host_tensors(cfg, 4, seed=1),
+                                alpha=16.0)
+        with pytest.raises(ValueError, match="disaggregated"):
+            system.unload_adapter(0)
+    finally:
+        system.close()
+
+
+def test_cluster_load_validates_tensors(setup):
+    cfg, params, pool = setup
+    system = _system(setup)
+    try:
+        with pytest.raises(ValueError):    # tensors are mandatory here
+            system.load_adapter(9)
+        bad = random_host_tensors(cfg, 16, seed=3)   # rank above the pools
+        with pytest.raises(ValueError):
+            system.load_adapter(9, bad, alpha=16.0)
+        with pytest.raises(ValueError):    # id already in the universe
+            system.load_adapter(0, random_host_tensors(cfg, 4, seed=4),
+                                alpha=16.0)
+    finally:
+        system.close()
+
+
+# ------------------------------- sim plane ------------------------------- #
+def test_sim_plane_lifecycle():
+    cfg = get_config("qwen3-moe-235b-a22b").reduced()
+    sc = ServeConfig(backend="sim", disaggregated=True, n_adapters=8,
+                     adapter_cache_slots=4, duration=20.0,
+                     store_host_bytes=4 * 1 << 20, host_bw=5e9)
+    system = build_system(sc, cfg)
+    try:
+        assert system.load_adapter(8) is None       # id-only on this plane
+        with pytest.raises(ValueError):
+            system.load_adapter(8)                  # duplicate
+        h = system.submit(adapter_id=8, arrival=0.0, prompt_len=64,
+                          max_new_tokens=8)
+        with pytest.raises(ValueError, match="in use"):
+            system.unload_adapter(8)
+        system.drain()
+        assert h.state == RequestState.FINISHED
+        system.unload_adapter(8)
+        rej = system.submit(adapter_id=8, arrival=15.0, prompt_len=64,
+                            max_new_tokens=8)
+        assert rej.state == RequestState.REJECTED
+    finally:
+        system.close()
+
+
+def test_sim_coupled_refuses_dynamic_load():
+    cfg = get_config("qwen3-moe-235b-a22b").reduced()
+    sc = ServeConfig(backend="sim", disaggregated=False, n_adapters=8,
+                     duration=10.0)
+    system = build_system(sc, cfg)
+    try:
+        with pytest.raises(ValueError):
+            system.load_adapter(8)
+    finally:
+        system.close()

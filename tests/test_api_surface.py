@@ -11,7 +11,7 @@ EXPECTED_EXPORTS = sorted([
     "SLOClass", "INTERACTIVE", "BATCH", "TERMINAL_STATES",
     "build_system", "Request", "Summary",
     "AutoscalePolicy", "Autoscaler", "ScaleAction", "ServerPool",
-    "TransportStats",
+    "TransportStats", "AdapterStore",
 ])
 
 EXPECTED_STATES = ["QUEUED", "PREFILLING", "DECODING", "FINISHED",
@@ -47,8 +47,21 @@ def test_core_entrypoint_signatures():
     for knob in ("backend", "disaggregated", "n_instances", "max_batch",
                  "max_len", "adapter_cache_slots", "policy", "paged",
                  "page_size", "n_pages", "prefill_chunk", "step_time",
-                 "transport", "hook_launch_us"):
+                 "transport", "hook_launch_us",
+                 "store_host_bytes", "store_dir", "disk_bw", "prefetch"):
         assert knob in cfg_fields, f"ServeConfig lost knob {knob}"
+
+
+def test_adapter_lifecycle_entrypoints():
+    """The dynamic load/unload endpoints (vLLM-style) are part of the
+    public contract; their keyword shapes must not drift."""
+    load = inspect.signature(api.ServeSystem.load_adapter)
+    for param in ("adapter_id", "tensors", "alpha"):
+        assert param in load.parameters, f"load_adapter lost {param}"
+    unload = inspect.signature(api.ServeSystem.unload_adapter)
+    assert "adapter_id" in unload.parameters
+    assert callable(api.ServeSystem.cache_stats)
+    assert callable(api.ServeSystem.close)
 
 
 def test_serve_config_derivers_exist():

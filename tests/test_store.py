@@ -1,0 +1,323 @@
+"""The hierarchical adapter store (``repro.store``): tensorfile container
+round-trips, host/disk tier mechanics (LRU, budget spill, lazy loaders),
+the numpy staging path's bitwise equivalence to the in-JAX pool extraction,
+rank-aware byte accounting, miss pricing, the async prefetcher, and the
+sim plane's AnalyticStore twin."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.adapter import init_adapter_pool, init_mixed_rank_pool
+from repro.core.lora_server import pool_tensors_from_adapter
+from repro.store import (AdapterStore, AnalyticStore, DiskTier, HostTier,
+                         Prefetcher, host_tensor_bytes,
+                         host_tensors_from_pool, load_tensorfile,
+                         random_host_tensors, save_tensorfile,
+                         server_tensors_from_host, validate_host_tensors)
+from repro.store.store import _xfer_seconds
+
+
+def _dense_cfg():
+    return dataclasses.replace(get_config("smollm-360m").reduced(),
+                               lora_targets=("gate", "up", "down"),
+                               lora_rank=8)
+
+
+def _moe_cfg():
+    return dataclasses.replace(get_config("mixtral-8x7b").reduced(),
+                               lora_targets=("gate", "up", "down"),
+                               lora_rank=8)
+
+
+# ------------------------------ tensorfile ------------------------------- #
+def test_tensorfile_round_trip_bitwise(tmp_path):
+    import ml_dtypes
+    rng = np.random.default_rng(0)
+    tensors = {
+        "up.A": rng.standard_normal((2, 3, 4)).astype(np.float32),
+        "up.B": rng.standard_normal((2, 4, 3)).astype(np.float16),
+        "down.A": (rng.standard_normal((5,)) * 100).astype(
+            ml_dtypes.bfloat16),
+    }
+    path = tmp_path / "a.tensors"
+    nbytes = save_tensorfile(str(path), tensors)
+    assert nbytes == sum(v.nbytes for v in tensors.values())
+    got = load_tensorfile(str(path))
+    assert sorted(got) == sorted(tensors)
+    for k in tensors:
+        assert got[k].dtype == tensors[k].dtype
+        assert got[k].shape == tensors[k].shape
+        assert got[k].tobytes() == tensors[k].tobytes()
+
+
+def test_tensorfile_rejects_garbage(tmp_path):
+    path = tmp_path / "bad.tensors"
+    path.write_bytes(b"\x00" * 4)          # truncated header length
+    with pytest.raises(ValueError):
+        load_tensorfile(str(path))
+
+
+# ------------------------------- host tier ------------------------------- #
+def test_host_tier_lru_spills_to_callback():
+    spilled = []
+    tier = HostTier(budget_bytes=100,
+                    spill=lambda aid, t: spilled.append((aid, t)))
+    a = {"x": np.zeros(10, np.float32)}    # 40 bytes each
+    tier.put(0, 40, tensors=a)
+    tier.put(1, 40, tensors=a)
+    assert tier.get(0) is not None         # touch 0 -> 1 is now LRU
+    tier.put(2, 40, tensors=a)             # over budget: evicts 1
+    assert [aid for aid, _ in spilled] == [1]
+    assert tier.get(1) is None
+    assert tier.used_bytes == 80
+    assert tier.demotions == 1
+
+
+def test_host_tier_keeps_newest_entry_even_over_budget():
+    tier = HostTier(budget_bytes=10, spill=lambda aid, t: None)
+    tier.put(0, 40, tensors={"x": np.zeros(10, np.float32)})
+    assert tier.get(0) is not None         # a lone over-budget entry stays
+
+
+def test_host_tier_lazy_loader_materializes_once():
+    calls = []
+
+    def loader():
+        calls.append(1)
+        return {"x": np.arange(4, dtype=np.float32)}
+
+    tier = HostTier()
+    tier.put(7, 16, loader=loader)
+    assert calls == []                     # admission does not materialize
+    t1 = tier.get(7)
+    t2 = tier.get(7)
+    assert len(calls) == 1 and t1 is t2
+
+
+# ------------------------------- disk tier ------------------------------- #
+def test_disk_tier_round_trip_and_missing(tmp_path):
+    tier = DiskTier(root=str(tmp_path))
+    t = {"up.A": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    tier.put(3, t)
+    got = tier.get(3)
+    assert got["up.A"].tobytes() == t["up.A"].tobytes()
+    with pytest.raises(KeyError):
+        tier.get(4)
+    tier.remove(3)
+    with pytest.raises(KeyError):
+        tier.get(3)
+
+
+# --------------------------- staging equivalence ------------------------- #
+@pytest.mark.parametrize("cfg_fn", [_dense_cfg, _moe_cfg],
+                         ids=["dense", "moe"])
+@pytest.mark.parametrize("mixed", [False, True], ids=["uniform", "mixed"])
+def test_host_staging_matches_pool_extraction_bitwise(cfg_fn, mixed):
+    """The store's numpy staging path (host trim -> pad -> expert dim ->
+    gate/up fuse) must be BITWISE identical to the in-JAX
+    pool_tensors_from_adapter it replaces: this is the whole token
+    bit-identity argument for the hierarchical store."""
+    cfg = cfg_fn()
+    key = jax.random.PRNGKey(3)
+    if mixed:
+        pool = init_mixed_rank_pool(cfg, [2, 8, 4], key, dtype=jnp.float32)
+    else:
+        pool = init_adapter_pool(cfg, 3, key, dtype=jnp.float32)
+    for aid in range(3):
+        host = host_tensors_from_pool(pool, aid)
+        staged = server_tensors_from_host(cfg, host, pool.rank)
+        ref = pool_tensors_from_adapter(pool, aid)
+        assert sorted(staged) == sorted(ref)
+        for k in ref:
+            a, b = np.asarray(ref[k]), staged[k]
+            assert a.shape == b.shape and a.dtype == b.dtype, k
+            assert a.tobytes() == b.tobytes(), k
+
+
+def test_validate_host_tensors_rejections():
+    cfg = _dense_cfg()
+    good = random_host_tensors(cfg, 4, seed=0)
+    assert validate_host_tensors(cfg, good, 8) == 4
+    with pytest.raises(ValueError):        # rank above the slot pools
+        validate_host_tensors(cfg, good, 2)
+    missing = {k: v for k, v in good.items() if k != "up.B"}
+    with pytest.raises(ValueError):
+        validate_host_tensors(cfg, missing, 8)
+    extra = dict(good, **{"qkv.A": next(iter(good.values()))})
+    with pytest.raises(ValueError):        # target not in active set
+        validate_host_tensors(cfg, extra, 8)
+    bad = dict(good)
+    bad["up.A"] = bad["up.A"][:, :-1, :]   # wrong d_in
+    with pytest.raises(ValueError):
+        validate_host_tensors(cfg, bad, 8)
+
+
+# --------------------------- byte accounting ----------------------------- #
+def test_adapter_bytes_is_rank_aware():
+    cfg = _dense_cfg()
+    ranks = [2, 8, 4, 8]
+    pool = init_mixed_rank_pool(cfg, ranks, jax.random.PRNGKey(0),
+                                dtype=jnp.float32)
+    per_slot = pool.bytes_per_adapter()
+    total = sum(pool.adapter_bytes(i) for i in range(4))
+    assert total < 4 * per_slot            # true ranks < padded slots
+    # a full-rank adapter costs exactly one padded slot
+    assert pool.adapter_bytes(1) == per_slot
+    # uniform pool: every adapter costs the slot size
+    upool = init_adapter_pool(cfg, 2, jax.random.PRNGKey(1),
+                              dtype=jnp.float32)
+    assert upool.adapter_bytes(0) == upool.bytes_per_adapter()
+    # the store's host-format accounting agrees with the pool's
+    host = host_tensors_from_pool(pool, 0)
+    assert host_tensor_bytes(host) == pool.adapter_bytes(0)
+
+
+# ------------------------------ AdapterStore ----------------------------- #
+def _store(cfg, pool, **kw):
+    kw.setdefault("prefetch", False)
+    return AdapterStore(cfg, pool, **kw)
+
+
+def test_store_budget_spills_to_disk_and_promotes_bitwise():
+    cfg = _dense_cfg()
+    pool = init_adapter_pool(cfg, 4, jax.random.PRNGKey(0),
+                             dtype=jnp.float32)
+    b = pool.adapter_bytes(0)
+    store = _store(cfg, pool, host_bytes=2 * b)
+    try:
+        st = store.stats()
+        assert st["registered"] == 4
+        assert st["host_resident"] == 2 and st["disk_writes"] == 2
+        # a disk-resident adapter stages bitwise-identically
+        spilled = [a for a in range(4) if a not in
+                   store.host.resident_ids()][0]
+        staged = store.server_tensors(spilled)
+        ref = pool_tensors_from_adapter(pool, spilled)
+        for k in ref:
+            assert np.asarray(ref[k]).tobytes() == staged[k].tobytes()
+        assert store.stats()["disk_reads"] >= 1
+    finally:
+        store.close()
+
+
+def test_store_register_unregister_and_alpha_rescale():
+    cfg = _dense_cfg()
+    pool = init_adapter_pool(cfg, 2, jax.random.PRNGKey(0), dtype=jnp.float32,
+                             alpha=16.0)
+    store = _store(cfg, pool)
+    try:
+        raw = random_host_tensors(cfg, 4, seed=1)
+        raw = {k: np.asarray(v, np.float32) for k, v in raw.items()}
+        assert store.register(9, raw, alpha=16.0) == 4
+        with pytest.raises(ValueError):    # duplicate id
+            store.register(9, raw, alpha=16.0)
+        got = store.host_tensors(9)
+        # alpha/r convention -> pool convention: B scaled by
+        # (alpha/rank)/pool.scale, A untouched
+        f = (16.0 / 4) / pool.scale
+        np.testing.assert_array_equal(got["up.A"], raw["up.A"])
+        np.testing.assert_allclose(got["up.B"], raw["up.B"] * f, rtol=1e-6)
+        store.unregister(9)
+        assert not store.has(9)
+        with pytest.raises(ValueError):
+            store.unregister(9)
+    finally:
+        store.close()
+
+
+def test_store_load_seconds_pricing():
+    cfg = _dense_cfg()
+    pool = init_adapter_pool(cfg, 3, jax.random.PRNGKey(0),
+                             dtype=jnp.float32)
+    b = pool.adapter_bytes(0)
+    # infinite bandwidth (the legacy default) keeps loads free
+    free = _store(cfg, pool, host_bw=float("inf"))
+    try:
+        assert free.load_seconds(0) == 0.0
+    finally:
+        free.close()
+    store = _store(cfg, pool, host_bytes=1 * b, host_bw=1e9, disk_bw=1e8)
+    try:
+        resident = next(iter(store.host.resident_ids()))
+        spilled = [a for a in range(3) if a != resident][0]
+        assert store.load_seconds(resident) == pytest.approx(b / 1e9)
+        # disk miss pays the disk->host leg PLUS the host->device leg
+        assert store.load_seconds(spilled) == \
+            pytest.approx(b / 1e8 + b / 1e9)
+        assert store.miss_cost_ratio() < 1.0
+        # hit-rate counters move on real fetches, not on pricing queries
+        assert store.host_hit_rate() is None
+        store.host_tensors(resident)
+        store.host_tensors(spilled)        # disk promote
+        assert store.host_hit_rate() == pytest.approx(0.5)
+    finally:
+        store.close()
+
+
+def test_xfer_seconds_handles_degenerate_bandwidth():
+    assert _xfer_seconds(1000, float("inf")) == 0.0
+    assert _xfer_seconds(1000, 0.0) == 0.0
+    assert _xfer_seconds(1000, 2e3) == pytest.approx(0.5)
+
+
+# ------------------------------- prefetcher ------------------------------ #
+def test_prefetcher_stages_bitwise_and_dedups():
+    cfg = _dense_cfg()
+    pool = init_adapter_pool(cfg, 2, jax.random.PRNGKey(0),
+                             dtype=jnp.float32)
+    store = AdapterStore(cfg, pool, prefetch=True)
+    try:
+        assert store.prefetch(1) is True
+        assert store.prefetch(1) is False      # already in flight or staged
+        store.wait_prefetched()
+        staged = store.server_tensors(1)
+        assert store.stats()["staged_hits"] == 1
+        ref = pool_tensors_from_adapter(pool, 1)
+        for k in ref:
+            assert np.asarray(ref[k]).tobytes() == staged[k].tobytes()
+    finally:
+        store.close()
+
+
+def test_prefetcher_relays_worker_exceptions():
+    def boom(aid):
+        raise RuntimeError(f"stage {aid} failed")
+
+    pf = Prefetcher(boom)
+    try:
+        assert pf.request(0)
+        with pytest.raises(RuntimeError, match="stage 0 failed"):
+            pf.wait(timeout=10.0)
+    finally:
+        pf.close()
+
+
+# ------------------------------ AnalyticStore ---------------------------- #
+def test_analytic_store_lru_and_pricing():
+    store = AnalyticStore(lambda aid: 100, 3, host_bytes=200,
+                          host_bw=1e2, disk_bw=1e1)
+    host_s, disk_s = 100 / 1e2, 100 / 1e1 + 100 / 1e2
+    assert store.load_seconds(0) == pytest.approx(disk_s)   # cold
+    assert store.load_seconds(0) == pytest.approx(host_s)   # now resident
+    store.load_seconds(1)                                   # fills budget
+    store.load_seconds(2)                                   # evicts LRU (0)
+    assert store.load_seconds(0) == pytest.approx(disk_s)
+    assert 0.0 < store.host_hit_rate() < 1.0
+    assert store.miss_cost_ratio() == pytest.approx(host_s / disk_s)
+    assert store.has(2) and not store.has(9)
+    store.register(9)
+    assert store.has(9) and store.n_adapters == 4
+    store.unregister(9)
+    assert not store.has(9)
+
+
+def test_analytic_store_unbounded_budget_is_all_hits():
+    store = AnalyticStore(lambda aid: 100, 2, host_bytes=None, host_bw=1e2)
+    assert store.load_seconds(0) == pytest.approx(1.0)
+    assert store.load_seconds(1) == pytest.approx(1.0)
+    assert store.host_hit_rate() == 1.0
