@@ -15,6 +15,7 @@ Three views:
       trip of the intermediate, then an expand GEMM call — the cuBLAS-style
       batched-GEMM pair of Fig 19's generic baseline)
 """
+import os
 import time
 
 import jax
@@ -29,14 +30,33 @@ from repro.kernels import ops, ref
 from repro.kernels import sgmv as sgmv_mod
 from repro.serving.workload import zipf_popularity
 
+RANK_MIX = (4, 8, 16, 64)       # mixed-rank pool buckets (zipf-weighted)
 
-def modeled_us(rows, distinct, d_in, d_out, r):
-    act = rows * (d_in + d_out) * 2
-    w_bgmv = rows * (d_in + d_out) * r * 2          # per-row gather
-    w_sgmv = distinct * (d_in + d_out) * r * 2      # per-segment reuse
-    flops = 2 * rows * r * (d_in + d_out)
+
+def zipf_rank_mix(n_adapters: int, seed: int = 0) -> np.ndarray:
+    """Per-adapter TRUE ranks: zipf-weighted draw over ``RANK_MIX`` (small
+    ranks dominate, the way fleets of task adapters actually look)."""
+    rng = np.random.default_rng(seed)
+    p = zipf_popularity(len(RANK_MIX), 1.2)
+    return rng.choice(np.asarray(RANK_MIX), size=n_adapters, p=p)
+
+
+def modeled_us(d, row_ranks, adapter_ranks):
+    """Modeled v5e latency + HBM utilization of one hook phase from the
+    kernels' exact byte/flop traffic, priced at each row's TRUE rank.
+    Uniform pools pass constant ranks and recover the padded-pool model
+    (the pre-rank-aware formula was this with every rank = pool rank).
+    Shrink (d->r) and expand (r->d) move the same bytes/FLOPs, so one
+    call prices either phase. Returns {kern: (us, hbm_util)} plus the
+    total true-rank FLOPs under key "_flops"."""
+    rr = np.asarray(row_ranks, float)
+    ar = np.asarray(adapter_ranks, float)
+    act = float(np.sum(d + rr)) * 2                  # read rows + write out
+    w_bgmv = float(np.sum((d + rr) * rr)) * 2        # per-row gather
+    w_sgmv = float(np.sum((d + ar) * ar)) * 2        # per-segment reuse
+    flops = 2.0 * float(np.sum(rr * (d + rr)))
     t_flops = flops / (PEAK_FLOPS * 0.7)
-    out = {}
+    out = {"_flops": flops}
     for name, w in (("bgmv", w_bgmv), ("sgmv", w_sgmv)):
         t_mem = (act + w) / (HBM_BW * 0.7)
         out[name] = (max(t_mem, t_flops) * 1e6,
@@ -51,13 +71,28 @@ def main():
     ids = jnp.asarray(rng.choice(N, size=T, p=probs).astype(np.int32))
     distinct = len(set(np.asarray(ids).tolist()))
 
-    for phase, d_in, d_out in (("shrink", d, r), ("expand", r, d)):
-        m = modeled_us(T, distinct, d_in, d_out, r)
+    # mixed-rank pool: the modeled rows price TRUE-rank FLOPs (the padded
+    # model billed every row at the pool rank r regardless of its adapter)
+    adapter_ranks = zipf_rank_mix(N, seed=0)
+    row_ranks = adapter_ranks[np.asarray(ids)]
+    distinct_ranks = adapter_ranks[sorted(set(np.asarray(ids).tolist()))]
+    mean_rank = float(np.mean(row_ranks))
+
+    for phase in ("shrink", "expand"):
+        m = modeled_us(d, row_ranks, distinct_ranks)
         for kern in ("bgmv", "sgmv"):
             us, bw = m[kern]
             emit(f"fig19.{phase}.{kern}.modeled_us", round(us, 1),
-                 f"hbm_util={bw:.2f},distinct={distinct}")
+                 f"hbm_util={bw:.2f},distinct={distinct},"
+                 f"mean_rank={mean_rank:.1f}")
+    true_flops = modeled_us(d, row_ranks, distinct_ranks)["_flops"]
+    padded_flops = modeled_us(d, np.full(T, r), np.full(distinct, r)
+                              )["_flops"]
+    emit("fig19.rank.modeled_flop_reduction",
+         round(padded_flops / true_flops, 2),
+         f"padded r={r} vs zipf mix {RANK_MIX}, mean_rank={mean_rank:.1f}")
 
+    for phase, d_in, d_out in (("shrink", d, r), ("expand", r, d)):
         # measured (CPU, jitted ref path — relative ordering only)
         key = jax.random.PRNGKey(0)
         x = jax.random.normal(key, (T, d_in), jnp.float32)
@@ -133,6 +168,54 @@ def pallas_interpret():
          "per-hook host round trips (transport='host')")
     emit("fig19.dispatch.fused_per_step", 1,
          "one jitted program (transport='fused')")
+    rank_interpret()
+
+
+def rank_interpret():
+    """Padded vs rank-aware SGMV on a zipf {4,8,16,64} mixed-rank pool:
+    the rank-grouped dispatch slices each bucket's A/B to its true rank,
+    so the interpret-mode K loop does true-rank work — a real wall-time
+    win here, and bit-identical output (padded lanes are exact zeros)."""
+    Np, T, r, d, cap = 8, 64, 64, 2048, 64
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (T, d), jnp.float32)
+    A = np.asarray(jax.random.normal(jax.random.fold_in(key, 1),
+                                     (Np, d, r))) * .02
+    B = np.asarray(jax.random.normal(jax.random.fold_in(key, 2),
+                                     (Np, r, d))) * .02
+    ranks = zipf_rank_mix(Np, seed=3)
+    for i, ra in enumerate(ranks):          # prefix-zeroed mixed-rank pool
+        A[i, :, ra:] = 0.0
+        B[i, ra:, :] = 0.0
+    A, B = jnp.asarray(A), jnp.asarray(B)
+    ids = jax.random.randint(jax.random.fold_in(key, 3), (T,), 0, Np)
+
+    segs, seg_ad, _ = ops.build_segments(x, ids, Np, cap=cap)
+    us_pad = _timed(lambda: sgmv_mod.sgmv(segs, seg_ad, A, B,
+                                          interpret=True))
+    seg_r, seg_a, seg_rank, _ = ops.build_segments_ranked(
+        x, ids, Np, cap, ranks)
+    env_old = os.environ.get("REPRO_USE_PALLAS")
+    os.environ["REPRO_USE_PALLAS"] = "1"    # force the bucketed Pallas path
+    try:
+        us_rank = _timed(lambda: ops.sgmv_rank_grouped(seg_r, seg_a,
+                                                       seg_rank, A, B))
+        got = ops.sgmv_rank_grouped(seg_r, seg_a, seg_rank, A, B)
+    finally:
+        if env_old is None:
+            os.environ.pop("REPRO_USE_PALLAS", None)
+        else:
+            os.environ["REPRO_USE_PALLAS"] = env_old
+    want = sgmv_mod.sgmv(seg_r, seg_a, A, B, interpret=True)
+    err = float(jnp.max(jnp.abs(got - want)))
+    mean_rank = float(np.mean(ranks[np.asarray(ids)]))
+    emit("fig19.rank.padded.interpret_us", round(us_pad, 0),
+         f"pool r={r}, mix={sorted(set(int(x_) for x_ in ranks))}")
+    emit("fig19.rank.grouped.interpret_us", round(us_rank, 0),
+         f"mean_rank={mean_rank:.1f}, max_err={err:.1e} (bit-identical)")
+    emit("fig19.rank.interpret_speedup", round(us_pad / max(us_rank, 1e-9),
+                                               2),
+         "padded/grouped wall-time ratio, interpret mode")
 
 
 if __name__ == "__main__":

@@ -83,6 +83,14 @@ ADAPTERS = [
     ("adapter_store_prefetch", bench_adapters.main),
 ]
 
+# CI kernels lane: Fig-19 kernel characterization — true-rank modeled
+# pricing for the mixed-rank pool, the Pallas interpret checks, and the
+# padded-vs-rank-grouped comparison (fig19.rank.*: modeled FLOP reduction,
+# interpret wall-time win, bit-identity) — writes BENCH_kernels.json.
+KERNELS = [
+    ("fig19_kernels", bench_kernels.main),
+]
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -103,6 +111,9 @@ def main(argv=None) -> None:
     lane.add_argument("--adapters", action="store_true",
                       help="hierarchical adapter store prefetch sweep, "
                            "writes BENCH_adapters.json")
+    lane.add_argument("--kernels", action="store_true",
+                      help="Fig-19 kernel lane incl. rank-aware interpret "
+                           "checks, writes BENCH_kernels.json")
     ap.add_argument("--out", default=None,
                     help="write captured rows as JSON (default "
                          "BENCH_smoke.json in --smoke mode)")
@@ -112,7 +123,8 @@ def main(argv=None) -> None:
         PROVISIONING if args.provisioning else \
         TRANSPORT if args.transport else \
         PARALLELISM if args.parallelism else \
-        ADAPTERS if args.adapters else ALL
+        ADAPTERS if args.adapters else \
+        KERNELS if args.kernels else ALL
     timings = {}
     for name, fn in suite:
         if args.only and args.only not in name:
@@ -127,8 +139,9 @@ def main(argv=None) -> None:
                             "BENCH_provisioning.json" if args.provisioning
                             else "BENCH_transport.json" if args.transport
                             else "BENCH_parallelism.json" if args.parallelism
-                            else "BENCH_adapters.json"
-                            if args.adapters else None)
+                            else "BENCH_adapters.json" if args.adapters
+                            else "BENCH_kernels.json"
+                            if args.kernels else None)
     if out_path:
         with open(out_path, "w") as f:
             json.dump({"results": common.RESULTS, "timings": timings}, f,

@@ -99,6 +99,15 @@ class LoRAServer:
         # adapter id -> slot (host table); -1 = not resident
         self.slot_of: Dict[int, int] = {}
         self.free_slots = list(range(M))
+        # per-slot TRUE rank (0 = empty slot): a mixed-rank pool stores a
+        # rank-4 adapter in rank-r lanes whose tail is exactly +0.0, so the
+        # compute step can bound each row's contraction at its true rank
+        # bit-identically. Kept in sync through insert/evict (and re-homes,
+        # which are evict+insert).
+        self.slot_ranks = np.zeros(M, np.int32)
+        # rank_aware=False pins the padded-pool-rank compute path (the
+        # bit-identity baseline; also what pre-rank-aware callers got)
+        self.rank_aware = True
         self._steps = {}
         self._lut = None  # cached id->slot array, invalidated on insert/evict
         # monotone residency/weight mutation counter: the fused transport
@@ -113,15 +122,19 @@ class LoRAServer:
         return adapter_id in self.slot_of
 
     def insert(self, adapter_id: int, tensors=None,
-               layers: Optional[range] = None) -> int:
+               layers: Optional[range] = None,
+               rank: Optional[int] = None) -> int:
         """Claim a slot (loading itself is timed by the serving simulator;
-        tensors, when given, are written layer-wise — §5.3)."""
+        tensors, when given, are written layer-wise — §5.3). ``rank`` is
+        the adapter's TRUE rank (defaults to the pool rank — i.e. no
+        trimming for this slot)."""
         if adapter_id in self.slot_of:
             return self.slot_of[adapter_id]
         if not self.free_slots:
             raise RuntimeError("LoRA server cache full")
         slot = self.free_slots.pop(0)
         self.slot_of[adapter_id] = slot
+        self.slot_ranks[slot] = int(rank) if rank else self.r
         self._lut = None
         self.mutations += 1
         if tensors is not None:
@@ -131,6 +144,7 @@ class LoRAServer:
     def evict(self, adapter_id: int):
         slot = self.slot_of.pop(adapter_id)
         self.free_slots.append(slot)
+        self.slot_ranks[slot] = 0
         self._lut = None
         self.mutations += 1
 
@@ -163,7 +177,7 @@ class LoRAServer:
         d, ff = cfg.d_model, cfg.d_ff
         n_up, y = self.n_up, self.y
 
-        def body(stage_idx, layer_idx, rows, slots, eids, A, B):
+        def body(stage_idx, layer_idx, rows, slots, eids, ranks, A, B):
             # A: (L_stage, M, E_loc, d_in, r) local shard on ep
             A_l = jax.lax.dynamic_index_in_dim(A, layer_idx, 0, False)
             B_l = jax.lax.dynamic_index_in_dim(B, layer_idx, 0, False)
@@ -171,19 +185,27 @@ class LoRAServer:
             a = A_l[slots_safe, eids]          # (R_loc, d_in, r)
             b = B_l[slots_safe, eids]          # (R_loc, r, d_out)
             h = jnp.einsum("td,tdr->tr", rows.astype(F32), a.astype(F32))
+            # true-rank bound per row: the fused "up" hook is block-diagonal
+            # (gate cols 0..r-1, up cols r..2r-1), so an adapter of true
+            # rank k occupies column k of EACH r-wide block — mask on
+            # col % r. Masked lanes already hold the pool's exact +/-0
+            # padding, so forcing +0.0 never changes a token.
+            col = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+            h = jnp.where((col % r) < ranks[:, None], h, 0.0)
             out = jnp.einsum("tr,tro->to", h, b.astype(F32))
             return jnp.where((slots >= 0)[:, None], out, 0.0)
 
         if self.mesh is not None:
             E_loc = max(E // self.x, 1)
 
-            def sharded(stage_idx, layer_idx, rows, slots, eids, A, B):
-                def local(rows_l, slots_l, eids_l, A_l, B_l):
+            def sharded(stage_idx, layer_idx, rows, slots, eids, ranks,
+                        A, B):
+                def local(rows_l, slots_l, eids_l, ranks_l, A_l, B_l):
                     # rows arrive expert-block-aligned per ep rank (§4.1
                     # aligned partitioning): local expert id within the block
                     e_local = eids_l % E_loc
                     out = body(stage_idx, layer_idx, rows_l, slots_l,
-                               e_local, A_l[0], B_l[0])
+                               e_local, ranks_l, A_l[0], B_l[0])
                     # only the owning pipeline stage computes this layer; the
                     # others (serving other instances' layers in steady
                     # state) contribute zeros.
@@ -192,16 +214,16 @@ class LoRAServer:
 
                 return shard_map(
                     local, mesh=self.mesh,
-                    in_specs=(P("ep"), P("ep"), P("ep"),
+                    in_specs=(P("ep"), P("ep"), P("ep"), P("ep"),
                               P("pp", None, None, "ep", None, None),
                               P("pp", None, None, "ep", None, None)),
                     out_specs=P("ep"), check_vma=False,
-                )(rows, slots, eids, A, B)
+                )(rows, slots, eids, ranks, A, B)
 
             fn = jax.jit(sharded, static_argnums=(0,))
         else:
-            def flat(stage_idx, layer_idx, rows, slots, eids, A, B):
-                return body(stage_idx, layer_idx, rows, slots, eids,
+            def flat(stage_idx, layer_idx, rows, slots, eids, ranks, A, B):
+                return body(stage_idx, layer_idx, rows, slots, eids, ranks,
                             A[stage_idx], B[stage_idx])
             fn = jax.jit(flat, static_argnums=(0,))
         self._steps[hook] = fn
@@ -221,18 +243,35 @@ class LoRAServer:
         return np.where((ids >= 0) & (ids < len(lut)),
                         lut[np.clip(ids, 0, len(lut) - 1)], -1)
 
+    def row_ranks(self, slots: np.ndarray) -> np.ndarray:
+        """Per-row true-rank bound for resolved slots: the slot's true rank
+        when rank_aware, else the pool rank (the padded baseline).
+        Inactive rows get the pool rank — they are masked to zero anyway."""
+        if not self.rank_aware:
+            return np.full(len(slots), self.r, np.int32)
+        ranks = self.slot_ranks[np.maximum(slots, 0)]
+        return np.where((slots >= 0) & (ranks > 0), ranks,
+                        self.r).astype(np.int32)
+
+    def true_rank(self, adapter_id: int) -> int:
+        """TRUE rank of a resident adapter (0 = not resident)."""
+        slot = self.slot_of.get(adapter_id)
+        return int(self.slot_ranks[slot]) if slot is not None else 0
+
     def compute(self, hook: str, layer: int, rows, adapter_ids, expert_ids):
         """rows: (R, d_in); adapter_ids: (R,) global ids (resolved to slots
         here); expert_ids: (R,). Returns deltas (R, d_out) f32."""
         stage, li = layer % self.y, layer // self.y
-        slots = jnp.asarray(self.resolve_slots(adapter_ids))
+        slots_np = self.resolve_slots(adapter_ids)
+        slots = jnp.asarray(slots_np)
         if hook == "up":
             A, B = self.pool["up_A"], self.pool["up_B"]
         else:
             A, B = self.pool["down_A"], self.pool["down_B"]
         fn = self._step(hook)
         return fn(stage, jnp.int32(li), rows, slots,
-                  jnp.asarray(expert_ids, jnp.int32), A, B)
+                  jnp.asarray(expert_ids, jnp.int32),
+                  jnp.asarray(self.row_ranks(slots_np)), A, B)
 
     # ------------------------------------------------------------------ #
     def cache_bytes(self) -> int:

@@ -162,8 +162,15 @@ class ProvisionReport:
 def min_gpus_for_tpot(cfg: ModelConfig, b: int, p: int, n_instances: int,
                       slo_tpot: float, distinct_adapters: float,
                       hw: Hardware = V5E, ffn_share: float = 0.5,
-                      max_m: int = 64) -> Tuple[int, Placement, Dict]:
-    """Smallest m (+ best EP_x-PP_y placement) satisfying Eqs. (5)-(6)."""
+                      max_m: int = 64,
+                      rank: Optional[float] = None
+                      ) -> Tuple[int, Placement, Dict]:
+    """Smallest m (+ best EP_x-PP_y placement) satisfying Eqs. (5)-(6).
+
+    ``rank`` prices the server-side compute term: the batch's observed
+    mean EFFECTIVE rank under rank-aware kernels (the segmented kernels
+    bound each row at its adapter's true rank), the padded pool rank
+    when None — low-rank-heavy mixes need fewer server chips."""
     slo_layer = slo_tpot / max(cfg.n_layers, 1)
     slo_ffn = slo_layer * ffn_share
     for m in range(1, max_m + 1):
@@ -172,7 +179,8 @@ def min_gpus_for_tpot(cfg: ModelConfig, b: int, p: int, n_instances: int,
             pl = Placement.make("hybrid", m, 0, cfg.n_layers,
                                 max(cfg.n_experts, 1), x=x)
             lat = cost_model.latency_breakdown(cfg, pl, b, p,
-                                               distinct_adapters, hw=hw)
+                                               distinct_adapters,
+                                               rank=rank, hw=hw)
             t = (lat["recv"], lat["comp"], lat["send"])
             ok = (sum(t) <= slo_ffn) and (max(t) * n_instances <= slo_layer)
             if ok and (best is None or sum(t) < best[1]):

@@ -70,6 +70,56 @@ def bgmv(x, A, B, ids, *, interpret: bool = True):
     )(ids.astype(jnp.int32), x, A, B)
 
 
+def _kernel_ranked(ids_ref, ranks_ref, x_ref, a_ref, b_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(ids_ref[i] >= 0)
+    def _():
+        h = jnp.dot(x_ref[...].astype(F32), a_ref[0].astype(F32),
+                    preferred_element_type=F32)          # (1, r)
+        # per-slot true rank: lanes past it are the pool's exact-zero
+        # padding — force +0.0 so trimming stays bit-compatible
+        col = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+        h = jnp.where(col < ranks_ref[i], h, 0.0)
+        o_ref[...] = jnp.dot(h, b_ref[0].astype(F32),
+                             preferred_element_type=F32)  # (1, d_out)
+
+    @pl.when(ids_ref[i] < 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def bgmv_ranked(x, A, B, ids, ranks, *, interpret: bool = True):
+    """``bgmv`` with a per-slot true rank: ``ranks`` is (N,) per-adapter —
+    each row's contraction is bounded at its adapter's true rank instead of
+    the pool rank."""
+    T, d_in = x.shape
+    N, _, r = A.shape
+    d_out = B.shape[-1]
+    ranks = jnp.asarray(ranks, jnp.int32)
+    row_ranks = jnp.where(ids >= 0, ranks[jnp.clip(ids, 0, N - 1)], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, d_in), lambda i, ids, ranks: (i, 0)),
+            pl.BlockSpec((1, d_in, r),
+                         lambda i, ids, ranks: (jnp.maximum(ids[i], 0),
+                                                0, 0)),
+            pl.BlockSpec((1, r, d_out),
+                         lambda i, ids, ranks: (jnp.maximum(ids[i], 0),
+                                                0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d_out), lambda i, ids, ranks: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel_ranked, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d_out), F32),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), row_ranks.astype(jnp.int32), x, A, B)
+
+
 def _kernel_expert(ids_ref, eids_ref, x_ref, a_ref, b_ref, o_ref):
     i = pl.program_id(0)
 

@@ -81,3 +81,60 @@ def fused_sgmv(seg_rows, seg_slot, seg_eid, A, B, *, interpret: bool = True):
         interpret=interpret,
     )(seg_slot.astype(jnp.int32), seg_eid.astype(jnp.int32),
       seg_rows, A, B)
+
+
+def _kernel_ranked(slots_ref, eids_ref, ranks_ref, x_ref, a_ref, b_ref,
+                   o_ref, h_ref):
+    s = pl.program_id(0)
+
+    @pl.when(slots_ref[s] >= 0)
+    def _():
+        h_ref[...] = jnp.dot(x_ref[0].astype(F32), a_ref[0, 0].astype(F32),
+                             preferred_element_type=F32)       # (cap, r)
+        # bound the expand at the segment's true rank: lanes past it carry
+        # only the pool's exact-zero padding, so forcing +0.0 is
+        # bit-compatible with the padded form while a real MXU skips the
+        # dead columns
+        col = jax.lax.broadcasted_iota(jnp.int32, h_ref.shape, 1)
+        h_ref[...] = jnp.where(col < ranks_ref[s], h_ref[...], 0.0)
+        o_ref[...] = jnp.dot(h_ref[...], b_ref[0, 0].astype(F32),
+                             preferred_element_type=F32)[None]
+
+    @pl.when(slots_ref[s] < 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def fused_sgmv_ranked(seg_rows, seg_slot, seg_eid, seg_rank, A, B, *,
+                      interpret: bool = True):
+    """``fused_sgmv`` with a per-segment true rank (``seg_rank[s]`` bounds
+    the shrink-expand contraction for segment ``s`` — see sgmv_ranked)."""
+    S, cap, d_in = seg_rows.shape
+    M, E, _, r = A.shape
+    d_out = B.shape[-1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, cap, d_in),
+                         lambda s, slots, eids, ranks: (s, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, d_in, r),
+                lambda s, slots, eids, ranks: (jnp.maximum(slots[s], 0),
+                                               eids[s], 0, 0)),
+            pl.BlockSpec(
+                (1, 1, r, d_out),
+                lambda s, slots, eids, ranks: (jnp.maximum(slots[s], 0),
+                                               eids[s], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cap, d_out),
+                               lambda s, slots, eids, ranks: (s, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((cap, r), F32)],
+    )
+    return pl.pallas_call(
+        _kernel_ranked, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, cap, d_out), F32),
+        interpret=interpret,
+    )(seg_slot.astype(jnp.int32), seg_eid.astype(jnp.int32),
+      seg_rank.astype(jnp.int32), seg_rows, A, B)

@@ -17,6 +17,7 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import bgmv as _bgmv
 from repro.kernels import fused as _fused
@@ -80,6 +81,24 @@ def bgmv(x, A, B, ids):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def _bgmv_ranked_call(x, A, B, ids, ranks, interpret=True):
+    d_out = B.shape[-1]
+    x = _pad_to(x, 128, 1)
+    A = _pad_to(_pad_to(A, 128, 1), 128, 2)
+    B = _pad_to(_pad_to(B, 128, 1), 128, 2)
+    out = _bgmv.bgmv_ranked(x, A, B, ids, ranks, interpret=interpret)
+    return out[:, :d_out]
+
+
+def bgmv_ranked(x, A, B, ids, ranks):
+    """``bgmv`` bounded at each row's adapter true rank (``ranks``: (N,))."""
+    if not kernels_enabled():
+        return _ref.bgmv_ranked_ref(x, A, B, ids, ranks)
+    return _bgmv_ranked_call(x, A, B, ids, ranks,
+                             interpret=pallas_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def _bgmv_expert_call(x, A, B, ids, eids, interpret=True):
     d_out = B.shape[-1]
     x = _pad_to(x, 128, 1)
@@ -114,6 +133,72 @@ def sgmv(seg_rows, seg_adapter, A, B):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def _sgmv_ranked_call(seg_rows, seg_adapter, seg_rank, A, B, interpret=True):
+    d_out = B.shape[-1]
+    seg_rows = _pad_to(_pad_to(seg_rows, 8, 1), 128, 2)
+    A = _pad_to(_pad_to(A, 128, 1), 128, 2)
+    B = _pad_to(_pad_to(B, 128, 1), 128, 2)
+    out = _sgmv.sgmv_ranked(seg_rows, seg_adapter, seg_rank, A, B,
+                            interpret=interpret)
+    return out[:, : seg_rows.shape[1], :d_out]
+
+
+def sgmv_ranked(seg_rows, seg_adapter, seg_rank, A, B):
+    """``sgmv`` with per-segment true ranks (see kernels/sgmv.py)."""
+    if not kernels_enabled():
+        return _ref.sgmv_ranked_ref(seg_rows, seg_adapter, seg_rank, A, B)
+    cap = seg_rows.shape[1]
+    out = _sgmv_ranked_call(seg_rows, seg_adapter, seg_rank, A, B,
+                            interpret=pallas_interpret())
+    return out[:, :cap]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _sgmv_bucket_call(seg_rows, seg_adapter, A, B, interpret=True):
+    # rank is already sliced + tile-padded by sgmv_rank_grouped (that IS
+    # the saving); pad only the row/feature dims here
+    d_out = B.shape[-1]
+    seg_rows = _pad_to(_pad_to(seg_rows, 8, 1), 128, 2)
+    A = _pad_to(A, 128, 1)
+    B = _pad_to(B, 128, 2)
+    out = _sgmv.sgmv(seg_rows, seg_adapter, A, B, interpret=interpret)
+    return out[:, : seg_rows.shape[1], :d_out]
+
+
+def sgmv_rank_grouped(seg_rows, seg_adapter, seg_rank, A, B):
+    """Rank-bucketed SGMV: one dispatch per distinct true rank, with A/B
+    sliced to that rank, so a rank-4 bucket prices rank-4 work instead of
+    the pool rank. Feed it ``build_segments_ranked`` output (segments
+    pre-sorted by rank so each bucket is a contiguous slice). Matches
+    ``sgmv_rank_grouped_ref`` exactly — bucket layout never changes the
+    math."""
+    if not kernels_enabled():
+        return _ref.sgmv_rank_grouped_ref(seg_rows, seg_adapter, seg_rank,
+                                          A, B)
+    S, cap, _ = seg_rows.shape
+    d_out = B.shape[-1]
+    interp = pallas_interpret()
+    # interpret mode has no lane constraint, so buckets shrink to the
+    # sublane tile; native TPU lowering needs the contraction lane-aligned
+    rmult = 8 if interp else 128
+    ranks_np = np.asarray(seg_rank)
+    active = np.asarray(seg_adapter) >= 0
+    out = jnp.zeros((S, cap, d_out), jnp.float32)
+    for rb in np.unique(ranks_np[active]).tolist():
+        idx = np.nonzero(active & (ranks_np == rb))[0]
+        rb_pad = -(-int(rb) // rmult) * rmult
+        # a bucket's A/B slice may still carry other adapters' lanes up to
+        # rb_pad — for this bucket's adapters those lanes are the pool's
+        # exact-zero padding, so they contribute nothing
+        got = _sgmv_bucket_call(seg_rows[idx], seg_adapter[idx],
+                                _pad_to(A[:, :, :rb_pad], rmult, 2),
+                                _pad_to(B[:, :rb_pad, :], rmult, 1),
+                                interpret=interp)
+        out = out.at[idx].set(got)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def _fused_sgmv_call(seg_rows, seg_slot, seg_eid, A, B, interpret=True):
     d_out = B.shape[-1]
     seg_rows = _pad_to(_pad_to(seg_rows, 8, 1), 128, 2)
@@ -122,6 +207,29 @@ def _fused_sgmv_call(seg_rows, seg_slot, seg_eid, A, B, interpret=True):
     out = _fused.fused_sgmv(seg_rows, seg_slot, seg_eid, A, B,
                             interpret=interpret)
     return out[:, :, :d_out]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fused_sgmv_ranked_call(seg_rows, seg_slot, seg_eid, seg_rank, A, B,
+                            interpret=True):
+    d_out = B.shape[-1]
+    seg_rows = _pad_to(_pad_to(seg_rows, 8, 1), 128, 2)
+    A = _pad_to(_pad_to(A, 128, 2), 128, 3)
+    B = _pad_to(_pad_to(B, 128, 2), 128, 3)
+    out = _fused.fused_sgmv_ranked(seg_rows, seg_slot, seg_eid, seg_rank,
+                                   A, B, interpret=interpret)
+    return out[:, :, :d_out]
+
+
+def fused_sgmv_ranked(seg_rows, seg_slot, seg_eid, seg_rank, A, B):
+    """``fused_sgmv`` with per-segment true ranks (see kernels/fused.py)."""
+    if not kernels_enabled():
+        return _ref.fused_sgmv_ranked_ref(seg_rows, seg_slot, seg_eid,
+                                          seg_rank, A, B)
+    cap = seg_rows.shape[1]
+    out = _fused_sgmv_ranked_call(seg_rows, seg_slot, seg_eid, seg_rank,
+                                  A, B, interpret=pallas_interpret())
+    return out[:, :cap]
 
 
 def fused_sgmv(seg_rows, seg_slot, seg_eid, A, B):
@@ -186,3 +294,4 @@ def paged_attention(q, k_pool, v_pool, block_tables, pos, *, window: int = 0):
 
 
 build_segments = _sgmv.build_segments
+build_segments_ranked = _sgmv.build_segments_ranked

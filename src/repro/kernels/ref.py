@@ -25,6 +25,39 @@ def sgmv_ref(seg_rows, seg_adapter, A, B):
     return jnp.where((seg_adapter >= 0)[:, None, None], y, 0.0)
 
 
+def sgmv_ranked_ref(seg_rows, seg_adapter, seg_rank, A, B):
+    """``sgmv_ref`` with the shrink intermediate masked at each segment's
+    true rank (``seg_rank``): h columns >= rank are forced to +0.0 before
+    the expand — the oracle for kernels/sgmv.py ``sgmv_ranked``."""
+    ids = jnp.maximum(seg_adapter, 0)
+    a = A[ids]                       # (S, d_in, r)
+    b = B[ids]                       # (S, r, d_out)
+    h = jnp.einsum("scd,sdr->scr", seg_rows.astype(F32), a.astype(F32))
+    r = A.shape[-1]
+    h = jnp.where(jnp.arange(r)[None, None, :] < seg_rank[:, None, None],
+                  h, 0.0)
+    y = jnp.einsum("scr,sro->sco", h, b.astype(F32))
+    return jnp.where((seg_adapter >= 0)[:, None, None], y, 0.0)
+
+
+def sgmv_rank_grouped_ref(seg_rows, seg_adapter, seg_rank, A, B):
+    """Oracle for ops.sgmv_rank_grouped: the bucketed dispatch computes
+    exactly the true-rank-masked SGMV, whatever the bucket layout."""
+    return sgmv_ranked_ref(seg_rows, seg_adapter, seg_rank, A, B)
+
+
+def bgmv_ranked_ref(x, A, B, ids, ranks):
+    """``bgmv_ref`` bounded at each row's adapter true rank (``ranks`` is
+    (N,) per-adapter) — the oracle for kernels/bgmv.py ``bgmv_ranked``."""
+    N, _, r = A.shape
+    safe = jnp.clip(ids, 0, N - 1)
+    row_ranks = jnp.where(ids >= 0, jnp.asarray(ranks)[safe], 0)
+    h = jnp.einsum("td,tdr->tr", x.astype(F32), A[safe].astype(F32))
+    h = jnp.where(jnp.arange(r)[None, :] < row_ranks[:, None], h, 0.0)
+    y = jnp.einsum("tr,tro->to", h, B[safe].astype(F32))
+    return jnp.where((ids >= 0)[:, None], y, 0.0)
+
+
 def fused_sgmv_ref(seg_rows, seg_slot, seg_eid, A, B):
     """seg_rows: (S, cap, d_in); seg_slot: (S,) slot ids (-1 = padding);
     seg_eid: (S,) expert per segment; A: (M, E, d_in, r);
@@ -35,6 +68,22 @@ def fused_sgmv_ref(seg_rows, seg_slot, seg_eid, A, B):
     a = A[ids, eids]                 # (S, d_in, r)
     b = B[ids, eids]                 # (S, r, d_out)
     h = jnp.einsum("scd,sdr->scr", seg_rows.astype(F32), a.astype(F32))
+    y = jnp.einsum("scr,sro->sco", h, b.astype(F32))
+    return jnp.where((seg_slot >= 0)[:, None, None], y, 0.0)
+
+
+def fused_sgmv_ranked_ref(seg_rows, seg_slot, seg_eid, seg_rank, A, B):
+    """``fused_sgmv_ref`` with the VMEM intermediate masked at each
+    segment's true rank — the oracle for kernels/fused.py
+    ``fused_sgmv_ranked``."""
+    ids = jnp.maximum(seg_slot, 0)
+    eids = jnp.maximum(seg_eid, 0)
+    a = A[ids, eids]                 # (S, d_in, r)
+    b = B[ids, eids]                 # (S, r, d_out)
+    h = jnp.einsum("scd,sdr->scr", seg_rows.astype(F32), a.astype(F32))
+    r = A.shape[-1]
+    h = jnp.where(jnp.arange(r)[None, None, :] < seg_rank[:, None, None],
+                  h, 0.0)
     y = jnp.einsum("scr,sro->sco", h, b.astype(F32))
     return jnp.where((seg_slot >= 0)[:, None, None], y, 0.0)
 

@@ -41,6 +41,27 @@ def _kernel(ids_ref, x_ref, a_ref, b_ref, o_ref):
         o_ref[...] = jnp.zeros_like(o_ref)
 
 
+def _kernel_ranked(ids_ref, ranks_ref, x_ref, a_ref, b_ref, o_ref):
+    s = pl.program_id(0)
+
+    @pl.when(ids_ref[s] >= 0)
+    def _():
+        h = jnp.dot(x_ref[0].astype(F32), a_ref[0].astype(F32),
+                    preferred_element_type=F32)           # (cap, r)
+        # true-rank mask: columns past the segment's rank carry only the
+        # pool padding (exact +/-0 lanes) — force them to +0.0 so the
+        # expand prices nothing and stays bit-compatible with the padded
+        # form (zeros times B's zero-padded rows).
+        col = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+        h = jnp.where(col < ranks_ref[s], h, 0.0)
+        o_ref[...] = jnp.dot(h, b_ref[0].astype(F32),
+                             preferred_element_type=F32)[None]  # (1,cap,d_out)
+
+    @pl.when(ids_ref[s] < 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
 def sgmv(seg_rows, seg_adapter, A, B, *, interpret: bool = True):
     S, cap, d_in = seg_rows.shape
     N, _, r = A.shape
@@ -63,6 +84,39 @@ def sgmv(seg_rows, seg_adapter, A, B, *, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((S, cap, d_out), F32),
         interpret=interpret,
     )(seg_adapter.astype(jnp.int32), seg_rows, A, B)
+
+
+def sgmv_ranked(seg_rows, seg_adapter, seg_rank, A, B, *,
+                interpret: bool = True):
+    """SGMV with a per-segment true rank: ``seg_rank[s]`` (0..r) bounds the
+    shrink/expand contraction for segment ``s`` — a rank-4 adapter in a
+    rank-64 pool computes (and on real hardware reads) only its true lanes.
+    Same contract as ``sgmv`` otherwise."""
+    S, cap, d_in = seg_rows.shape
+    N, _, r = A.shape
+    d_out = B.shape[-1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, cap, d_in), lambda s, ids, ranks: (s, 0, 0)),
+            pl.BlockSpec((1, d_in, r),
+                         lambda s, ids, ranks: (jnp.maximum(ids[s], 0),
+                                                0, 0)),
+            pl.BlockSpec((1, r, d_out),
+                         lambda s, ids, ranks: (jnp.maximum(ids[s], 0),
+                                                0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cap, d_out),
+                               lambda s, ids, ranks: (s, 0, 0)),
+    )
+    return pl.pallas_call(
+        _kernel_ranked, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, cap, d_out), F32),
+        interpret=interpret,
+    )(seg_adapter.astype(jnp.int32), seg_rank.astype(jnp.int32),
+      seg_rows, A, B)
 
 
 def build_segments(rows: jax.Array, row_adapter: jax.Array, n_adapters: int,
@@ -96,3 +150,34 @@ def build_segments(rows: jax.Array, row_adapter: jax.Array, n_adapters: int,
     seg_adapter = jnp.where(counts > 0, jnp.arange(n_adapters), -1)
     scatter = jnp.zeros((T,), jnp.int32).at[order].set(slot.astype(jnp.int32))
     return seg_rows, seg_adapter.astype(jnp.int32), scatter
+
+
+def build_segments_ranked(rows: jax.Array, row_adapter: jax.Array,
+                          n_adapters: int, cap: int, adapter_ranks
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array]:
+    """``build_segments`` plus per-segment true ranks, with segments sorted
+    by ascending rank (inactive segments last) so a rank-bucketed dispatch
+    (ops.sgmv_rank_grouped) runs each bucket as one contiguous slice.
+
+    Returns (seg_rows, seg_adapter, seg_rank, scatter); the scatter slots
+    are remapped through the rank permutation, so
+    ``out.reshape(-1, d_out)[scatter]`` recovers per-input-row deltas
+    exactly as with ``build_segments``.
+    """
+    seg_rows, seg_adapter, scatter = build_segments(rows, row_adapter,
+                                                    n_adapters, cap)
+    ranks = jnp.asarray(adapter_ranks, jnp.int32)
+    seg_rank = jnp.where(seg_adapter >= 0,
+                         ranks[jnp.maximum(seg_adapter, 0)], 0)
+    # active segments first, ascending rank; stable so equal-rank segments
+    # keep adapter order (deterministic bucket layout)
+    key = jnp.where(seg_adapter >= 0, seg_rank, jnp.iinfo(jnp.int32).max)
+    perm = jnp.argsort(key, stable=True)
+    inv = jnp.zeros_like(perm).at[perm].set(jnp.arange(perm.shape[0]))
+    sentinel = n_adapters * cap
+    old_seg = jnp.minimum(scatter // cap, n_adapters - 1)
+    remapped = (inv[old_seg] * cap + scatter % cap).astype(jnp.int32)
+    scatter = jnp.where(scatter < sentinel, remapped, sentinel)
+    return (seg_rows[perm], seg_adapter[perm],
+            seg_rank[perm].astype(jnp.int32), scatter.astype(jnp.int32))

@@ -145,12 +145,13 @@ def compile_disagg(arch: str, mesh_name: str = "single", x: int = 4,
     rows = jax.ShapeDtypeStruct((R, cfg.d_model), jnp.bfloat16)
     slots = jax.ShapeDtypeStruct((R,), jnp.int32)
     eids = jax.ShapeDtypeStruct((R,), jnp.int32)
+    ranks = jax.ShapeDtypeStruct((R,), jnp.int32)
     for hook, din in (("up", cfg.d_model), ("down", cfg.d_ff)):
         fn = server._step(hook)
         A, B = ((server.pool["up_A"], server.pool["up_B"]) if hook == "up"
                 else (server.pool["down_A"], server.pool["down_B"]))
         rows_h = jax.ShapeDtypeStruct((R, din), jnp.bfloat16)
-        lowered = fn.lower(0, jnp.int32(0), rows_h, slots, eids,
+        lowered = fn.lower(0, jnp.int32(0), rows_h, slots, eids, ranks,
                            jax.ShapeDtypeStruct(A.shape, A.dtype),
                            jax.ShapeDtypeStruct(B.shape, B.dtype))
         compiled = lowered.compile()

@@ -191,6 +191,15 @@ class ServeConfig:
     recoveries: Tuple[Tuple[float, int], ...] = ()
     stragglers: Tuple[Tuple[float, int, float], ...] = ()
     straggler_mitigation: bool = True
+    # rank-aware hook compute (both planes): bound each row's LoRA
+    # contraction/pricing at its adapter's TRUE rank instead of the padded
+    # pool rank. Bitwise-neutral on the cluster plane's token stream
+    # (padded lanes are exact zeros; pinned by test); the sim plane prices
+    # the batch's mean effective rank. ``adapter_ranks`` feeds the sim
+    # plane's per-adapter ranks (the cluster plane reads them from the
+    # pool/store instead).
+    rank_aware: bool = True
+    adapter_ranks: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         # a typo'd plane must fail HERE, not silently price as "host" on
@@ -237,7 +246,7 @@ class ServeConfig:
             mesh_shape=self.mesh_shape,
             store_host_bytes=self.store_host_bytes,
             store_dir=self.store_dir, disk_bw=self.disk_bw,
-            prefetch=self.prefetch)
+            prefetch=self.prefetch, rank_aware=self.rank_aware)
 
     def sim_config(self) -> SimConfig:
         return SimConfig(
@@ -264,7 +273,9 @@ class ServeConfig:
             autoscale=self.autoscale, transport=self.transport,
             hook_launch_us=self.hook_launch_us,
             store_host_bytes=self.store_host_bytes,
-            prefetch=self.prefetch)
+            prefetch=self.prefetch,
+            adapter_ranks=self.adapter_ranks,
+            rank_aware=self.rank_aware)
 
     # ------------------------ migration shims ------------------------ #
     @classmethod
@@ -294,7 +305,8 @@ class ServeConfig:
             autoscale=sim.autoscale, transport=sim.transport,
             hook_launch_us=sim.hook_launch_us,
             store_host_bytes=sim.store_host_bytes,
-            disk_bw=sim.hw.disk_bw, prefetch=sim.prefetch)
+            disk_bw=sim.hw.disk_bw, prefetch=sim.prefetch,
+            adapter_ranks=sim.adapter_ranks, rank_aware=sim.rank_aware)
         kw.update(overrides)
         return cls(**kw)
 
@@ -315,7 +327,7 @@ class ServeConfig:
             mesh_shape=ccfg.mesh_shape,
             store_host_bytes=ccfg.store_host_bytes,
             store_dir=ccfg.store_dir, disk_bw=ccfg.disk_bw,
-            prefetch=ccfg.prefetch)
+            prefetch=ccfg.prefetch, rank_aware=ccfg.rank_aware)
         kw.update(overrides)
         return cls(**kw)
 
@@ -816,7 +828,8 @@ class ServeSystem:
             reqs, duration if duration is not None
             else self.backend.default_duration(),
             ttft_slo=sc.ttft_slo, tpot_slo=sc.tpot_slo, warmup=warmup,
-            cache_stats=self.backend.cache_stats())
+            cache_stats=self.backend.cache_stats(),
+            transport_stats=self.backend.transport_stats())
 
 
 def build_system(cfg: ServeConfig, model: ModelConfig, *, params=None,

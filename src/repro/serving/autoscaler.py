@@ -197,7 +197,9 @@ class Autoscaler:
                 cache_slots: int, n_instances: int,
                 n_replicas: int,
                 host_hit_rate: Optional[float] = None,
-                miss_cost_ratio: float = 1.0) -> List[ScaleAction]:
+                miss_cost_ratio: float = 1.0,
+                mean_active_rank: Optional[float] = None
+                ) -> List[ScaleAction]:
         """One Algorithm-1 evaluation over the live window; returns the
         actions that converge the system to the new targets (empty when
         nothing changes or the interval has not elapsed).
@@ -210,7 +212,13 @@ class Autoscaler:
         target relaxes to alpha_eff = 1 - (1-alpha)/f: cheaper misses
         tolerate a higher miss RATE at the same TTFT damage, shrinking
         M*. ``host_hit_rate=None`` (no tier observations yet) keeps the
-        cold-start model."""
+        cold-start model.
+
+        ``mean_active_rank`` (the transport plane's effective-rank
+        telemetry) prices the Eqs. 5-6 server compute term at the rank
+        the rank-aware kernels actually pay instead of the padded pool
+        rank; None (no observations / rank-aware off) keeps the padded
+        model."""
         pol = self.policy
         if not self.due(now):
             return []
@@ -277,7 +285,8 @@ class Autoscaler:
             gpus, _, _ = min_gpus_for_tpot(
                 self.cfg, b_est, self.gpus_per_instance, inst_t,
                 slo_eff, distinct, hw=self.hw,
-                max_m=pol.max_replicas * pol.gpus_per_replica)
+                max_m=pol.max_replicas * pol.gpus_per_replica,
+                rank=mean_active_rank)
             rep_t = int(np.clip(math.ceil(gpus / pol.gpus_per_replica),
                                 pol.min_replicas, pol.max_replicas))
 
@@ -313,6 +322,8 @@ class Autoscaler:
             "alpha_eff": round(float(alpha_eff), 4),
             "host_hit_rate": (round(float(host_hit_rate), 4)
                               if host_hit_rate is not None else None),
+            "mean_active_rank": (round(float(mean_active_rank), 3)
+                                 if mean_active_rank is not None else None),
             "targets": {"cache_slots": cache_t, "instances": inst_t,
                         "replicas": rep_t},
             "actions": [(a.kind, a.target) for a in actions],

@@ -105,6 +105,11 @@ class ClusterConfig:
     # async prefetch staging + scheduler prefetch hints; None follows
     # layerwise_loading (the legacy coupling of the two knobs)
     prefetch: Optional[bool] = None
+    # rank-aware hook compute: bound each row's hook contraction at its
+    # adapter's TRUE rank instead of the padded pool rank. Padded lanes
+    # are exact zeros, so this is bitwise-neutral on the token stream
+    # (pinned by test) while pricing/telemetry see the true-rank FLOPs.
+    rank_aware: bool = True
 
     @property
     def prefetch_on(self) -> bool:
@@ -171,6 +176,8 @@ class Cluster:
         self.pool = pool
         self.params = params
         self.server_pool = server_pool if ccfg.disaggregated else None
+        if self.server_pool is not None:
+            self.server_pool.set_rank_aware(ccfg.rank_aware)
         # hierarchical adapter store: host/disk tiers + async staging + the
         # dynamic register/unregister lifecycle. Disaggregated-only — the
         # coupled path gathers adapters from the static pool inside the
@@ -252,7 +259,8 @@ class Cluster:
         promoting disk-tier adapters), bitwise identical to the direct
         pool extraction it replaces."""
         self.server_pool.sync(self._caches[-1],
-                              tensors_fn=self.store.server_tensors)
+                              tensors_fn=self.store.server_tensors,
+                              rank_fn=self.store.rank_of)
 
     # ------------------------------------------------------------------ #
     # incremental session API (serving/api.py front door)                 #
@@ -430,6 +438,10 @@ class Cluster:
             return []
         in_flight = sum(i.batch for i in self._instances.values()
                         if i.alive)
+        mean_rank = None
+        if self.transport is not None and self.ccfg.rank_aware:
+            observed = self.transport.stats.mean_active_rank()
+            mean_rank = observed if observed > 0 else None
         actions = self._scaler.control(
             now, in_flight=in_flight, queued=self.sched.queue_len(),
             cache_slots=self._cache_slots,
@@ -439,7 +451,8 @@ class Cluster:
             host_hit_rate=self.store.host_hit_rate()
             if self.store else None,
             miss_cost_ratio=self.store.miss_cost_ratio()
-            if self.store else 1.0)
+            if self.store else 1.0,
+            mean_active_rank=mean_rank)
         for act in actions:
             self._apply_action(act, now)
         return actions

@@ -36,6 +36,10 @@ class Summary:
     prefetch_hit_rate: float = float("nan")   # hint-admitted hits/(hits+miss)
     host_hit_rate: float = float("nan")       # host-RAM share of tier misses
     miss_penalty_s: float = float("nan")      # mean full-load s per miss
+    # effective-rank telemetry (from Backend.transport_stats; nan = not
+    # supplied — coupled mode or a plane with no rank observations)
+    mean_active_rank: float = float("nan")    # mean paid rank per active row
+    rank_flop_savings: float = float("nan")   # 1 - mean/pool (padded = 0)
 
     def meets_slos(self, ttft_slo=TTFT_SLO, tpot_slo=TPOT_SLO) -> bool:
         return self.p95_ttft <= ttft_slo and self.mean_tpot <= tpot_slo
@@ -62,9 +66,21 @@ def _cache_telemetry(cache_stats: Dict) -> Dict[str, float]:
     return out
 
 
+def _rank_telemetry(transport_stats: Dict) -> Dict[str, float]:
+    """Fold Backend.transport_stats' effective-rank keys into Summary
+    (nan when the plane never observed an active row)."""
+    out = {}
+    ts = transport_stats or {}
+    if ts.get("mean_active_rank", 0):
+        out["mean_active_rank"] = float(ts["mean_active_rank"])
+        out["rank_flop_savings"] = float(ts.get("rank_flop_savings", 0.0))
+    return out
+
+
 def summarize(requests: Sequence[Request], duration: float,
               ttft_slo: float = TTFT_SLO, tpot_slo: float = TPOT_SLO,
-              warmup: float = 0.1, cache_stats: Dict = None) -> Summary:
+              warmup: float = 0.1, cache_stats: Dict = None,
+              transport_stats: Dict = None) -> Summary:
     """Steady-state stats (drop the first ``warmup`` fraction, paper Fig. 6
     measures 30-270 s of a 300 s run)."""
     t0 = duration * warmup
@@ -83,6 +99,7 @@ def summarize(requests: Sequence[Request], duration: float,
     # unbounded TTFT (counting only survivors would hide queue collapse)
     censored = [r for r in window if r.finish < 0 or r.first_token < 0]
     telemetry = _cache_telemetry(cache_stats)
+    telemetry.update(_rank_telemetry(transport_stats))
     if not done:
         return Summary(len(requests), 0, float("inf"), float("inf"),
                        float("inf"), 0.0, 0.0, 0.0,

@@ -55,19 +55,32 @@ class AnalyticReplica:
     def __init__(self, cache_slots: int):
         self.M = cache_slots
         self.slot_of: Dict[int, int] = {}
+        # adapter id -> TRUE rank, mirroring LoRAServer.slot_ranks (the sim
+        # plane has no slot pool, so the table is keyed by id directly)
+        self.ranks: Dict[int, int] = {}
         self._next_slot = 0
 
     def is_resident(self, adapter_id: int) -> bool:
         return adapter_id in self.slot_of
 
-    def insert(self, adapter_id: int, tensors=None) -> int:
+    def insert(self, adapter_id: int, tensors=None,
+               rank: Optional[int] = None) -> int:
         if adapter_id not in self.slot_of:
             self.slot_of[adapter_id] = self._next_slot
             self._next_slot += 1
+        if rank:
+            self.ranks[adapter_id] = int(rank)
         return self.slot_of[adapter_id]
 
     def evict(self, adapter_id: int) -> None:
         del self.slot_of[adapter_id]
+        self.ranks.pop(adapter_id, None)
+
+    def true_rank(self, adapter_id: int) -> int:
+        """TRUE rank of a resident adapter (0 = not resident / unknown)."""
+        if adapter_id not in self.slot_of:
+            return 0
+        return self.ranks.get(adapter_id, 0)
 
     def resize(self, cache_slots: int) -> None:
         """Track the autoscaler's cache target (slot tables carry no
@@ -91,6 +104,10 @@ class ServerPool:
         # with the replica count. The shared LoRACache enforces the
         # per-home bound (``set_partition``/``repartition``).
         self.partitioned = False
+        # rank-aware compute toggle, mirrored onto every replica (current
+        # and future): False pins the padded pool-rank path, the
+        # bit-identity baseline for `rank_aware on == off` tests
+        self.rank_aware = True
         self._full_sync = True      # first sync (and any resize) is full
         # observability (the delta-sync satellite's test hooks)
         self.sync_rounds = 0
@@ -184,6 +201,28 @@ class ServerPool:
         return self.replicas[self.replica_for(adapter_id)].is_resident(
             adapter_id)
 
+    def set_rank_aware(self, flag: bool) -> None:
+        """Toggle true-rank compute on every replica (and replicas added
+        later — ``add_replica`` re-applies the pool's flag)."""
+        self.rank_aware = bool(flag)
+        for rep in self.replicas:
+            if hasattr(rep, "rank_aware"):
+                rep.rank_aware = self.rank_aware
+
+    def true_rank(self, adapter_id: int) -> int:
+        """TRUE rank of a resident adapter via its affinity home (0 = not
+        resident / rank unknown)."""
+        rep = self.replicas[self.replica_for(adapter_id)]
+        return rep.true_rank(adapter_id) if hasattr(rep, "true_rank") else 0
+
+    @property
+    def pool_rank(self) -> int:
+        """Padded (pool) rank of the replicas' slot pools — the baseline
+        the rank-aware savings are measured against (0 on analytic
+        replicas, which carry no pools)."""
+        return max((getattr(rep, "r", 0) for rep in self.replicas),
+                   default=0)
+
     # ------------------------------------------------------------------ #
     # elasticity                                                          #
     # ------------------------------------------------------------------ #
@@ -193,6 +232,8 @@ class ServerPool:
         if self._factory is None:
             raise RuntimeError("ServerPool built without a replica factory")
         rep = self._factory()
+        if hasattr(rep, "rank_aware"):
+            rep.rank_aware = self.rank_aware
         self.replicas.append(rep)
         self._full_sync = True
         self.version += 1
@@ -225,13 +266,16 @@ class ServerPool:
     # residency sync (delta-based)                                        #
     # ------------------------------------------------------------------ #
     def sync(self, cache: LoRACache,
-             tensors_fn: Optional[Callable[[int], object]] = None) -> int:
+             tensors_fn: Optional[Callable[[int], object]] = None,
+             rank_fn: Optional[Callable[[int], int]] = None) -> int:
         """Mirror ``cache``'s residency set into the replica slot tables.
 
         Normally touches only the adapter ids the cache marked dirty since
         the last sync (insertions and evictions); after a replica resize it
-        reconciles every id the cache or any replica still holds. Returns
-        the number of ids reconciled (0 == no-op round)."""
+        reconciles every id the cache or any replica still holds.
+        ``rank_fn(aid)`` supplies each adapter's TRUE rank for the
+        replicas' slot-rank tables (None = pool rank, i.e. no trimming).
+        Returns the number of ids reconciled (0 == no-op round)."""
         self.sync_rounds += 1
         if self._full_sync:
             changed = set(cache.resident)
@@ -259,7 +303,8 @@ class ServerPool:
                 continue
             rep = self.replicas[self.replica_for(aid)]
             if not rep.is_resident(aid):
-                rep.insert(aid, tensors_fn(aid) if tensors_fn else None)
+                rep.insert(aid, tensors_fn(aid) if tensors_fn else None,
+                           rank=rank_fn(aid) if rank_fn else None)
                 self.sync_inserts += 1
         if full:
             # re-home passes are rare (resize only): assert the invariant

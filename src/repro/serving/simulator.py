@@ -94,6 +94,12 @@ class SimConfig:
     # scheduler prefetch hints; None follows layerwise_loading (the legacy
     # coupling of the two knobs)
     prefetch: Optional[bool] = None
+    # rank-aware compute pricing: per-adapter TRUE ranks (None = every
+    # adapter at the pool rank) and whether the hook-FLOP terms price the
+    # batch's mean effective rank instead of the padded pool rank —
+    # the analytic twin of the cluster plane's rank-bounded kernels
+    adapter_ranks: Optional[Tuple[int, ...]] = None
+    rank_aware: bool = True
 
     @property
     def prefetch_on(self) -> bool:
@@ -188,13 +194,35 @@ class Simulation:
                              f"(expected 'host' or 'fused')")
         self.rank = sim.lora_rank or cfg.lora_rank
         self._adapter_bytes = cfg.lora_adapter_bytes(self.rank)
+        # per-adapter true ranks (clamped into [1, pool rank]); uniform
+        # pools price every adapter at the padded pool rank
+        if sim.adapter_ranks is not None:
+            ranks = np.asarray(sim.adapter_ranks, np.int64)
+            if ranks.shape != (sim.n_adapters,):
+                raise ValueError(
+                    f"adapter_ranks must have one entry per adapter "
+                    f"({sim.n_adapters}), got shape {ranks.shape}")
+            self.adapter_ranks = np.clip(ranks, 1, self.rank)
+        else:
+            self.adapter_ranks = np.full(sim.n_adapters, self.rank,
+                                         np.int64)
+        # effective-rank telemetry (mirrors TransportStats.observe_ranks)
+        self._rank_rows = 0
+        self._rank_sum = 0
+        self._max_rank = 0
         # analytic host/disk tier accounting (disaggregated only): prices
         # each cache miss by where the adapter lives, mirroring the cluster
         # plane's AdapterStore without tensors, files, or threads
         self.store: Optional[AnalyticStore] = None
         if sim.disaggregated:
+            # tier bytes are TRUE-RANK bytes (the cluster plane's store
+            # trims the rank tail before any host/disk transfer); device
+            # cache slots stay pool-rank padded in _mk_cache
             self.store = AnalyticStore(
-                lambda aid: self._adapter_bytes, sim.n_adapters,
+                lambda aid: cfg.lora_adapter_bytes(
+                    int(self.adapter_ranks[aid]))
+                if 0 <= aid < sim.n_adapters else self._adapter_bytes,
+                sim.n_adapters,
                 host_bytes=sim.store_host_bytes,
                 host_bw=sim.hw.host_bw, disk_bw=sim.hw.disk_bw)
         pop = zipf_popularity(sim.n_adapters, sim.zipf_s)
@@ -380,6 +408,10 @@ class Simulation:
             return {}
         uploads = 0 if sim.transport == "host" else \
             self.server_pool.sync_rounds - self.server_pool.sync_noops
+        mean_rank = self._rank_sum / self._rank_rows \
+            if self._rank_rows else 0.0
+        savings = 1.0 - mean_rank / self.rank \
+            if self._rank_rows and self.rank else 0.0
         return {
             "transport": sim.transport,
             "steps": self.n_decode_steps,
@@ -390,6 +422,9 @@ class Simulation:
             "lut_uploads": uploads,
             "host_dispatches_per_step": round(
                 self._modeled_dispatches / max(self.n_decode_steps, 1), 3),
+            "mean_active_rank": round(mean_rank, 3),
+            "max_active_rank": self._max_rank,
+            "rank_flop_savings": round(savings, 4),
         }
 
     def result(self) -> Dict:
@@ -415,6 +450,23 @@ class Simulation:
     def _distinct_adapters(self, inst: InstanceState) -> float:
         return max(len({r.adapter_id for r in inst.running}), 1)
 
+    def _adapter_rank(self, aid: int) -> int:
+        """TRUE rank of one adapter (pool rank for out-of-universe ids
+        registered mid-run through load_adapter)."""
+        if 0 <= aid < self.sim.n_adapters:
+            return int(self.adapter_ranks[aid])
+        return self.rank
+
+    def _effective_rank(self, inst: InstanceState) -> float:
+        """The rank the hook-FLOP terms pay for this batch: the mean TRUE
+        rank over running rows when rank-aware (the segmented kernels
+        bound each row's contraction at its adapter's rank), the padded
+        pool rank otherwise."""
+        if not self.sim.rank_aware or not inst.running:
+            return float(self.rank)
+        return float(np.mean([self._adapter_rank(r.adapter_id)
+                              for r in inst.running]))
+
     def _step_seconds(self, inst: InstanceState) -> float:
         cfg, sim = self.cfg, self.sim
         b = inst.batch
@@ -423,11 +475,12 @@ class Simulation:
         t = base_step_seconds(cfg, b, sim.gpus_per_instance, ctx, sim.hw,
                               sim.step_overhead)
         dist = self._distinct_adapters(inst)
+        eff_rank = self._effective_rank(inst)
         if sim.disaggregated:
             live = sum(1 for i in self.instances if i.alive)
             t += disagg_stall_seconds(
                 cfg, self.placement, b, sim.gpus_per_instance,
-                max(live, 1), dist, self.rank, sim.hw, sim.overlap,
+                max(live, 1), dist, eff_rank, sim.hw, sim.overlap,
                 sim.fast_kernels, sim.protocol,
                 eff_scale_slow=sim.slow_kernel_eff_scale,
                 n_server_replicas=self.server_pool.n_replicas)
@@ -436,7 +489,7 @@ class Simulation:
                 sim.hook_launch_us)
         else:
             t += coupled_lora_seconds(cfg, b, sim.gpus_per_instance, dist,
-                                      self.rank, sim.hw, sim.fast_kernels)
+                                      eff_rank, sim.hw, sim.fast_kernels)
         return t * inst.slowdown
 
     def _kick(self, iid: int, now: float):
@@ -526,6 +579,10 @@ class Simulation:
 
     def _do_control(self, now: float):
         in_flight = sum(i.batch for i in self.instances if i.alive)
+        mean_rank = None
+        if self.sim.disaggregated and self.sim.rank_aware \
+                and self._rank_rows:
+            mean_rank = self._rank_sum / self._rank_rows
         actions = self._scaler.control(
             now, in_flight=in_flight, queued=self.sched.queue_len(),
             cache_slots=self._cache_slots,
@@ -535,7 +592,8 @@ class Simulation:
             host_hit_rate=self.store.host_hit_rate()
             if self.store else None,
             miss_cost_ratio=self.store.miss_cost_ratio()
-            if self.store else 1.0)
+            if self.store else 1.0,
+            mean_active_rank=mean_rank)
         for act in actions:
             self._apply_action(act, now)
             self.scale_log.append((now, act.kind, act.target))
@@ -645,6 +703,14 @@ class Simulation:
             stepped = list(inst.running)    # every running row earns a token
             self.n_decode_steps += 1
             self._modeled_dispatches += self._dispatches_per_step()
+            if sim.disaggregated and stepped:
+                # bill every active row at the rank the hook compute pays
+                # (mirrors TransportStats.observe_ranks on the real plane)
+                paid = [self._adapter_rank(r.adapter_id)
+                        if sim.rank_aware else self.rank for r in stepped]
+                self._rank_rows += len(paid)
+                self._rank_sum += int(sum(paid))
+                self._max_rank = max(self._max_rank, max(paid))
             finished = sched.step_complete(iid, now)
             for r in stepped:
                 self._emit(now, r.rid, "token")

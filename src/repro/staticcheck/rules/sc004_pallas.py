@@ -19,6 +19,11 @@ pitfalls:
     have a ``<name>_ref`` twin in the sibling ``ref.py`` (defined there or
     re-exported), and — when the repo has tests/test_kernels.py — be
     exercised by name in it.
+  - every ``ref.<name>_ref`` / ``_ref.<name>_ref`` attribute reference in
+    a module with a sibling ``ref.py`` (the ops.py dispatchers' oracle
+    fallbacks, e.g. the rank-aware entry points' ``sgmv_rank_grouped_ref``)
+    must resolve to a ref.py export — a rename/typo there only explodes on
+    the kernels-disabled path, which the kernel CI lane never executes.
 """
 from __future__ import annotations
 
@@ -73,7 +78,33 @@ class PallasKernelDiscipline:
                 checked_kernels.add(id(kernel))
                 findings.extend(self._check_kernel_body(kernel, mod))
             findings.extend(self._check_ref_twin(call, mod, ctx))
+        findings.extend(self._check_ref_references(mod, ctx))
         return findings
+
+    # ------------------- dispatcher-level ref references ---------------- #
+    def _check_ref_references(self, mod: ModuleInfo,
+                              ctx: ProjectContext) -> List[Finding]:
+        """Dispatchers reach their oracles as ``ref.X_ref``/``_ref.X_ref``
+        attribute references without issuing a pallas_call themselves;
+        every such mention must resolve to a sibling ref.py export."""
+        ref_path = mod.path.parent / "ref.py"
+        if mod.path.name == "ref.py" or not ref_path.exists():
+            return []
+        exports = self._ref_exports(ref_path, ctx)
+        out: List[Finding] = []
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Attribute)
+                    and node.attr.endswith("_ref")
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in ("ref", "_ref")
+                    and node.attr not in exports):
+                out.append(Finding(
+                    self.rule_id, mod.relpath, node.lineno,
+                    node.col_offset,
+                    f"'{node.value.id}.{node.attr}' does not resolve to a "
+                    "sibling ref.py export: the pure-jnp fallback would "
+                    "fail exactly and only when kernels are disabled"))
+        return out
 
     # ----------------------- kernel body checks ----------------------- #
     def _check_kernel_body(self, kernel: ast.AST,

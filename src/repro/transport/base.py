@@ -30,6 +30,7 @@ from typing import Dict, Optional, Protocol
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def kv_donating_jit(fn, kv_argnums, **jit_kw):
@@ -76,6 +77,13 @@ class TransportStats:
     host_dispatches: int = 0        # host-initiated launches on decode path
     hook_dispatches: int = 0        # the 2 x n_layers server-hook share
     lut_uploads: int = 0            # residency/LUT device refreshes
+    # effective-rank telemetry: the per-row rank the hook compute PAID
+    # (true slot rank when rank-aware, the padded pool rank otherwise),
+    # accumulated over every active row of every decode step
+    pool_rank: int = 0              # padded slot-pool rank (the baseline)
+    active_rank_rows: int = 0       # active rows observed
+    active_rank_sum: int = 0        # summed paid rank over those rows
+    max_active_rank: int = 0
 
     @property
     def device_programs(self) -> int:
@@ -87,6 +95,39 @@ class TransportStats:
     def per_step(self) -> float:
         return self.host_dispatches / max(self.steps, 1)
 
+    def mean_active_rank(self) -> float:
+        return self.active_rank_sum / self.active_rank_rows \
+            if self.active_rank_rows else 0.0
+
+    def rank_flop_savings(self) -> float:
+        """Fraction of the padded hook FLOPs the rank bound eliminated:
+        1 - mean_paid_rank / pool_rank (0 when nothing observed)."""
+        if not (self.pool_rank and self.active_rank_rows):
+            return 0.0
+        return 1.0 - self.mean_active_rank() / self.pool_rank
+
+    def observe_ranks(self, server, adapter_ids) -> None:
+        """Bill one step's active rows at the rank the hook compute pays:
+        the slot's TRUE rank when ``server`` is rank-aware, else its padded
+        pool rank. Works against a ``ServerPool`` or a bare
+        ``LoRAServer`` (both expose ``true_rank``/``pool_rank``)."""
+        ids = np.asarray(adapter_ids)
+        active = ids[ids >= 0]
+        if active.size == 0:
+            return
+        pool_rank = int(getattr(server, "pool_rank", 0) or
+                        getattr(server, "r", 0))
+        tr = getattr(server, "true_rank", None)
+        if tr is not None and getattr(server, "rank_aware", True):
+            ranks = np.array([tr(int(a)) for a in active])
+            ranks = np.where(ranks > 0, ranks, pool_rank)
+        else:
+            ranks = np.full(active.size, pool_rank)
+        self.active_rank_rows += int(active.size)
+        self.active_rank_sum += int(ranks.sum())
+        self.max_active_rank = max(self.max_active_rank, int(ranks.max()))
+        self.pool_rank = max(self.pool_rank, pool_rank)
+
     def as_dict(self) -> Dict[str, float]:
         return {
             "transport": self.transport,
@@ -96,6 +137,9 @@ class TransportStats:
             "hook_dispatches": self.hook_dispatches,
             "lut_uploads": self.lut_uploads,
             "host_dispatches_per_step": round(self.per_step(), 3),
+            "mean_active_rank": round(self.mean_active_rank(), 3),
+            "max_active_rank": self.max_active_rank,
+            "rank_flop_savings": round(self.rank_flop_savings(), 4),
         }
 
 

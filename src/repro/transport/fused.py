@@ -51,14 +51,15 @@ class DeviceLoraView:
     row reads exactly the array its home replica holds, and inactive rows
     are exact 0.0 — bit-compatible with the host plane's masked sum)."""
 
-    def __init__(self, up_A, up_B, down_A, down_B, slot_lut):
+    def __init__(self, up_A, up_B, down_A, down_B, slot_lut, slot_ranks):
         self.up_A, self.up_B = up_A, up_B
         self.down_A, self.down_B = down_A, down_B
         self.slot_lut = slot_lut
+        self.slot_ranks = slot_ranks            # (R, M) true rank per slot
 
     def tree_flatten(self):
         return ((self.up_A, self.up_B, self.down_A, self.down_B,
-                 self.slot_lut), None)
+                 self.slot_lut, self.slot_ranks), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -78,6 +79,14 @@ class DeviceLoraView:
         a = A[homes, layer, ss, eids]           # (T, d_in, r)
         b = B[homes, layer, ss, eids]           # (T, r, d_out)
         h = jnp.einsum("td,tdr->tr", rows.astype(F32), a.astype(F32))
+        # rank bound: past-rank lanes of h hold exact 0.0 already (the pool
+        # zero-pads them), so trimming them is bitwise-neutral. The "up"
+        # hook's r axis is block-diagonal over the fused gate/up pair, so
+        # the true rank repeats per r_pool-wide block — hence the modulus.
+        r_pool = self.down_A.shape[-1]
+        rank = self.slot_ranks[homes, ss]       # (T,) paid rank per row
+        col = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+        h = jnp.where((col % r_pool) < rank[:, None], h, 0.0)
         out = jnp.einsum("tr,tro->to", h, b.astype(F32))
         return jnp.where((slots >= 0)[:, None], out, 0.0)
 
@@ -170,6 +179,7 @@ class FusedTransport:
 
     def _current_fingerprint(self, reps):
         return (len(reps), getattr(self.server, "version", 0),
+                bool(getattr(self.server, "rank_aware", True)),
                 tuple(getattr(r, "mutations", 0) for r in reps))
 
     def refresh(self) -> bool:
@@ -201,6 +211,18 @@ class FusedTransport:
         stacked = {name: jnp.stack([rep.pool[name][0] for rep in reps])
                    for name in ("up_A", "up_B", "down_A", "down_B")}
         lut_arr = jnp.asarray(lut)
+        # per-slot true ranks ride along with the residency upload; with
+        # rank awareness off every slot pays the padded pool rank, which
+        # makes the device-side mask all-true (the padded baseline)
+        if getattr(self.server, "rank_aware", True):
+            ranks_np = np.stack([np.where(
+                np.asarray(rep.slot_ranks) > 0,
+                np.asarray(rep.slot_ranks), rep.r).astype(np.int32)
+                for rep in reps])
+        else:
+            ranks_np = np.stack([np.full(len(rep.slot_ranks), rep.r,
+                                         np.int32) for rep in reps])
+        ranks_arr = jnp.asarray(ranks_np)
         if self.mesh_ctx is not None:
             # control-plane DMA onto the mesh (replicated): the fused step
             # mixes the view with mesh-committed params/KV, so the view
@@ -210,9 +232,10 @@ class FusedTransport:
             stacked = {n: jax.device_put(a, repl)
                        for n, a in stacked.items()}
             lut_arr = jax.device_put(lut_arr, repl)
+            ranks_arr = jax.device_put(ranks_arr, repl)
         self._view = DeviceLoraView(stacked["up_A"], stacked["up_B"],
                                     stacked["down_A"], stacked["down_B"],
-                                    lut_arr)
+                                    lut_arr, ranks_arr)
         self._fingerprint = fp
         self.stats.lut_uploads += 1
         return True
@@ -225,6 +248,7 @@ class FusedTransport:
         st = self.stats
         st.steps += 1
         st.host_dispatches += 1          # the ONE fused program launch
+        st.observe_ranks(self.server, adapter_ids)
         scale = jnp.asarray(lora_scale, F32)
         if block_table is not None:
             tok, k, v = self._paged(params, cfg, k, v, block_table, toks,

@@ -63,6 +63,7 @@ class HostTransport:
                     block_table=None):
         st = self.stats
         st.steps += 1
+        st.observe_ranks(self.server, adapter_ids)
         if block_table is not None:
             logits, k, v = disagg_mod.disagg_decode_step_slots(
                 params, cfg, k, v, toks, pos_vec, self._counting,

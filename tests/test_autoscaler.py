@@ -179,6 +179,35 @@ def test_autoscaler_cache_target_covers_pinned_distinct():
     assert resize[0].target >= 50
 
 
+def test_autoscaler_prices_mean_effective_rank():
+    """Eqs. 5-6 with effective-rank telemetry: a low-rank-dominated mix
+    (mean rank 4 vs pool rank 64) needs fewer server chips — and fewer
+    replicas through the control loop — at the same TPOT SLO, and the
+    observation lands in the control history."""
+    from repro.core.provisioning import min_gpus_for_tpot
+    m_pad = min_gpus_for_tpot(MX, 128, 8, 1, 0.03, 64)[0]
+    m_eq = min_gpus_for_tpot(MX, 128, 8, 1, 0.03, 64, rank=MX.lora_rank)[0]
+    m_low = min_gpus_for_tpot(MX, 128, 8, 1, 0.03, 64, rank=4)[0]
+    assert m_eq == m_pad            # rank=None IS the padded pool rank
+    assert m_low < m_pad            # low-rank mixes need fewer chips
+    pol = AutoscalePolicy(control_interval=1.0, window=30.0, slo_tpot=0.01,
+                          max_replicas=8, resize_deadband=0.0,
+                          max_instances=4)
+
+    def run(rank):
+        sc = Autoscaler(pol, MX, max_batch=64)
+        for i in range(400):
+            sc.observe_arrival(30.0 * i / 400, i % 64)
+        sc.control(30.0, in_flight=200, queued=40, cache_slots=64,
+                   n_instances=4, n_replicas=1, mean_active_rank=rank)
+        return sc.history[-1]
+
+    h_pad, h_low = run(None), run(4.0)
+    assert h_pad["mean_active_rank"] is None
+    assert h_low["mean_active_rank"] == 4.0
+    assert h_low["targets"]["replicas"] < h_pad["targets"]["replicas"]
+
+
 # ------------------- sim plane: load shift end to end --------------------- #
 def _shift_system(autoscale):
     """The SAME scenario CI's provisioning lane measures — imported from

@@ -185,6 +185,184 @@ def test_build_segments_all_padding_marks_empty_adapters():
     assert np.all(np.asarray(scatter) == 3 * 4)
 
 
+# --------------------------- rank-aware kernels --------------------------- #
+# The mixed-rank invariant: pools prefix-zero every lane >= the adapter's
+# true rank, so bounding the compute at the true rank trims only exact-zero
+# work — every rank-aware variant must be BIT-identical to its padded twin
+# (assert_array_equal, not allclose).
+
+def _mixed_rank_pool(key, N, d_in, r, d_out, ranks):
+    A = np.asarray(jax.random.normal(jax.random.fold_in(key, 1),
+                                     (N, d_in, r))) * 0.05
+    B = np.asarray(jax.random.normal(jax.random.fold_in(key, 2),
+                                     (N, r, d_out))) * 0.05
+    for i, ra in enumerate(ranks):
+        A[i, :, ra:] = 0.0
+        B[i, ra:, :] = 0.0
+    return jnp.asarray(A), jnp.asarray(B)
+
+
+def test_bgmv_ranked_bitwise_vs_padded():
+    """bgmv_ranked masks the accumulator at each row's TRUE rank; on a
+    prefix-zeroed pool that is bit-identical to padded bgmv and to
+    bgmv_ranked_ref (incl. masked rows, ids < 0)."""
+    T, d, r, N = 24, 128, 32, 5
+    ranks = np.asarray([4, 8, 16, 32, 8], np.int32)
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (T, d))
+    A, B = _mixed_rank_pool(key, N, d, r, 64, ranks)
+    ids = jax.random.randint(jax.random.fold_in(key, 3), (T,), -1, N)
+    got = ops.bgmv_ranked(x, A, B, ids, jnp.asarray(ranks))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ops.bgmv(x, A, B, ids)))
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(ref.bgmv_ranked_ref(x, A, B, ids, jnp.asarray(ranks))))
+
+
+def test_sgmv_ranked_bitwise_vs_padded():
+    """sgmv_ranked over build_segments_ranked output == padded sgmv over
+    the same (rank-sorted) segments, bitwise, and == sgmv_ranked_ref."""
+    T, d, r, d_out, N, cap = 37, 128, 32, 64, 6, 8
+    ranks = np.asarray([4, 8, 16, 32, 8, 4], np.int32)
+    key = jax.random.PRNGKey(12)
+    x = jax.random.normal(key, (T, d))
+    A, B = _mixed_rank_pool(key, N, d, r, d_out, ranks)
+    row_ad = jax.random.randint(jax.random.fold_in(key, 3), (T,), 0, N)
+    segs, seg_ad, seg_rank, _ = ops.build_segments_ranked(
+        x, row_ad, N, cap, ranks)
+    got = ops.sgmv_ranked(segs, seg_ad, seg_rank, A, B)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ops.sgmv(segs, seg_ad, A, B)))
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(ref.sgmv_ranked_ref(segs, seg_ad, seg_rank, A, B)))
+
+
+def test_sgmv_rank_grouped_bitwise_vs_padded():
+    """The rank-bucketed dispatch (one launch per distinct rank, A/B sliced
+    to the bucket rank) changes the work, never the math: bitwise equal to
+    padded sgmv and to sgmv_rank_grouped_ref."""
+    T, d, r, d_out, N, cap = 53, 128, 64, 64, 6, 8
+    ranks = np.asarray([4, 8, 16, 64, 8, 4], np.int32)
+    key = jax.random.PRNGKey(13)
+    x = jax.random.normal(key, (T, d))
+    A, B = _mixed_rank_pool(key, N, d, r, d_out, ranks)
+    row_ad = jax.random.randint(jax.random.fold_in(key, 3), (T,), 0, N)
+    segs, seg_ad, seg_rank, _ = ops.build_segments_ranked(
+        x, row_ad, N, cap, ranks)
+    got = ops.sgmv_rank_grouped(segs, seg_ad, seg_rank, A, B)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ops.sgmv(segs, seg_ad, A, B)))
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(ref.sgmv_rank_grouped_ref(segs, seg_ad, seg_rank, A, B)))
+
+
+def test_fused_sgmv_ranked_bitwise_vs_padded():
+    """fused_sgmv_ranked (per-segment rank masks the VMEM intermediate)
+    == padded fused_sgmv bitwise on a prefix-zeroed (slot, expert) pool,
+    and == fused_sgmv_ranked_ref; padding segments stay exact zeros."""
+    S, cap, d, r, d_out, M, E = 5, 8, 128, 32, 64, 3, 2
+    ranks = np.asarray([4, 16, 8], np.int32)
+    key = jax.random.PRNGKey(14)
+    x = jax.random.normal(key, (S, cap, d))
+    A = np.asarray(jax.random.normal(jax.random.fold_in(key, 1),
+                                     (M, E, d, r))) * 0.05
+    B = np.asarray(jax.random.normal(jax.random.fold_in(key, 2),
+                                     (M, E, r, d_out))) * 0.05
+    for m, ra in enumerate(ranks):
+        A[m, :, :, ra:] = 0.0
+        B[m, :, ra:, :] = 0.0
+    A, B = jnp.asarray(A), jnp.asarray(B)
+    slots = jnp.asarray([0, -1, 2, 1, 0], jnp.int32)
+    eids = jnp.asarray([0, 0, 1, 1, 0], jnp.int32)
+    seg_rank = jnp.where(slots >= 0,
+                         jnp.asarray(ranks)[jnp.maximum(slots, 0)], 0)
+    got = ops.fused_sgmv_ranked(x, slots, eids, seg_rank, A, B)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ops.fused_sgmv(x, slots, eids, A, B)))
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(ref.fused_sgmv_ranked_ref(x, slots, eids, seg_rank,
+                                             A, B)))
+    assert np.all(np.asarray(got)[1] == 0.0)
+
+
+def test_build_segments_ranked_bucket_partition_and_roundtrip():
+    """build_segments_ranked: active segments form a contiguous prefix in
+    ascending-rank order (each rank bucket is one contiguous slice),
+    seg_rank carries the adapter's true rank, and the remapped scatter
+    still round-trips every kept row to its input row."""
+    T, d, N, cap = 41, 16, 7, 8
+    ranks = np.asarray([8, 4, 16, 4, 32, 8, 4], np.int32)
+    key = jax.random.PRNGKey(5)
+    rows = jax.random.normal(key, (T, d))
+    row_ad = jax.random.randint(jax.random.fold_in(key, 1), (T,), -1, N)
+    segs, seg_ad, seg_rank, scatter = ops.build_segments_ranked(
+        rows, row_ad, N, cap, ranks)
+    seg_ad_np, seg_rank_np = np.asarray(seg_ad), np.asarray(seg_rank)
+    active = seg_ad_np >= 0
+    assert np.all(np.nonzero(active)[0] == np.arange(active.sum()))
+    assert np.all(np.diff(seg_rank_np[active]) >= 0)
+    np.testing.assert_array_equal(seg_rank_np[active],
+                                  ranks[seg_ad_np[active]])
+    assert np.all(seg_rank_np[~active] == 0)
+    slot = np.asarray(scatter)
+    kept = slot < N * cap
+    assert np.all(~kept[np.asarray(row_ad) < 0])
+    segs_np = np.asarray(segs).reshape(-1, d)
+    for i in np.nonzero(kept)[0]:
+        assert seg_ad_np[slot[i] // cap] == int(np.asarray(row_ad)[i])
+        np.testing.assert_allclose(segs_np[slot[i]], np.asarray(rows)[i],
+                                   atol=1e-6)
+
+
+def test_build_segments_ranked_padding_rows_do_not_shift_adapter0():
+    """The adapter-0 padding regression (padding rows miscounted into
+    adapter 0's bincount) must stay fixed through the rank permutation."""
+    T, d, N, cap = 10, 8, 3, 4
+    key = jax.random.PRNGKey(0)
+    rows = jax.random.normal(key, (T, d))
+    row_ad = jnp.asarray([-1, -1, -1, 0, 0, 0, 0, 1, 2, 2])
+    ranks = np.asarray([16, 4, 8], np.int32)   # adapter 0 sorts LAST
+    segs, seg_ad, _, scatter = ops.build_segments_ranked(
+        rows, row_ad, N, cap, ranks)
+    slot = np.asarray(scatter)
+    kept = slot < N * cap
+    assert kept.sum() == 7                     # no adapter-0 row dropped
+    assert np.all(~kept[np.asarray(row_ad) < 0])
+    segs_np = np.asarray(segs).reshape(-1, d)
+    for i in np.nonzero(kept)[0]:
+        assert int(np.asarray(seg_ad)[slot[i] // cap]) == int(row_ad[i])
+        np.testing.assert_allclose(segs_np[slot[i]], np.asarray(rows)[i],
+                                   atol=1e-6)
+    # adapter-0 rows fill positions 0..3 of ONE segment, wherever rank
+    # sorting moved it
+    mask0 = np.asarray(row_ad) == 0
+    assert sorted(slot[mask0] % cap) == [0, 1, 2, 3]
+    assert len(set(slot[mask0] // cap)) == 1
+
+
+def test_ranked_ref_path_dispatch(monkeypatch):
+    """Rank-aware ops fall back to their _ref twins when kernels are off."""
+    monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+    T, d, r, N, cap = 12, 64, 16, 3, 4
+    ranks = np.asarray([4, 16, 8], np.int32)
+    key = jax.random.PRNGKey(6)
+    x = jax.random.normal(key, (T, d))
+    A, B = _mixed_rank_pool(key, N, d, r, 32, ranks)
+    ids = jax.random.randint(jax.random.fold_in(key, 3), (T,), -1, N)
+    np.testing.assert_array_equal(
+        np.asarray(ops.bgmv_ranked(x, A, B, ids, jnp.asarray(ranks))),
+        np.asarray(ref.bgmv_ranked_ref(x, A, B, ids, jnp.asarray(ranks))))
+    segs, seg_ad, seg_rank, _ = ops.build_segments_ranked(
+        x, jnp.maximum(ids, 0), N, cap, ranks)
+    np.testing.assert_array_equal(
+        np.asarray(ops.sgmv_rank_grouped(segs, seg_ad, seg_rank, A, B)),
+        np.asarray(ref.sgmv_rank_grouped_ref(segs, seg_ad, seg_rank, A, B)))
+
+
 # --------------------------- paged attention ----------------------------- #
 PAGED_SHAPES = [  # (B, KV, G, hd, P, page_size, nb)
     (4, 2, 3, 16, 10, 4, 5),

@@ -227,6 +227,33 @@ def test_sc004_public_wrapper_requires_ref_twin(tmp_path):
     assert rep.ok, rep.findings
 
 
+def test_sc004_dispatcher_ref_reference_must_resolve(tmp_path):
+    """Dispatchers reference their oracles as ``_ref.<name>_ref`` without
+    issuing a pallas_call; a rename/typo there only fails on the
+    kernels-disabled fallback path, so the mention must statically resolve
+    to a sibling ref.py export."""
+    ops = """
+        from kernels import ref as _ref
+
+        def dispatch(x):
+            return _ref.missing_ref(x)
+    """
+    twin = "def present_ref(x):\n    return x\n"
+    rep = check(tmp_path, {"kernels/ops.py": ops,
+                           "kernels/ref.py": twin}, {"SC004"})
+    assert rule_ids(rep) == ["SC004"]
+    assert "missing_ref" in rep.findings[0].message
+
+    rep = check(tmp_path, {
+        "kernels/ops.py": ops.replace("missing_ref", "present_ref"),
+        "kernels/ref.py": twin,
+    }, {"SC004"})
+    assert rep.ok, rep.findings
+    # no sibling ref.py at all (a non-kernels package): out of scope
+    rep = check(tmp_path, {"util/helpers.py": ops}, {"SC004"})
+    assert rep.ok, rep.findings
+
+
 # ------------------------------ SC005 ---------------------------------- #
 DONATE_READ_AFTER = """
     from repro.transport.base import kv_donating_jit

@@ -109,14 +109,14 @@ SPECS = [(0, 0.0, 5, 6), (1, 0.0, 4, 4), (2, 2.0, 6, 5), (3, 5.0, 3, 4)]
 
 
 def _serve(setup, transport, *, paged=False, replicas=1, cache_slots=4,
-           autoscale=None):
+           autoscale=None, rank_aware=True):
     from repro.serving.api import ServeConfig, build_system
     cfg, params, pool = setup
     sc = ServeConfig(backend="cluster", disaggregated=True, n_instances=1,
                      max_batch=2, max_len=32, adapter_cache_slots=cache_slots,
                      transport=transport, server_replicas=replicas,
                      paged=paged, page_size=4, n_pages=8, prefill_chunk=8,
-                     autoscale=autoscale)
+                     autoscale=autoscale, rank_aware=rank_aware)
     system = build_system(sc, cfg, params=params, pool=pool)
     handles = [system.submit(adapter_id=a, arrival=t, prompt_len=p,
                              max_new_tokens=o) for a, t, p, o in SPECS]
@@ -266,6 +266,46 @@ def test_fused_transport_rejects_analytic_replicas():
     tr = FusedTransport(sp, n_adapters=4)
     with pytest.raises(ValueError, match="analytic"):
         tr.refresh()
+
+
+# ---------------------- rank-aware compute bit-identity ------------------- #
+@pytest.mark.parametrize("transport", ["host", "fused"])
+@pytest.mark.parametrize("paged,replicas",
+                         [(False, 1), (True, 1), (False, 2), (True, 2)],
+                         ids=["dense_1rep", "paged_1rep", "dense_2rep",
+                              "paged_2rep"])
+def test_rank_aware_off_tokens_bit_identical(cluster_setup, host_tokens,
+                                             transport, paged, replicas):
+    """Tentpole pin: bounding every hook at the slot's TRUE rank (the
+    mixed-rank pool here is [2, 8, 4, 8], pool rank 8) must be
+    bit-identical to padded compute. rank_aware=True is the default every
+    other test in this module runs under, so pinning the rank_aware=False
+    stream to the same tokens — with a 2-slot cache forcing eviction churn
+    and slot reuse, on both planes, both KV layouts, 1 and 2 replicas —
+    proves on == off across the whole matrix."""
+    tokens, system = _serve(cluster_setup, transport, paged=paged,
+                            replicas=replicas, cache_slots=2,
+                            rank_aware=False)
+    assert tokens == host_tokens
+    st = system.transport_stats()
+    # padded pricing: every active row bills the pool rank, zero savings
+    assert st["mean_active_rank"] == st["max_active_rank"] == 8
+    assert st["rank_flop_savings"] == 0.0
+
+
+def test_rank_telemetry_prices_true_rank(cluster_setup):
+    """On the mixed-rank pool [2, 8, 4, 8] (pool rank 8) the per-step
+    ledger bills active rows at their true slot rank: mean strictly below
+    the pool rank, max = the largest active rank, savings = 1 - mean/pool
+    — on BOTH transports."""
+    for transport in ("host", "fused"):
+        _, system = _serve(cluster_setup, transport)
+        st = system.transport_stats()
+        assert 2 <= st["mean_active_rank"] < 8    # pool rank is 8
+        assert st["max_active_rank"] == 8
+        assert st["rank_flop_savings"] > 0
+        assert abs(st["rank_flop_savings"]
+                   - (1 - st["mean_active_rank"] / 8)) < 1e-3
 
 
 # -------------------- device view numerics (unit level) ------------------ #
