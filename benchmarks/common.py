@@ -2,6 +2,11 @@
 from __future__ import annotations
 
 import copy
+import datetime
+import os
+import platform
+import subprocess
+import sys
 
 from repro.configs import get_config
 from repro.serving import metrics, simulator as S, workload
@@ -10,6 +15,34 @@ from repro.serving import metrics, simulator as S, workload
 # Every emit() row also lands here so benchmarks/run.py can dump a JSON
 # artifact (the CI smoke-bench perf trajectory).
 RESULTS: list = []
+
+
+def provenance() -> dict:
+    """Run metadata stamped into every BENCH_*.json artifact so a stored
+    number can always be traced back to the commit/toolchain that produced
+    it. Every field degrades to ``None`` rather than failing the bench."""
+    def _git(*args):
+        try:
+            out = subprocess.run(
+                ["git", *args], capture_output=True, text=True, timeout=10,
+                cwd=os.path.dirname(os.path.abspath(__file__)))
+            return out.stdout.strip() if out.returncode == 0 else None
+        except OSError:
+            return None
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = None
+    return {
+        "git_sha": _git("rev-parse", "HEAD"),
+        "git_dirty": bool(_git("status", "--porcelain") or ""),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+        "jax": jax_version,
+    }
 
 
 def emit(name: str, value, derived: str = ""):

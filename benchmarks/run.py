@@ -19,9 +19,10 @@ sys.path.insert(0, _ROOT)
 from benchmarks import (bench_ablation, bench_adapter_memory,  # noqa: E402
                         bench_adapters, bench_autoscaler, bench_batch_sweep,
                         bench_cache_ratio, bench_e2e_serving, bench_kernels,
-                        bench_parallelism, bench_provisioning,
-                        bench_roofline, bench_scale_instances,
-                        bench_scale_server, bench_transport, common)
+                        bench_observability, bench_parallelism,
+                        bench_provisioning, bench_roofline,
+                        bench_scale_instances, bench_scale_server,
+                        bench_transport, common)
 
 ALL = [
     ("fig1a_adapter_memory", bench_adapter_memory.main),
@@ -38,6 +39,7 @@ ALL = [
     ("transport_planes", bench_transport.main),
     ("roofline_table", bench_roofline.main),
     ("adapter_store_prefetch", bench_adapters.main),
+    ("observability_overhead", bench_observability.main),
 ]
 
 # CI smoke set: analytic tables (instant) + the real slot-engine cluster on
@@ -91,6 +93,15 @@ KERNELS = [
     ("fig19_kernels", bench_kernels.main),
 ]
 
+# CI observability lane: tracing overhead on the real smoke cluster
+# (NullTracer vs TimelineTracer per-step wall time, <5% acceptance, token
+# bit-identity) plus the traced faithfulness run (Perfetto export with
+# >=95% TTFT span coverage) — writes BENCH_observability.json and the
+# trace_observability.json Perfetto artifact.
+OBSERVABILITY = [
+    ("observability_overhead", bench_observability.main),
+]
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -114,6 +125,9 @@ def main(argv=None) -> None:
     lane.add_argument("--kernels", action="store_true",
                       help="Fig-19 kernel lane incl. rank-aware interpret "
                            "checks, writes BENCH_kernels.json")
+    lane.add_argument("--observability", action="store_true",
+                      help="tracing overhead + Perfetto faithfulness lane, "
+                           "writes BENCH_observability.json")
     ap.add_argument("--out", default=None,
                     help="write captured rows as JSON (default "
                          "BENCH_smoke.json in --smoke mode)")
@@ -124,7 +138,8 @@ def main(argv=None) -> None:
         TRANSPORT if args.transport else \
         PARALLELISM if args.parallelism else \
         ADAPTERS if args.adapters else \
-        KERNELS if args.kernels else ALL
+        KERNELS if args.kernels else \
+        OBSERVABILITY if args.observability else ALL
     timings = {}
     for name, fn in suite:
         if args.only and args.only not in name:
@@ -140,11 +155,13 @@ def main(argv=None) -> None:
                             else "BENCH_transport.json" if args.transport
                             else "BENCH_parallelism.json" if args.parallelism
                             else "BENCH_adapters.json" if args.adapters
-                            else "BENCH_kernels.json"
-                            if args.kernels else None)
+                            else "BENCH_kernels.json" if args.kernels
+                            else "BENCH_observability.json"
+                            if args.observability else None)
     if out_path:
         with open(out_path, "w") as f:
-            json.dump({"results": common.RESULTS, "timings": timings}, f,
+            json.dump({"results": common.RESULTS, "timings": timings,
+                       "provenance": common.provenance()}, f,
                       indent=1)
         print(f"# wrote {len(common.RESULTS)} rows -> {out_path}",
               flush=True)

@@ -21,7 +21,6 @@ import argparse
 import json
 import pathlib
 import sys
-import time
 import traceback
 
 import jax
@@ -32,6 +31,7 @@ from repro.configs import ASSIGNED, SHAPES, applicable, get_config, get_shape
 from repro.distributed import steps as steps_mod
 from repro.launch.mesh import (carve_server_submesh, instance_submesh,
                                make_production_mesh)
+from repro.obs.clock import wall_time
 
 OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
@@ -49,7 +49,7 @@ def compile_cell(arch: str, shape_name: str, mesh_name: str,
         return {"status": "SKIP", "reason": reason}
     mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
     chips = mesh.devices.size
-    t0 = time.time()
+    t0 = wall_time()
     if shape.kind == "train":
         jitted, abstract, rules = steps_mod.jit_train_step(
             cfg, shape, mesh, overrides=overrides)
@@ -60,9 +60,9 @@ def compile_cell(arch: str, shape_name: str, mesh_name: str,
         jitted, abstract, rules = steps_mod.jit_serve_step(
             cfg, shape, mesh, kv_quant=kv_quant, overrides=overrides)
     lowered = jitted.lower(*abstract)
-    t_lower = time.time() - t0
+    t_lower = wall_time() - t0
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = wall_time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

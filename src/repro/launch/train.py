@@ -12,7 +12,6 @@ exact resume (deterministic data) — kill it mid-run and relaunch to test.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +25,7 @@ from repro.training.train_step import make_lora_train_step
 from repro.core.adapter import init_adapter_pool
 from repro.distributed.steps import lm_loss
 from repro.models import transformer
+from repro.obs.clock import wall_time
 
 
 def main(argv=None):
@@ -95,7 +95,7 @@ def main(argv=None):
             start = last
             print(f"resumed from step {start}", flush=True)
 
-    t0 = time.time()
+    t0 = wall_time()
     for s in range(start, args.steps):
         toks, labels = data_mod.batch_at(dcfg, s)
         loss, params, opt_state = step_fn(
@@ -104,7 +104,7 @@ def main(argv=None):
         if mgr:
             mgr.maybe_save(s + 1, {"p": params, "o": opt_state})
         if s % args.log_every == 0 or s == args.steps - 1:
-            dt = (time.time() - t0) / max(s - start + 1, 1)
+            dt = (wall_time() - t0) / max(s - start + 1, 1)
             print(f"step {s:5d} loss {float(loss):.4f} ({dt*1e3:.0f} ms/step)",
                   flush=True)
     if mgr:

@@ -1,0 +1,16 @@
+"""The blessed wall-clock accessor.
+
+Staticcheck rule SC007 bans raw ``time.time()`` / ``time.perf_counter()``
+instrumentation outside ``obs/`` and ``benchmarks/`` so that every
+wall-clock measurement in the runtime flows through one seam — a single
+place to virtualize (tests), rate-limit, or swap for a monotonic source.
+``time.monotonic`` (deadline arithmetic, e.g. the store's prefetch
+waits) is deliberately NOT covered: it is scheduling, not telemetry.
+"""
+import time
+
+
+def wall_time() -> float:
+    """Monotonic wall-clock seconds (``time.perf_counter``). Use the
+    difference of two calls as a duration; the epoch is arbitrary."""
+    return time.perf_counter()

@@ -49,6 +49,8 @@ from typing import Callable, Dict, Iterator, List, Optional, Protocol, \
 
 from repro.configs.base import ModelConfig
 from repro.core.cost_model import Hardware, V5E
+from repro.obs.hub import Observability, ObservabilityHub
+from repro.obs.trace import NULL_TRACER, TimelineTracer
 from repro.serving import metrics
 from repro.serving.autoscaler import Autoscaler, AutoscalePolicy, ScaleAction
 from repro.serving.cluster import Cluster, ClusterConfig
@@ -66,7 +68,7 @@ __all__ = [
     "SLOClass", "INTERACTIVE", "BATCH", "TERMINAL_STATES",
     "build_system", "Request", "Summary",
     "AutoscalePolicy", "Autoscaler", "ScaleAction", "ServerPool",
-    "TransportStats", "AdapterStore",
+    "TransportStats", "AdapterStore", "Observability",
 ]
 
 
@@ -200,6 +202,13 @@ class ServeConfig:
     # pool/store instead).
     rank_aware: bool = True
     adapter_ranks: Optional[Tuple[int, ...]] = None
+    # observability (repro.obs): True records per-request spans (queued/
+    # prefill/decode + adapter-load, KV-alloc, store-prefetch and
+    # decode-step children) on a TimelineTracer and feeds the metrics
+    # registry — export via ServeSystem.observability(). False (default)
+    # wires the zero-cost NullTracer: bitwise-identical tokens either
+    # way, pinned by test.
+    trace: bool = False
 
     def __post_init__(self):
         # a typo'd plane must fail HERE, not silently price as "host" on
@@ -375,8 +384,8 @@ class SimBackend:
     Token events carry ``token=None``: this plane models *time* (TTFT,
     TPOT, SLO attainment at cluster scale), not token ids."""
 
-    def __init__(self, model: ModelConfig, cfg: ServeConfig):
-        self.sim = Simulation(model, cfg.sim_config())
+    def __init__(self, model: ModelConfig, cfg: ServeConfig, tracer=None):
+        self.sim = Simulation(model, cfg.sim_config(), tracer=tracer)
         self._duration = cfg.duration
 
     def submit(self, req: Request) -> None:
@@ -434,9 +443,10 @@ class ClusterBackend:
     actual decode steps, real token ids, paged or dense KV."""
 
     def __init__(self, model: ModelConfig, params, cfg: ServeConfig, pool,
-                 server=None, server_pool=None):
+                 server=None, server_pool=None, tracer=None):
         self.cluster = Cluster(model, params, cfg.cluster_config(), pool,
-                               server_pool=server_pool, server=server)
+                               server_pool=server_pool, server=server,
+                               tracer=tracer)
         self.cluster.open()
         self.max_rounds = cfg.max_rounds
         self.step_time = cfg.step_time
@@ -640,8 +650,16 @@ class ServeSystem:
                  pool=None, server=None, server_pool=None):
         self.cfg = cfg
         self.model = model
+        # observability plane: one tracer threads through the backend
+        # (cluster/sim, caches, engines) and one hub folds the lifecycle
+        # event stream into request-stage spans + the metrics registry.
+        # trace=False wires the zero-cost NULL_TRACER and the hub is
+        # never driven.
+        self.tracer = TimelineTracer() if cfg.trace else NULL_TRACER
+        self._hub = ObservabilityHub(self.tracer)
         if cfg.backend == "sim":
-            self.backend: Backend = SimBackend(model, cfg)
+            self.backend: Backend = SimBackend(model, cfg,
+                                               tracer=self.tracer)
         elif cfg.backend == "cluster":
             if params is None or pool is None:
                 raise ValueError(
@@ -652,11 +670,15 @@ class ServeSystem:
                 server_pool = self._make_server_pool(model, cfg, pool)
             self.backend = ClusterBackend(model, params, cfg, pool,
                                           server=server,
-                                          server_pool=server_pool)
+                                          server_pool=server_pool,
+                                          tracer=self.tracer)
         else:
             raise ValueError(f"unknown backend {cfg.backend!r} "
                              f"(expected 'sim' or 'cluster')")
         self.handles: Dict[int, RequestHandle] = {}
+        # DEPRECATED shim: scale:* events also land here, as before.
+        # They are now first-class trace events (instants on the
+        # "control" track) — prefer observability().tracer / registry.
         self.scale_events: List[Event] = []
         self._rid = itertools.count()
 
@@ -733,10 +755,16 @@ class ServeSystem:
 
     # ---------------------------- pumping ----------------------------- #
     def step(self) -> List[Event]:
-        """Advance the backend one quantum; route events to handles
-        (scaling events, rid=-1, accumulate on ``scale_events``)."""
+        """Advance the backend one quantum; route events to handles.
+        With tracing on, every event also feeds the observability hub
+        (request-stage spans + metrics). Scaling events (rid=-1) become
+        trace instants AND still accumulate on the deprecated
+        ``scale_events`` shim."""
         evs = self.backend.step()
+        traced = self.tracer.enabled
         for ev in evs:
+            if traced:
+                self._hub.on_event(ev)
             if ev.kind.startswith("scale"):
                 self.scale_events.append(ev)
                 continue
@@ -824,12 +852,24 @@ class ServeSystem:
                     if h.slo_class.name == slo_class.name}
             reqs = [r for r in reqs if r.rid in keep]
         sc = slo_class or INTERACTIVE
-        return metrics.summarize(
+        s = metrics.summarize(
             reqs, duration if duration is not None
             else self.backend.default_duration(),
             ttft_slo=sc.ttft_slo, tpot_slo=sc.tpot_slo, warmup=warmup,
             cache_stats=self.backend.cache_stats(),
             transport_stats=self.backend.transport_stats())
+        if self.tracer.enabled:
+            # Summary is rebuilt on top of the registry view: every
+            # numeric field mirrors into a summary_<field> gauge
+            self._hub.publish_summary(s)
+        return s
+
+    def observability(self) -> Observability:
+        """The observability facade: tracer + metrics registry + the
+        Perfetto/Prometheus/JSONL exporters. Always available — with
+        ``trace=False`` the tracer is the NullTracer and only the
+        pull-refreshed registry carries data."""
+        return Observability(self._hub, self.backend)
 
 
 def build_system(cfg: ServeConfig, model: ModelConfig, *, params=None,

@@ -19,6 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional
 
+from repro.obs.trace import NULL_TRACER, Tracer
+
 
 @dataclasses.dataclass
 class ResidentAdapter:
@@ -36,8 +38,12 @@ class LoRACache:
                  host_bw: float = 50e9, layerwise: bool = True,
                  prefetch: bool = True,
                  load_seconds_fn: Optional[Callable[[int, float],
-                                           float]] = None):
+                                           float]] = None,
+                 tracer: Optional[Tracer] = None):
         self.capacity = capacity
+        # adapter-staging spans land on the owning plane's tracer; the
+        # timestamps are whatever virtual clock the caller passes as `now`
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.adapter_bytes = adapter_bytes
         self.n_layers = max(n_layers, 1)
         self.host_bw = host_bw
@@ -177,6 +183,12 @@ class LoRACache:
             t_full = self.adapter_bytes / self.host_bw
         self.miss_load_seconds += t_full
         t_first = t_full / self.n_layers if self.layerwise else t_full
+        if self.tracer.enabled:
+            # the staging interval [admit, full residency]; first_ready
+            # rides along so TTFT attribution can see the pipelined edge
+            self.tracer.span("adapter", f"adapter.load a{adapter_id}",
+                             now, now + t_full, adapter_id=adapter_id,
+                             first_ready=now + t_first)
         r = ResidentAdapter(adapter_id, now, now + t_first, now + t_full, now)
         self.resident[adapter_id] = r
         self.dirty.add(adapter_id)

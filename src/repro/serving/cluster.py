@@ -46,6 +46,8 @@ from repro.configs.base import ModelConfig
 from repro.core.adapter import AdapterPool
 from repro.core.lora_server import LoRAServer
 from repro.models.cache import pages_for
+from repro.obs.clock import wall_time
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.autoscaler import Autoscaler, AutoscalePolicy, \
     ScaleAction, converge_replicas, pick_drain_candidate
 from repro.serving.cache import LoRACache
@@ -124,7 +126,11 @@ class Cluster:
     def __init__(self, cfg: ModelConfig, params, ccfg: ClusterConfig,
                  pool: AdapterPool,
                  server_pool: Optional[ServerPool] = None,
-                 server: Optional[LoRAServer] = None):
+                 server: Optional[LoRAServer] = None,
+                 tracer: Optional[Tracer] = None):
+        # span tracer (repro.obs): virtual round-clock timestamps, wall
+        # clock only as span attributes. NULL_TRACER = record nothing.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.mesh_ctx = None
         if ccfg.mesh_shape is not None:
             if not ccfg.disaggregated:
@@ -376,7 +382,8 @@ class Cluster:
                          layerwise=self.ccfg.layerwise_loading,
                          prefetch=self.ccfg.prefetch_on,
                          load_seconds_fn=self.store.load_seconds
-                         if self.store is not None else None)
+                         if self.store is not None else None,
+                         tracer=self.tracer)
 
     @property
     def now(self) -> float:
@@ -567,6 +574,10 @@ class Cluster:
                     # cache's prefetch_hint (inside enqueue) starts the
                     # virtual-time load clock in parallel
                     self.store.prefetch(r.adapter_id)
+                    if self.tracer.enabled:
+                        self.tracer.instant(
+                            "store", f"prefetch a{r.adapter_id}", now,
+                            rid=r.rid, adapter_id=r.adapter_id)
                 if self._scaler is not None:
                     self._scaler.observe_arrival(now, r.adapter_id)
                 enqueued.append(r)
@@ -580,6 +591,11 @@ class Cluster:
             for r in admitted:
                 self.engines[iid].add_request(r.rid, self._prompt(r),
                                               r.adapter_id)
+                if self.tracer.enabled and self.ccfg.paged:
+                    self.tracer.instant(
+                        "kv", f"kv.alloc r{r.rid}", now, rid=r.rid,
+                        iid=iid,
+                        pages=self._need_by_rid.get(r.rid))
             admitted_all.extend(admitted)
         # one decode step per busy instance; requests admitted above are
         # already in the running batch (continuous batching)
@@ -592,9 +608,19 @@ class Cluster:
             if not eng.active_rids():
                 continue
             busy = True
+            traced = self.tracer.enabled
+            if traced:
+                batch = len(eng.active_rids())
+                w0 = wall_time()
             for rid, tok in eng.step().items():
                 self.tokens[rid].append(tok)
                 round_tokens[rid] = tok
+            if traced:
+                # span edges are the VIRTUAL round window; the measured
+                # engine wall time rides along as an attribute
+                self.tracer.span(
+                    f"inst:{iid}", "decode.step", now, step_end,
+                    batch=batch, wall_ms=(wall_time() - w0) * 1e3)
             for r in self.sched.step_complete(iid, step_end):
                 eng.evict_request(r.rid)
                 finished.append(r)
@@ -603,6 +629,9 @@ class Cluster:
                                                 r.finish - r.arrival)
         self._retire_drained()
         self.rnd += 1
+        if self.tracer.enabled:
+            self.tracer.counter("sched", "queue_depth", step_end,
+                                float(self.sched.queue_len()))
         idle = (not busy and self._pi >= len(self._pending)
                 and self.sched.queue_len() == 0)
         return {"now": now, "step_end": step_end, "enqueued": enqueued,
@@ -669,6 +698,10 @@ class Cluster:
 
     def kv_stats(self) -> Dict[int, Dict]:
         return {i: eng.kv_stats() for i, eng in self.engines.items()}
+
+    def queue_depth(self) -> int:
+        """Requests waiting for admission (0 before open())."""
+        return self.sched.queue_len() if self.sched is not None else 0
 
     def transport_stats(self) -> Dict:
         """System-level launch accounting of the disaggregated transport

@@ -31,6 +31,7 @@ from repro.configs.base import ModelConfig
 from repro.core import cost_model
 from repro.core.cost_model import Hardware, V5E
 from repro.core.placement import Placement
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.autoscaler import Autoscaler, AutoscalePolicy, \
     ScaleAction, converge_replicas, pick_drain_candidate
 from repro.serving.cache import LoRACache
@@ -186,9 +187,13 @@ class Simulation:
     consumers. ``simulate`` below is the legacy batch wrapper."""
 
     def __init__(self, cfg: ModelConfig, sim: SimConfig,
-                 server_pool: Optional[ServerPool] = None):
+                 server_pool: Optional[ServerPool] = None,
+                 tracer: Optional[Tracer] = None):
         self.cfg = cfg
         self.sim = sim
+        # span tracer (repro.obs): timestamps are this plane's virtual
+        # event-heap clock. NULL_TRACER = record nothing.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         if sim.transport not in ("host", "fused"):
             raise ValueError(f"unknown transport {sim.transport!r} "
                              f"(expected 'host' or 'fused')")
@@ -286,7 +291,8 @@ class Simulation:
                          layerwise=self.sim.layerwise_loading,
                          prefetch=self.sim.prefetch_on,
                          load_seconds_fn=self.store.load_seconds
-                         if self.store is not None else None)
+                         if self.store is not None else None,
+                         tracer=self.tracer)
 
     # -------------------------- client surface ------------------------- #
     def submit(self, req: Request) -> Request:
@@ -395,6 +401,10 @@ class Simulation:
         if self.sim.transport == "fused":
             return 1
         return 2 * self.cfg.n_layers * self.server_pool.n_replicas + 3
+
+    def queue_depth(self) -> int:
+        """Requests waiting for admission."""
+        return self.sched.queue_len()
 
     def transport_stats(self) -> Dict:
         """Modeled launch accounting, observationally matching the cluster
@@ -512,6 +522,9 @@ class Simulation:
             self._schedule_load_retry(iid, now)
             return
         self._stepping[iid] = True
+        if self.tracer.enabled:
+            self.tracer.begin(f"inst:{iid}", "decode.step", now,
+                              batch=inst.batch)
         self._push(now + self._step_seconds(inst), "step_end", iid)
 
     def _schedule_load_retry(self, iid: int, now: float):
@@ -649,6 +662,10 @@ class Simulation:
                 # hint can promote the adapter: by the time the request
                 # clears the queue, the disk leg is (partly) done
                 self.store.prefetch(payload.adapter_id, now)
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "store", f"prefetch a{payload.adapter_id}", now,
+                        rid=payload.rid, adapter_id=payload.adapter_id)
             sched.enqueue(payload, now)
             if self._scaler is not None:
                 self._scaler.observe_arrival(now, payload.adapter_id)
@@ -696,6 +713,10 @@ class Simulation:
             iid = payload
             inst = sched.instances.get(iid)
             self._stepping[iid] = False
+            if self.tracer.enabled:
+                self.tracer.end(f"inst:{iid}", "decode.step", now)
+                self.tracer.counter("sched", "queue_depth", now,
+                                    float(sched.queue_len()))
             if inst is None:                    # retired mid-event
                 return
             if not inst.alive:

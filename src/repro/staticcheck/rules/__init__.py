@@ -7,6 +7,7 @@ from repro.staticcheck.rules.sc003_recompile import RecompileHazard
 from repro.staticcheck.rules.sc004_pallas import PallasKernelDiscipline
 from repro.staticcheck.rules.sc005_donation import DonationAfterUse
 from repro.staticcheck.rules.sc006_dispatch import DispatchBudget
+from repro.staticcheck.rules.sc007_timing import RawTimingInstrumentation
 
 ALL_RULES = (
     NoCollectivesInPureMap,
@@ -15,6 +16,7 @@ ALL_RULES = (
     PallasKernelDiscipline,
     DonationAfterUse,
     DispatchBudget,
+    RawTimingInstrumentation,
 )
 
 

@@ -11,7 +11,7 @@ EXPECTED_EXPORTS = sorted([
     "SLOClass", "INTERACTIVE", "BATCH", "TERMINAL_STATES",
     "build_system", "Request", "Summary",
     "AutoscalePolicy", "Autoscaler", "ScaleAction", "ServerPool",
-    "TransportStats", "AdapterStore",
+    "TransportStats", "AdapterStore", "Observability",
 ])
 
 EXPECTED_STATES = ["QUEUED", "PREFILLING", "DECODING", "FINISHED",
@@ -48,8 +48,18 @@ def test_core_entrypoint_signatures():
                  "max_len", "adapter_cache_slots", "policy", "paged",
                  "page_size", "n_pages", "prefill_chunk", "step_time",
                  "transport", "hook_launch_us",
-                 "store_host_bytes", "store_dir", "disk_bw", "prefetch"):
+                 "store_host_bytes", "store_dir", "disk_bw", "prefetch",
+                 "trace"):
         assert knob in cfg_fields, f"ServeConfig lost knob {knob}"
+
+
+def test_observability_accessor_exported():
+    """The observability plane's front-door seam (PR 10): the trace knob,
+    the tracer attribute, and the facade accessor."""
+    assert callable(api.ServeSystem.observability)
+    for method in ("perfetto", "prometheus", "jsonl", "write_trace",
+                   "refresh"):
+        assert callable(getattr(api.Observability, method))
 
 
 def test_adapter_lifecycle_entrypoints():

@@ -28,6 +28,7 @@ def _intra_repo_links(md: pathlib.Path):
 def test_docs_exist():
     assert (ROOT / "docs" / "ARCHITECTURE.md").is_file()
     assert (ROOT / "docs" / "BENCHMARKS.md").is_file()
+    assert (ROOT / "docs" / "OBSERVABILITY.md").is_file()
 
 
 def test_intra_repo_markdown_links_resolve():

@@ -330,6 +330,55 @@ def test_sc006_device_resident_body_passes(tmp_path):
     assert rep.ok, rep.findings
 
 
+# ------------------------------ SC007 ---------------------------------- #
+def test_sc007_flags_raw_timing_outside_obs(tmp_path):
+    rep = check(tmp_path, {"serving/probe.py": """
+        import time
+        from time import perf_counter
+
+        def timed_step(eng):
+            t0 = time.time()
+            eng.step()
+            return perf_counter() - t0
+    """}, {"SC007"})
+    assert rule_ids(rep) == ["SC007", "SC007"]
+    assert "repro.obs" in rep.findings[0].message
+
+
+def test_sc007_allows_benchmarks_obs_and_monotonic(tmp_path):
+    rep = check(tmp_path, {
+        "benchmarks/bench_x.py": """
+            import time
+            T0 = time.perf_counter()
+        """,
+        "obs/clock.py": """
+            import time
+
+            def wall_time():
+                return time.perf_counter()
+        """,
+        "store/prefetch.py": """
+            import time
+
+            def deadline(budget):
+                return time.monotonic() + budget
+        """,
+    }, {"SC007"})
+    assert rep.ok, rep.findings
+
+
+def test_sc007_inline_suppression(tmp_path):
+    rep = check(tmp_path, {"serving/probe.py": """
+        import time
+
+        def stamp():
+            # epoch stamp for a filename, not instrumentation
+            return time.time()  # staticcheck: disable=SC007 (not timing)
+    """}, {"SC007"})
+    assert rep.ok
+    assert rep.suppressed_count == 1
+
+
 # -------------------------- engine mechanics ---------------------------- #
 def test_inline_suppression_same_line_and_line_above(tmp_path):
     rep = check(tmp_path, {"serve.py": """
